@@ -1,0 +1,25 @@
+"""Shared benchmark utilities: timing protocol mirrors the paper §5 —
+multiple runs, median reported, preprocessing (store build) excluded."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+__all__ = ["time_median", "csv_row"]
+
+
+def time_median(fn, *, repeats: int = 3, warmup: int = 1) -> float:
+    """Median wall-seconds of fn() over `repeats` runs after `warmup`."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def csv_row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds * 1e6:.1f},{derived}"

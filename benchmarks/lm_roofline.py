@@ -1,0 +1,50 @@
+"""LM-substrate roofline table: reads the dry-run JSONs — baselines from
+runs/dryrun/ (paper-faithful) and hillclimb variants from runs/hillclimb/
+(§Perf optimized, keyed by their --tag) — one row per cell with the three
+roofline terms, the dominant bottleneck, and MODEL_FLOPS/HLO_FLOPS."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from .common import csv_row
+
+RUNS_DIR = os.environ.get("DRYRUN_DIR", "runs/dryrun")
+OPT_DIR = os.environ.get("HILLCLIMB_DIR", "runs/hillclimb")
+
+
+def _rows_from(dirname: str, prefix: str) -> list[str]:
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        d = json.load(open(fn))
+        tag = os.path.basename(fn).rsplit("__", 1)[-1].removesuffix(".json")
+        suffix = f"/{tag}" if prefix == "lm_opt" else ""
+        name = f"{prefix}/{d['arch']}/{d['shape']}/{d['mesh']}{suffix}"
+        if d["status"] != "ok":
+            rows.append(csv_row(name, 0.0, d["status"]))
+            continue
+        r = d["roofline"]
+        bound = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        frac = r["t_compute"] / bound if bound else 0.0
+        ratio = d.get("useful_flops_ratio")
+        rows.append(csv_row(
+            name, bound,
+            f"dominant={r['dominant']};roofline_frac={frac:.3f};"
+            f"useful_flops_ratio={(ratio or 0):.3f}",
+        ))
+    return rows
+
+
+def run(scale: str = "small", repeats: int = 1) -> list[str]:
+    rows = _rows_from(RUNS_DIR, "lm")
+    if not rows:
+        rows = [csv_row("lm_roofline/missing", 0.0,
+                        f"no dry-run JSONs under {RUNS_DIR}")]
+    if os.path.isdir(OPT_DIR):
+        rows += _rows_from(OPT_DIR, "lm_opt")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

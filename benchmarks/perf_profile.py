@@ -1,0 +1,66 @@
+"""Performance profiles (paper Fig. 3, Dolan–Moré): fraction of
+(algorithm × graph) instances each scheduling mode solves within factor
+τ of the per-instance best."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import build_block_store
+from repro.core.engine import Engine
+from repro.algorithms import (
+    afforest_algorithm, bfs_algorithm, pagerank_algorithm, sv_algorithm,
+    tc_algorithm,
+)
+from repro.algorithms.tc import orient_dag
+from repro.data import benchmark_suite
+
+from .common import csv_row, time_median
+
+MODES = ["sparse_only", "dense_only", "hybrid"]
+TAUS = [1.0, 1.1, 1.25, 1.5, 2.0, 4.0]
+
+
+def run(scale: str = "small", repeats: int = 3) -> list[str]:
+    graphs = benchmark_suite(scale)
+    algos = {
+        "pr": pagerank_algorithm, "sv": sv_algorithm, "cc": afforest_algorithm,
+        "bfs": lambda: bfs_algorithm(0), "tc": tc_algorithm,
+    }
+    times: dict[str, dict[str, float]] = {m: {} for m in MODES}
+    for gname, g in graphs.items():
+        for aname, afac in algos.items():
+            inst = f"{aname}/{gname}"
+            for mode in MODES:
+                base = orient_dag(g) if aname == "tc" else g
+                store = build_block_store(base, 4)
+                try:
+                    eng = Engine(afac(), store, mode=mode, tile_dim=512,
+                                 dense_density=0.001)
+                    times[mode][inst] = time_median(
+                        lambda: eng.run(), repeats=repeats
+                    )
+                except Exception:
+                    times[mode][inst] = float("inf")
+
+    instances = sorted(times[MODES[0]])
+    best = {
+        i: min(times[m][i] for m in MODES) for i in instances
+    }
+    rows = []
+    for mode in MODES:
+        for tau in TAUS:
+            frac = np.mean([
+                times[mode][i] <= tau * best[i] for i in instances
+            ])
+            rows.append(csv_row(
+                f"profile/{mode}/tau_{tau}", 0.0, f"fraction={frac:.3f}"
+            ))
+    # paper-style headline: in how many instances is hybrid best?
+    wins = np.mean([times["hybrid"][i] <= best[i] * 1.0001 for i in instances])
+    rows.append(csv_row("profile/hybrid_best_fraction", 0.0,
+                        f"fraction={wins:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

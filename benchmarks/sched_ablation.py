@@ -1,0 +1,68 @@
+"""Scheduling-mode ablation (paper §5.2–5.4 PGAbB vs PGAbB-GPU columns):
+sparse-only vs dense-only vs hybrid per algorithm, plus the scheduler's
+knobs (dense_frac cut-off sweep) and LPT makespan quality."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import build_block_store, build_schedule
+from repro.core.engine import Engine
+from repro.algorithms import pagerank_algorithm, tc_algorithm, bfs_algorithm
+from repro.algorithms.tc import orient_dag
+from repro.data import benchmark_suite
+
+from .common import csv_row, time_median
+
+MODES = ["sparse_only", "dense_only", "hybrid"]
+
+
+def run(scale: str = "small", repeats: int = 3) -> list[str]:
+    rows = []
+    g = benchmark_suite(scale)["kron"]
+    dag = orient_dag(g)
+
+    # mode ablation on TC (the paper's most mode-sensitive kernel)
+    for mode in MODES:
+        store = build_block_store(dag, 4)
+        eng = Engine(tc_algorithm(), store, mode=mode, tile_dim=512,
+                     dense_density=0.001)
+        t = time_median(lambda: eng.run(), repeats=repeats)
+        st = eng.schedule.stats
+        rows.append(csv_row(
+            f"sched/tc/{mode}", t,
+            f"dense_tasks={st['dense_tasks']};makespan={st['makespan_ratio']:.2f}",
+        ))
+
+    # PageRank mode ablation
+    for mode in MODES[:1] + MODES[2:]:
+        store = build_block_store(g, 4)
+        eng = Engine(pagerank_algorithm(), store, mode=mode,
+                     dense_density=0.001)
+        t = time_median(lambda: eng.run(), repeats=repeats)
+        rows.append(csv_row(f"sched/pr/{mode}", t))
+
+    # cut-off (dense_frac) sweep — the paper's GPU cut-off knob
+    for frac in (0.1, 0.3, 0.5, 0.8):
+        store = build_block_store(dag, 4)
+        eng = Engine(tc_algorithm(), store, mode="hybrid", dense_frac=frac,
+                     dense_density=0.001, tile_dim=512)
+        t = time_median(lambda: eng.run(), repeats=repeats)
+        rows.append(csv_row(
+            f"sched/tc/cutoff_{frac}", t,
+            f"dense_weight_frac={eng.schedule.stats['dense_weight_frac']:.2f}",
+        ))
+
+    # LPT packing quality across device counts (straggler headroom)
+    store = build_block_store(g, 8)
+    for d in (2, 4, 8, 16):
+        sched = build_schedule(pagerank_algorithm(), store, num_devices=d,
+                               mode="sparse_only")
+        rows.append(csv_row(
+            f"sched/lpt_devices_{d}", 0.0,
+            f"makespan_ratio={sched.makespan_ratio():.3f}",
+        ))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

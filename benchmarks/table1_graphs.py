@@ -1,0 +1,60 @@
+"""Table 1 analog: the five algorithms across the graph-class suite.
+
+The paper reports per-(algorithm × graph) speedups over GAPBS; GAPBS is
+not available here, so the table reports PGAbB-JAX hybrid absolute time
+per cell with the hybrid/sparse-only speedup as the derived column (the
+paper's PGAbB vs PGAbB-CPU-path comparison).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import build_block_store
+from repro.core.engine import Engine
+from repro.algorithms import (
+    afforest_algorithm, bfs_algorithm, pagerank_algorithm, sv_algorithm,
+    tc_algorithm,
+)
+from repro.algorithms.tc import orient_dag
+from repro.data import benchmark_suite
+
+from .common import csv_row, time_median
+
+ALGOS = {
+    "pr": pagerank_algorithm,
+    "sv": sv_algorithm,
+    "cc": afforest_algorithm,
+    "bfs": lambda: bfs_algorithm(0),
+    "tc": tc_algorithm,
+}
+
+
+def _engine_for(algo: str, g, mode: str, p: int = 4):
+    if algo == "tc":
+        store = build_block_store(orient_dag(g), p)
+    else:
+        store = build_block_store(g, p)
+    alg = ALGOS[algo]()
+    return Engine(alg, store, mode=mode, dense_density=0.001, tile_dim=512)
+
+
+def run(scale: str = "small", repeats: int = 3) -> list[str]:
+    rows = []
+    graphs = benchmark_suite(scale)
+    for gname, g in graphs.items():
+        for algo in ALGOS:
+            eng_h = _engine_for(algo, g, "hybrid")
+            t_h = time_median(lambda: eng_h.run(), repeats=repeats)
+            eng_s = _engine_for(algo, g, "sparse_only")
+            t_s = time_median(lambda: eng_s.run(), repeats=repeats)
+            rows.append(
+                csv_row(
+                    f"table1/{algo}/{gname}", t_h,
+                    f"hybrid_speedup_vs_sparse={t_s / max(t_h, 1e-12):.2f}",
+                )
+            )
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,18 @@
+"""Batched serving example: cached single-token decode loop.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch hymba-1.5b
+"""
+import argparse
+import sys
+
+sys.argv = [sys.argv[0]] + (sys.argv[1:] or ["--arch", "qwen2.5-32b"])
+from repro.launch.serve import main  # noqa: E402
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen2.5-32b")
+ap.add_argument("--tokens", type=int, default=24)
+args = ap.parse_args()
+raise SystemExit(
+    main(["--arch", args.arch, "--smoke", "--batch", "4",
+          "--tokens", str(args.tokens)])
+)

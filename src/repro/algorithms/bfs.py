@@ -1,0 +1,170 @@
+"""Direction-optimized BFS (paper §3.5, Listings 3–4) — activation mode.
+
+The paper implements top-down in K_H (CPUs are better at it) and
+bottom-up in K_D (GPUs are better at it), choosing per level.  The TPU
+adaptation keeps that split:
+
+* **top-down** (sparse path): masked scatter over the segmented COO —
+  every edge whose source is in the frontier offers itself as parent of
+  an unvisited destination (min-scatter picks a deterministic parent).
+* **bottom-up** (dense path): packed bitmap tiles — for each tile row
+  (an unvisited candidate u) find the smallest frontier neighbor via a
+  masked tile reduction (optionally the Pallas ``frontier_tile`` kernel);
+  sparse-path blocks fall back to a reversed edge scatter.
+
+`before` (I_B) implements Beamer's direction heuristic host-side from
+the frontier occupancy; `after` (I_A) stops when no vertex was added —
+both exactly the paper's iteration hooks.  Activation is realized as
+masking (see DESIGN §2): inactive edges/vertices are masked out rather
+than compacted, which is the static-shape analog of composing
+block-lists from blocks with non-empty queues.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.functors import BlockAlgorithm, Mode
+
+__all__ = ["bfs_algorithm", "bfs"]
+
+_UNVISITED = np.int32(2**31 - 1)  # parent sentinel
+
+
+def _init_factory(source: int):
+    def _init(store):
+        n = store.n
+        parent = jnp.full((n,), _UNVISITED, jnp.int32).at[source].set(source)
+        frontier = jnp.zeros((n,), bool).at[source].set(True)
+        dist = jnp.full((n,), _UNVISITED, jnp.int32).at[source].set(0)
+        return dict(
+            parent=parent,
+            frontier=frontier,
+            dist=dist,
+            nf=jnp.asarray(1, jnp.int32),
+            dir_dense=jnp.asarray(False),  # False = top-down
+        )
+
+    return _init
+
+
+def _top_down(ctx, state, edge_mask):
+    src, dst = ctx["src"], ctx["dst"]
+    parent, frontier = state["parent"], state["frontier"]
+    n = parent.shape[0]
+    unvisited = parent == _UNVISITED
+    do = edge_mask & frontier[src] & unvisited[dst]
+    tgt = jnp.where(do, dst, n)
+    cand = jnp.where(do, src, _UNVISITED)
+    ppad = jnp.concatenate([parent, jnp.asarray([_UNVISITED], jnp.int32)])
+    return ppad.at[tgt].min(cand)[:n]
+
+
+def _bottom_up_edges(ctx, state, edge_mask):
+    # reversed roles: unvisited src looks for any frontier dst neighbor
+    src, dst = ctx["src"], ctx["dst"]
+    parent, frontier = state["parent"], state["frontier"]
+    n = parent.shape[0]
+    unvisited = parent == _UNVISITED
+    do = edge_mask & unvisited[src] & frontier[dst]
+    tgt = jnp.where(do, src, n)
+    cand = jnp.where(do, dst, _UNVISITED)
+    ppad = jnp.concatenate([parent, jnp.asarray([_UNVISITED], jnp.int32)])
+    return ppad.at[tgt].min(cand)[:n]
+
+
+def _kernel_sparse(ctx, state, it):
+    msk = ctx["sparse_edge_mask"]
+    parent = jax.lax.cond(
+        state["dir_dense"],
+        lambda: _bottom_up_edges(ctx, state, msk),
+        lambda: _top_down(ctx, state, msk),
+    )
+    return dict(state, parent=parent)
+
+
+def _bottom_up_tiles(ctx, state):
+    tiles = ctx["tiles"]                   # (nd, T, T)
+    t = ctx["tile_dim"]
+    parent = state["parent"]
+    n = parent.shape[0]
+    fpad = jnp.concatenate([state["frontier"], jnp.zeros((t,), bool)])
+    fcols = jax.vmap(
+        lambda c0: jax.lax.dynamic_slice(fpad, (c0,), (t,))
+    )(ctx["tile_col_start"])               # (nd, T)
+    if ctx["use_pallas"]:
+        from ..kernels import ops
+
+        cand_local = ops.frontier_tiles(tiles, fcols)   # (nd, T) int32 col or INT_MAX
+    else:
+        colid = jnp.arange(t, dtype=jnp.int32)[None, None, :]
+        masked = jnp.where(
+            (tiles > 0) & fcols[:, None, :], colid, _UNVISITED
+        )                                   # (nd, T, T)
+        cand_local = masked.min(axis=2)     # (nd, T)
+    cand = jnp.where(
+        cand_local == _UNVISITED,
+        _UNVISITED,
+        cand_local + ctx["tile_col_start"][:, None].astype(jnp.int32),
+    )
+    rows = ctx["tile_row_start"][:, None] + jnp.arange(t)[None, :]
+    rows = jnp.minimum(rows, n)            # tile rows past n are padding
+    unvisited_pad = jnp.concatenate([parent == _UNVISITED, jnp.asarray([False])])
+    cand = jnp.where(unvisited_pad[rows], cand, _UNVISITED)
+    ppad = jnp.concatenate([parent, jnp.asarray([_UNVISITED], jnp.int32)])
+    return ppad.at[rows].min(cand)[:n]
+
+
+def _kernel_dense(ctx, state, it):
+    msk = ctx["dense_edge_mask"]
+    parent = jax.lax.cond(
+        state["dir_dense"],
+        lambda: _bottom_up_tiles(ctx, state),
+        lambda: _top_down(ctx, state, msk),
+    )
+    return dict(state, parent=parent)
+
+
+def _post(ctx, state, it):
+    # new frontier = vertices visited this level
+    newly = (state["dist"] == _UNVISITED) & (state["parent"] != _UNVISITED)
+    dist = jnp.where(newly, it + 1, state["dist"])
+    nf = jnp.sum(newly.astype(jnp.int32))
+    return dict(state, frontier=newly, dist=dist, nf=nf)
+
+
+def bfs_algorithm(source: int = 0, *, max_iters: int = 10_000,
+                  beta: int = 24) -> BlockAlgorithm:
+    def before(ctx, state, it):
+        # Beamer heuristic, host side (I_B): go bottom-up while the
+        # frontier is a large fraction of the graph
+        nf = int(jax.device_get(state["nf"]))
+        dense = nf * beta > ctx["n"]
+        return dict(state, dir_dense=jnp.asarray(dense))
+
+    def after(ctx, state, it):
+        return state, bool(jax.device_get(state["nf"]) > 0)
+
+    return BlockAlgorithm(
+        name="bfs",
+        mode=Mode.ACTIVATION,
+        kernel_sparse=_kernel_sparse,
+        kernel_dense=_kernel_dense,
+        post=_post,
+        init_state=_init_factory(source),
+        before=before,
+        after=after,
+        max_iterations=max_iters,
+        finalize=lambda store, state: dict(
+            parent=np.asarray(state["parent"]),
+            dist=np.asarray(state["dist"]),
+        ),
+        metadata=dict(combine=dict(parent="min", dist="min")),
+    )
+
+
+def bfs(store, source: int = 0, **engine_kw) -> dict:
+    from ..core.engine import Engine
+
+    return Engine(bfs_algorithm(source), store, **engine_kw).run().result

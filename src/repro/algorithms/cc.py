@@ -1,0 +1,117 @@
+"""Connected components via Afforest (paper §5.2.3, Sutton et al. [54]).
+
+GAPBS, Galois and PGAbB all implement Afforest as their "best" CC; the
+paper runs the *sampling* phase on the GPU and the *finalization* on
+CPUs.  Structure:
+
+1. **Neighbor-rounds sampling** (first ``k`` rounds): round ``r`` hooks
+   every vertex to its ``r``-th neighbor (a uniform, coalesced edge
+   subset — why the paper gives it to the GPU), followed by pointer
+   jumping.
+2. **Skip detection** (host, I_B): sample vertices, find the most common
+   component ``c_skip`` — the giant component.
+3. **Finalization**: SV-style hooking over all edges *except* those whose
+   endpoints already sit in ``c_skip`` (activation-as-masking), repeated
+   with compression until no hooks fire.
+
+All phases share the race-free min-scatter hook (see sv.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.functors import BlockAlgorithm, Mode
+
+__all__ = ["afforest_algorithm", "connected_components"]
+
+
+def _hook(C, u, v, do):
+    n = C.shape[0]
+    cu, cv = C[u], C[v]
+    r1 = jnp.maximum(cu, cv)
+    r2 = jnp.minimum(cu, cv)
+    do = do & (r1 != r2) & (C[r1] == r1)
+    tgt = jnp.where(do, r1, n)
+    Cp = jnp.concatenate([C, jnp.asarray([n], jnp.int32)])
+    Cn = Cp.at[tgt].min(r2)[:n]
+    h = jnp.sum((Cn != C).astype(jnp.int32))
+    return Cn, h
+
+
+def _compress(C):
+    return jax.lax.while_loop(
+        lambda c: jnp.any(c != c[c]), lambda c: c[c], C
+    )
+
+
+def _init(store):
+    return dict(
+        C=jnp.arange(store.n, dtype=jnp.int32),
+        H=jnp.asarray(0, jnp.int32),
+        c_skip=jnp.asarray(-1, jnp.int32),
+    )
+
+
+def _make_kernel(k_rounds: int):
+    def kernel(ctx, state, it):
+        indptr, indices, degrees = ctx["indptr"], ctx["indices"], ctx["degrees"]
+        src, dst, msk = ctx["src"], ctx["dst"], ctx["sparse_edge_mask"]
+        C = state["C"]
+        n = C.shape[0]
+
+        def sample_round(_):
+            r = it.astype(indptr.dtype)
+            u = jnp.arange(n, dtype=jnp.int32)
+            idx = jnp.minimum(indptr[:-1] + r, jnp.maximum(indices.shape[0] - 1, 0))
+            v = indices[idx]
+            do = r < degrees
+            Cn, h = _hook(C, u, v, do)
+            return dict(state, C=_compress(Cn), H=h)
+
+        def final_round(_):
+            comp = C  # compressed from the previous round
+            skip = (comp[src] == state["c_skip"]) & (comp[dst] == state["c_skip"])
+            Cn, h = _hook(C, src, dst, msk & ~skip)
+            return dict(state, C=_compress(Cn), H=h)
+
+        return jax.lax.cond(it < k_rounds, sample_round, final_round, None)
+
+    return kernel
+
+
+def afforest_algorithm(*, k_rounds: int = 2, sample_size: int = 1024,
+                       max_iters: int = 200) -> BlockAlgorithm:
+    def before(ctx, state, it):
+        if it == k_rounds:  # I_B: detect the giant component once
+            C = np.asarray(jax.device_get(state["C"]))
+            n = C.shape[0]
+            rng = np.random.default_rng(0)
+            samp = C[rng.integers(0, n, min(sample_size, n))]
+            vals, counts = np.unique(samp, return_counts=True)
+            state = dict(state, c_skip=jnp.asarray(vals[np.argmax(counts)], jnp.int32))
+        return state
+
+    def after(ctx, state, it):
+        if it < k_rounds:
+            return state, True
+        return state, bool(jax.device_get(state["H"]) > 0)
+
+    return BlockAlgorithm(
+        name="afforest",
+        mode=Mode.BULK,
+        kernel_sparse=_make_kernel(k_rounds),
+        init_state=_init,
+        before=before,
+        after=after,
+        max_iterations=max_iters,
+        finalize=lambda store, state: np.asarray(state["C"]),
+        metadata=dict(combine=dict(C="min", H="add", c_skip="max")),
+    )
+
+
+def connected_components(store, **engine_kw) -> np.ndarray:
+    from ..core.engine import Engine
+
+    return Engine(afforest_algorithm(), store, **engine_kw).run().result

@@ -1,0 +1,63 @@
+"""k-core decomposition — beyond the paper's five, but squarely in its
+taxonomy: Fig. 1 lists peeling-based algorithms (kTruss) under
+*activation-based* execution.  Peeling is iterative deactivation:
+vertices whose alive-degree drops below k leave the subgraph, which
+re-activates their neighbors' blocks.
+
+Activation-as-masking (DESIGN §2): the alive mask plays the block-queue
+role; I_A stops when an iteration peels nobody.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.functors import BlockAlgorithm, Mode
+
+__all__ = ["kcore_algorithm", "k_core"]
+
+
+def _init(store):
+    n = store.n
+    return dict(
+        alive=jnp.ones((n,), bool),
+        peeled=jnp.asarray(1, jnp.int32),
+    )
+
+
+def _make_kernel(k: int):
+    def kernel(ctx, state, it):
+        src, dst, msk = ctx["src"], ctx["dst"], ctx["sparse_edge_mask"]
+        alive = state["alive"]
+        contrib = (msk & alive[src] & alive[dst]).astype(jnp.int32)
+        deg = jnp.zeros(alive.shape[0], jnp.int32).at[dst].add(contrib)
+        new_alive = alive & (deg >= k)
+        peeled = jnp.sum((alive & ~new_alive).astype(jnp.int32))
+        return dict(alive=new_alive, peeled=peeled)
+
+    return kernel
+
+
+def kcore_algorithm(k: int, *, max_iters: int = 10_000) -> BlockAlgorithm:
+    def after(ctx, state, it):
+        return state, bool(jax.device_get(state["peeled"]) > 0)
+
+    return BlockAlgorithm(
+        name=f"kcore_{k}",
+        mode=Mode.ACTIVATION,
+        kernel_sparse=_make_kernel(k),
+        init_state=_init,
+        after=after,
+        max_iterations=max_iters,
+        finalize=lambda store, state: np.asarray(state["alive"]),
+        metadata=dict(combine=dict(alive="min", peeled="add")),
+    )
+
+
+def k_core(store, k: int, **engine_kw) -> np.ndarray:
+    """Boolean membership mask of the k-core."""
+    from ..core.engine import Engine
+
+    return Engine(kcore_algorithm(k), store, mode="sparse_only",
+                  **engine_kw).run().result

@@ -1,0 +1,103 @@
+"""Shiloach–Vishkin connected components (paper §3.4, Listing 2).
+
+Bulk-synchronous mode; iterations alternate Hook → Link exactly as the
+paper's design ("during the even iterations we do the hooking and during
+the odd iterations we do the linking").
+
+* **Hook** (even ``it``): for every edge, if the roots of the endpoints
+  differ, hook the greater root onto the smaller.  The paper's guarded
+  CAS loop becomes a race-free min-scatter: ``C.at[r1].min(r2)`` applied
+  only where ``C[r1] == r1`` (r1 is a root).  ``H`` counts changes.
+* **Link** (odd ``it``): pointer jumping ``C[u] ← C[C[u]]`` to a local
+  fixpoint (bounded ``lax.while_loop``).
+
+The paper runs hooking on the GPU and linking on CPUs, synchronizing C
+between them.  Both steps here are scatter/gather (VPU) shaped, so the
+TPU adaptation keeps them on the sparse path; the heterogeneous split
+survives as the *step* split rather than a device split (see DESIGN §2).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.functors import BlockAlgorithm, Mode
+
+__all__ = ["sv_algorithm", "shiloach_vishkin"]
+
+
+def _init(store):
+    n = store.n
+    return dict(
+        C=jnp.arange(n, dtype=jnp.int32),
+        H=jnp.asarray(0, jnp.int32),
+    )
+
+
+def _hook(ctx, state):
+    src, dst, msk = ctx["src"], ctx["dst"], ctx["sparse_edge_mask"]
+    C = state["C"]
+    n = C.shape[0]
+    cu, cv = C[src], C[dst]
+    r1 = jnp.maximum(cu, cv)
+    r2 = jnp.minimum(cu, cv)
+    is_root = C[r1] == r1
+    do = msk & (r1 != r2) & is_root
+    tgt = jnp.where(do, r1, n)            # sentinel row n = no-op
+    C_pad = jnp.concatenate([C, jnp.asarray([n], jnp.int32)])
+    C_new_pad = C_pad.at[tgt].min(r2)
+    C_new = C_new_pad[:n]
+    h = jnp.sum((C_new != C).astype(jnp.int32))
+    return dict(C=C_new, H=state["H"] + h)
+
+
+def _link(state):
+    def body(C):
+        return C[C]
+
+    def cond(C):
+        return jnp.any(C != C[C])
+
+    C = jax.lax.while_loop(cond, body, state["C"])
+    return dict(C=C, H=state["H"])
+
+
+def _kernel_sparse(ctx, state, it):
+    return jax.lax.cond(
+        it % 2 == 0,
+        lambda s: _hook(ctx, s),
+        lambda s: _link(s),
+        state,
+    )
+
+
+def sv_algorithm(*, max_iters: int = 200) -> BlockAlgorithm:
+    def before(ctx, state, it):
+        if it % 2 == 0:  # I_B: reset H before each hooking iteration
+            state = dict(state, H=jnp.asarray(0, jnp.int32))
+        return state
+
+    def after(ctx, state, it):
+        if it % 2 == 0:
+            return state, True  # always follow a hook with a link
+        # I_A after the link: continue iff the preceding hook did work
+        return state, bool(jax.device_get(state["H"]) > 0)
+
+    return BlockAlgorithm(
+        name="shiloach_vishkin",
+        mode=Mode.BULK,
+        kernel_sparse=_kernel_sparse,
+        init_state=_init,
+        before=before,
+        after=after,
+        max_iterations=max_iters,
+        finalize=lambda store, state: np.asarray(state["C"]),
+        metadata=dict(combine=dict(C="min", H="add")),
+    )
+
+
+def shiloach_vishkin(store, **engine_kw) -> np.ndarray:
+    from ..core.engine import Engine
+
+    return Engine(sv_algorithm(), store, **engine_kw).run().result

@@ -1,0 +1,6 @@
+"""Fault-tolerant checkpointing: atomic writes, integrity-checked latest
+pointer, auto-resume, elastic re-sharding."""
+from .ckpt import save_checkpoint, restore_checkpoint, latest_step, CheckpointManager
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "CheckpointManager"]

@@ -1,0 +1,162 @@
+"""Checkpoint substrate.
+
+Design goals (1000-node posture, DESIGN §7):
+
+* **Atomic**: write to ``step_K.tmp`` then ``os.replace`` — a crash
+  mid-write never corrupts the latest good checkpoint.
+* **Integrity-checked latest pointer**: ``LATEST`` names the newest step
+  and carries a sha256 of the payload; restore verifies it and falls
+  back to the previous checkpoint on mismatch (torn-write recovery).
+* **Elastic**: arrays are stored *unsharded-logical* (host numpy); on
+  restore they are ``device_put`` against whatever sharding the current
+  mesh dictates — the job can come back on a different device count.
+* **Auto-resume**: ``CheckpointManager.restore_or_init`` is the single
+  entry point the train loop calls; it returns (state, start_step).
+
+Serialization: one ``npz`` per checkpoint with flattened pytree paths
+(msgpack for the treedef/metadata).  No framework deps.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import re
+
+import jax
+import numpy as np
+
+__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
+           "CheckpointManager"]
+
+_SEP = "|"
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        a = np.asarray(jax.device_get(leaf))
+        if a.dtype.kind not in "biufc":  # ml_dtypes (bf16/fp8) → kind 'V'
+            a = a.astype(np.float32)  # restore casts back to template dtype
+        out[key] = a
+    return out
+
+
+def _unflatten_into(template, arrays: dict):
+    def rebuild(path, leaf):
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        a = arrays[key]
+        if hasattr(leaf, "dtype") and a.dtype != leaf.dtype:
+            a = a.astype(leaf.dtype)
+        return a
+
+    return jax.tree_util.tree_map_with_path(rebuild, template)
+
+
+def _payload_hash(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    arrays = _flatten(state)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    tmp = final + ".tmp.npz"
+    np.savez(tmp.removesuffix(".npz"), **arrays)
+    os.replace(tmp, final)
+    meta = dict(step=step, file=os.path.basename(final),
+                sha256=_payload_hash(final))
+    tmp_meta = os.path.join(ckpt_dir, "LATEST.tmp")
+    with open(tmp_meta, "w") as f:
+        json.dump(meta, f)
+    os.replace(tmp_meta, os.path.join(ckpt_dir, "LATEST"))
+    return final
+
+
+def _list_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for fn in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)\.npz", fn)
+        if m:
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    """Newest restorable step, preferring the verified LATEST pointer."""
+    pointer = os.path.join(ckpt_dir, "LATEST")
+    if os.path.exists(pointer):
+        try:
+            meta = json.load(open(pointer))
+            path = os.path.join(ckpt_dir, meta["file"])
+            if os.path.exists(path) and _payload_hash(path) == meta["sha256"]:
+                return int(meta["step"])
+        except (json.JSONDecodeError, KeyError, OSError):
+            pass  # torn pointer — fall back to directory scan
+    steps = _list_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore_checkpoint(ckpt_dir: str, template, step: int | None = None,
+                       shardings=None):
+    """Restore into ``template``'s pytree structure; optionally re-shard.
+
+    ``shardings``: matching pytree of NamedSharding (or None) — arrays are
+    device_put against it, which is what makes restore *elastic*.
+    """
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    z = np.load(os.path.join(ckpt_dir, f"step_{step:08d}.npz"))
+    arrays = {k: z[k] for k in z.files}
+    state = _unflatten_into(template, arrays)
+    if shardings is not None:
+        state = jax.tree.map(
+            lambda a, s: jax.device_put(a, s) if s is not None else a,
+            state, shardings,
+        )
+    return state, step
+
+
+class CheckpointManager:
+    def __init__(self, ckpt_dir: str, *, keep: int = 3, every: int = 50):
+        self.dir = ckpt_dir
+        self.keep = keep
+        self.every = every
+
+    def maybe_save(self, step: int, state) -> str | None:
+        if step % self.every != 0:
+            return None
+        path = save_checkpoint(self.dir, step, state)
+        self._gc()
+        return path
+
+    def _gc(self):
+        steps = _list_steps(self.dir)
+        for s in steps[: -self.keep]:
+            try:
+                os.remove(os.path.join(self.dir, f"step_{s:08d}.npz"))
+            except OSError:
+                pass
+
+    def restore_or_init(self, init_fn, shardings=None):
+        """Auto-resume: restore the newest verified checkpoint or init fresh."""
+        step = latest_step(self.dir)
+        if step is None:
+            return init_fn(), 0
+        template = jax.eval_shape(init_fn)
+        state, step = restore_checkpoint(self.dir, template, step, shardings)
+        return state, step + 1

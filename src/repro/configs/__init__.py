@@ -1,0 +1,7 @@
+"""Assigned-architecture configs (exact published settings) + smoke variants."""
+from .base import (
+    ArchConfig, get_config, get_smoke, list_archs, register, SHAPES, shape_for,
+)
+
+__all__ = ["ArchConfig", "get_config", "get_smoke", "list_archs", "register",
+           "SHAPES", "shape_for"]

@@ -1,0 +1,35 @@
+"""PGAbB-JAX core: blocks, block-lists, functors, scheduler, engine.
+
+This package is the paper's primary contribution rebuilt in JAX:
+the block-based programming model (graph → conformal 2-D blocks →
+block-lists → tasks), the six-functor user API, and the
+heterogeneity-aware scheduler (dense/MXU vs sparse/VPU paths, LPT
+device packing).
+"""
+from .graph import (
+    Graph,
+    from_edges,
+    read_edge_list,
+    load_binary,
+    save_binary,
+    rmat,
+    erdos_renyi,
+    grid_road,
+    star_skew,
+    degree_order,
+)
+from .partition import Layout, partition_1d, partition_symmetric_2d, make_layout
+from .blocks import BlockStore, build_block_store
+from .functors import BlockAlgorithm, Mode, default_estimate
+from .scheduler import Schedule, build_schedule, lpt_assign
+from .engine import Engine, run
+
+__all__ = [
+    "Graph", "from_edges", "read_edge_list", "load_binary", "save_binary",
+    "rmat", "erdos_renyi", "grid_road", "star_skew", "degree_order",
+    "Layout", "partition_1d", "partition_symmetric_2d", "make_layout",
+    "BlockStore", "build_block_store",
+    "BlockAlgorithm", "Mode", "default_estimate",
+    "Schedule", "build_schedule", "lpt_assign",
+    "Engine", "run",
+]

@@ -1,0 +1,199 @@
+"""Iterative execution engine (paper §4.1, Fig. 2).
+
+Execution flow reproduced from the paper:
+
+  read → partition into blocks → compose block-lists (P_C/P_G) →
+  estimate (E) & sort → [ I_B → run kernels on all tasks → I_A ]*
+
+The per-iteration body is a single jitted function.  Inside it the two
+paths run back-to-back over their own slice of the work:
+
+* the **sparse path** (K_H analog) sees the segmented COO restricted to
+  its tasks via a static edge mask,
+* the **dense path** (K_D analog) sees the packed bitmap tiles.
+
+``I_B``/``I_A`` run host-side between steps, exactly like the paper
+(they are allowed to look at global attributes, flip direction flags,
+reset counters, and decide termination).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blocks import BlockStore
+from .functors import BlockAlgorithm
+from .scheduler import Schedule, build_schedule
+
+__all__ = ["Engine", "run"]
+
+
+def _split_ctx(ctx):
+    """Recursively split a context into (dynamic jnp-array pytree, static rest).
+
+    Dicts/lists/tuples are traversed; ``jax.Array`` leaves go to the
+    dynamic side (same container shape, ``None`` holes on the static
+    side), everything else (ints, callables, host objects) stays static.
+    """
+    if isinstance(ctx, jax.Array):
+        return ctx, _DYN
+    if isinstance(ctx, dict):
+        dyn, static = {}, {}
+        for k, v in ctx.items():
+            d, s = _split_ctx(v)
+            dyn[k], static[k] = d, s
+        return dyn, static
+    if isinstance(ctx, (list, tuple)):
+        pairs = [_split_ctx(v) for v in ctx]
+        dyn = [p[0] for p in pairs]
+        static = [p[1] for p in pairs]
+        return dyn, static
+    return None, ctx
+
+
+class _Dyn:
+    """Sentinel marking 'value lives on the dynamic side'."""
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return "<dyn>"
+
+
+_DYN = _Dyn()
+
+
+def _merge_ctx(dyn, static):
+    if static is _DYN:
+        return dyn
+    if isinstance(static, dict):
+        return {k: _merge_ctx(dyn[k], static[k]) for k in static}
+    if isinstance(static, (list, tuple)):
+        return [
+            _merge_ctx(d, s) for d, s in zip(dyn, static)
+        ]
+    return static
+
+
+@dataclass
+class RunResult:
+    result: Any
+    state: Any
+    iterations: int
+    seconds: float
+    schedule_stats: dict
+
+
+class Engine:
+    def __init__(
+        self,
+        alg: BlockAlgorithm,
+        store: BlockStore,
+        schedule: Schedule | None = None,
+        *,
+        num_devices: int = 1,
+        mode: str = "hybrid",
+        use_pallas: bool = False,
+        tile_dim: int = 512,
+        dense_frac: float = 0.5,
+        dense_density: float = 0.005,
+    ) -> None:
+        self.alg = alg
+        self.store = store
+        self.schedule = schedule or build_schedule(
+            alg,
+            store,
+            num_devices=num_devices,
+            mode=mode,
+            tile_dim=tile_dim,
+            dense_frac=dense_frac,
+            dense_density=dense_density,
+        )
+        self.use_pallas = use_pallas
+        self.ctx = self._build_context()
+        # Split device arrays out of the context and pass them as jit
+        # ARGUMENTS: baking them in as closure constants makes XLA
+        # constant-fold whole kernels at compile time (minutes for the
+        # dense-tile paths) and bloats every recompile.
+        self._ctx_dyn, self._ctx_static = _split_ctx(self.ctx)
+
+        def step(dyn, state, it):
+            ctx = _merge_ctx(dyn, self._ctx_static)
+            return self._step_impl(ctx, state, it)
+
+        self._step = jax.jit(step)
+
+    # ------------------------------------------------------------------
+    def _build_context(self) -> dict:
+        """Static per-run context handed to kernels."""
+        store, sched = self.store, self.schedule
+        ctx = store.device_arrays()
+        # static edge → path routing: an edge is on the dense path iff the
+        # task owning its block went dense.  (Bulk mode: task == block.)
+        dense_blocks = np.zeros(store.layout.num_blocks, dtype=bool)
+        if sched.dense_block_ids.size:
+            dense_blocks[sched.dense_block_ids] = True
+        edge_dense = dense_blocks[np.asarray(store.edge_block)]
+        ctx["sparse_edge_mask"] = jnp.asarray(~edge_dense)
+        ctx["dense_edge_mask"] = jnp.asarray(edge_dense)
+        ctx["n"] = store.n
+        ctx["m"] = store.m
+        ctx["p"] = store.p
+        ctx["cuts"] = jnp.asarray(store.layout.cuts)
+        ctx["tile_dim"] = sched.tile_dim
+        ctx["use_pallas"] = self.use_pallas
+        ctx["schedule"] = sched
+        ctx["store"] = store  # host-side only; kernels must not trace through it
+        if self.alg.prepare is not None:
+            ctx = self.alg.prepare(ctx, store, sched)
+        return ctx
+
+    def _step_impl(self, ctx, state, it):
+        alg = self.alg
+        if alg.kernel_sparse is not None:
+            state = alg.kernel_sparse(ctx, state, it)
+        if alg.kernel_dense is not None and self.schedule.dense_task_mask.any():
+            state = alg.kernel_dense(ctx, state, it)
+        if alg.post is not None:
+            state = alg.post(ctx, state, it)
+        return state
+
+    # ------------------------------------------------------------------
+    def run(self, state: Any | None = None) -> RunResult:
+        alg = self.alg
+        if state is None:
+            assert alg.init_state is not None, f"{alg.name}: init_state required"
+            state = alg.init_state(self.store)
+        t0 = time.perf_counter()
+        it = 0
+        cont = True
+        while cont and it < alg.max_iterations:
+            if alg.before is not None:
+                state = alg.before(self.ctx, state, it)
+            state = self._step(self._ctx_dyn, state, jnp.int32(it))
+            if alg.after is not None:
+                state, cont = alg.after(self.ctx, state, it)
+            else:
+                cont = False
+            it += 1
+        state = jax.tree.map(
+            lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
+            state,
+        )
+        dt = time.perf_counter() - t0
+        result = alg.finalize(self.store, state) if alg.finalize else state
+        return RunResult(
+            result=result,
+            state=state,
+            iterations=it,
+            seconds=dt,
+            schedule_stats=self.schedule.stats,
+        )
+
+
+def run(alg: BlockAlgorithm, store: BlockStore, **kw) -> RunResult:
+    """One-shot convenience: build a schedule, run the algorithm."""
+    return Engine(alg, store, **kw).run()

@@ -1,0 +1,106 @@
+"""The six-functor algorithm specification (paper §3, Listing 1).
+
+A ``BlockAlgorithm`` is PGAbB's user contract translated to JAX:
+
+=============== =================================================
+paper functor    PGAbB-JAX field
+=============== =================================================
+``K_H``          ``kernel_sparse(arrays, state) -> state``  (VPU path)
+``K_D``          ``kernel_dense(arrays, state) -> state``   (MXU path)
+``P_C``/``P_G``  ``make_blocklists(store) -> np.ndarray``  /
+                 ``blocklist_predicate(store, blocklist) -> bool``
+``I_B``          ``before(state, it) -> state``   (host side)
+``I_A``          ``after(state, it) -> (state, bool)``  — iterate while True
+``E``            ``estimate(store, blocklist) -> float``
+=============== =================================================
+
+At least one kernel must be provided (paper: "One of them has to be
+written").  ``state`` is a pytree of global/vertex/edge attributes
+(paper: A_G / A_V / A_E) — jnp arrays inside the jitted step, numpy at
+the host boundary.  ``mode`` declares the paper's execution-mode
+classification and drives block-list composition defaults.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+import numpy as np
+
+__all__ = ["BlockAlgorithm", "Mode", "default_estimate"]
+
+
+class Mode:
+    BULK = "single_block_bulk_synchronous"
+    ACTIVATION = "activation_based"
+    PATTERN = "multi_block_pattern_based"
+
+
+def default_estimate(store, blocklist: np.ndarray) -> float:
+    """Paper default E: total number of edges within the block-list."""
+    bl = np.atleast_1d(np.asarray(blocklist, dtype=np.int64))
+    return float(
+        np.sum(store.block_ptr[bl + 1] - store.block_ptr[bl])
+    )
+
+
+@dataclass
+class BlockAlgorithm:
+    name: str
+    mode: str = Mode.BULK
+    # kernels — at least one required
+    kernel_sparse: Callable[..., Any] | None = None   # K_H analog
+    kernel_dense: Callable[..., Any] | None = None    # K_D analog
+    # block-list composition — P_C (explicit) or P_G (predicate)
+    make_blocklists: Callable[..., np.ndarray] | None = None
+    blocklist_predicate: Callable[..., bool] | None = None
+    blocklist_size: int = 1
+    # iteration control
+    before: Callable[..., Any] | None = None          # I_B
+    after: Callable[..., Any] | None = None           # I_A (required for iterative)
+    max_iterations: int = 1
+    # scheduling
+    estimate: Callable[..., float] = default_estimate  # E
+    # post-path combine, runs inside the jitted step after both kernels
+    # (e.g. PageRank applies damping once both paths accumulated)
+    post: Callable[..., Any] | None = None
+    # one-time context preparation: (ctx, store, schedule) -> ctx
+    # (algorithms stash bucketed item arrays, tile index maps, ... here)
+    prepare: Callable[..., dict] | None = None
+    # initial attribute state factory: (store) -> pytree
+    init_state: Callable[..., Any] | None = None
+    # extract final result: (store, state) -> anything
+    finalize: Callable[..., Any] | None = None
+    metadata: dict = field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if self.kernel_sparse is None and self.kernel_dense is None:
+            raise ValueError(
+                f"{self.name}: at least one of kernel_sparse/kernel_dense is required"
+            )
+
+    def compose_blocklists(self, store) -> np.ndarray:
+        """Run P_C, or enumerate + filter with P_G (paper §3)."""
+        if self.make_blocklists is not None:
+            bls = np.asarray(self.make_blocklists(store))
+        else:
+            nb = store.layout.num_blocks
+            if self.blocklist_size == 1:
+                cand = np.arange(nb, dtype=np.int64)[:, None]
+            else:
+                grids = np.meshgrid(
+                    *[np.arange(nb, dtype=np.int64)] * self.blocklist_size,
+                    indexing="ij",
+                )
+                cand = np.stack([x.ravel() for x in grids], axis=1)
+            if self.blocklist_predicate is not None:
+                keep = np.fromiter(
+                    (self.blocklist_predicate(store, row) for row in cand),
+                    dtype=bool,
+                    count=cand.shape[0],
+                )
+                cand = cand[keep]
+            bls = cand
+        if bls.ndim == 1:
+            bls = bls[:, None]
+        return bls.astype(np.int64)

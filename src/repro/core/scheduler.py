@@ -1,0 +1,146 @@
+"""Workload-estimation based scheduler (paper §4.4), adapted to a TPU mesh.
+
+The paper's scheduler (i) estimates each task's weight with the user's
+``E`` functor (default: edges in the block-list), (ii) sorts tasks in
+decreasing weight to expose bottleneck tasks, (iii) sends heavy tasks to
+the throughput device (GPU) and light ones to CPUs, with an optional
+cut-off that CPUs never cross, and (iv) overlaps copies with compute via
+four CUDA streams.
+
+On a TPU mesh the same decisions appear at two levels:
+
+* **Path split (K_D vs K_H analog).**  Heavy *and dense* tasks go to the
+  MXU path (dense bitmap tiles, Pallas matmul kernels); everything else
+  goes to the VPU path (segmented-COO gather/scatter).  The paper's
+  cut-off becomes two knobs: ``dense_density`` (minimum block density)
+  and ``dense_frac`` (the weight-ranked fraction the MXU path claims —
+  CPUs "do not go past the cut-off").
+* **Device packing.**  Tasks are LPT-packed (Longest Processing Time
+  first — greedy on the sorted weights) onto the mesh's block-parallel
+  devices, producing a *static* per-device task list.  This is the
+  work-stealing queue of the paper frozen at trace time; LPT has the
+  classical 4/3-OPT makespan bound, which is our straggler-mitigation
+  story for skewed graphs.
+
+Everything here is host-side numpy; the result feeds jitted kernels.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .blocks import BlockStore
+from .functors import BlockAlgorithm
+
+__all__ = ["Schedule", "build_schedule", "lpt_assign"]
+
+
+@dataclass
+class Schedule:
+    blocklists: np.ndarray        # (t, s) block ids per block-list (task)
+    weights: np.ndarray           # (t,) E estimates
+    order: np.ndarray             # (t,) task indices sorted by decreasing weight
+    dense_task_mask: np.ndarray   # (t,) True → MXU path
+    dense_block_ids: np.ndarray   # unique block ids needing dense tiles
+    tile_dim: int
+    device_assignment: np.ndarray  # (t,) device slot per task (LPT)
+    num_devices: int
+    stats: dict = field(default_factory=dict)
+
+    @property
+    def num_tasks(self) -> int:
+        return int(self.blocklists.shape[0])
+
+    def makespan_ratio(self) -> float:
+        """LPT makespan / ideal (mean) load — straggler headroom metric."""
+        loads = np.zeros(self.num_devices)
+        np.add.at(loads, self.device_assignment, self.weights)
+        ideal = self.weights.sum() / max(self.num_devices, 1)
+        return float(loads.max() / max(ideal, 1e-12))
+
+
+def lpt_assign(weights: np.ndarray, num_devices: int) -> np.ndarray:
+    """Longest-Processing-Time-first greedy packing → device id per task."""
+    order = np.argsort(-weights, kind="stable")
+    loads = np.zeros(num_devices, dtype=np.float64)
+    assign = np.zeros(weights.shape[0], dtype=np.int32)
+    for t in order:
+        d = int(np.argmin(loads))
+        assign[t] = d
+        loads[d] += float(weights[t])
+    return assign
+
+
+def build_schedule(
+    alg: BlockAlgorithm,
+    store: BlockStore,
+    *,
+    num_devices: int = 1,
+    dense_frac: float = 0.5,
+    dense_density: float = 0.005,
+    tile_dim: int = 512,
+    mode: str = "hybrid",          # "hybrid" | "sparse_only" | "dense_only"
+) -> Schedule:
+    """Compose block-lists, estimate, sort, split paths, pack devices."""
+    bls = alg.compose_blocklists(store)
+    t = bls.shape[0]
+    weights = np.asarray(
+        [alg.estimate(store, bls[i]) for i in range(t)], dtype=np.float64
+    )
+    order = np.argsort(-weights, kind="stable")
+
+    # ---- dense/sparse path split -------------------------------------
+    dense_task_mask = np.zeros(t, dtype=bool)
+    if mode != "sparse_only" and alg.kernel_dense is not None and t:
+        # a task is MXU-eligible iff every block in its block-list fits a
+        # tile and the *first* (edge) block clears the density cut-off
+        fits = np.zeros(t, dtype=bool)
+        for i in range(t):
+            ranges_ok = all(
+                max(store.block_range(int(b))) <= tile_dim for b in bls[i]
+            )
+            dens_ok = store.block_density(int(bls[i][0])) >= dense_density
+            fits[i] = ranges_ok and (dens_ok or mode == "dense_only")
+        if mode == "dense_only":
+            dense_task_mask = fits
+        else:
+            # heavy-first claim up to dense_frac of total weight (cut-off)
+            budget = dense_frac * weights.sum()
+            claimed = 0.0
+            for tid in order:
+                if not fits[tid]:
+                    continue
+                if claimed >= budget:
+                    break
+                dense_task_mask[tid] = True
+                claimed += weights[tid]
+    dense_block_ids = (
+        np.unique(bls[dense_task_mask].ravel()).astype(np.int32)
+        if dense_task_mask.any()
+        else np.zeros(0, np.int32)
+    )
+    if dense_block_ids.size:
+        store.materialize_tiles(dense_block_ids, tile_dim)
+
+    assign = lpt_assign(weights, max(num_devices, 1))
+    sched = Schedule(
+        blocklists=bls,
+        weights=weights,
+        order=order,
+        dense_task_mask=dense_task_mask,
+        dense_block_ids=dense_block_ids,
+        tile_dim=tile_dim,
+        device_assignment=assign,
+        num_devices=max(num_devices, 1),
+    )
+    w_dense = float(weights[dense_task_mask].sum())
+    sched.stats = dict(
+        num_tasks=t,
+        total_weight=float(weights.sum()),
+        dense_tasks=int(dense_task_mask.sum()),
+        dense_weight_frac=w_dense / max(weights.sum(), 1e-12),
+        makespan_ratio=sched.makespan_ratio(),
+        mode=mode,
+    )
+    return sched

@@ -1,0 +1,5 @@
+"""Data substrates: deterministic synthetic token pipeline + graph datasets."""
+from .tokens import TokenPipeline, synthetic_batch
+from .graphs import benchmark_suite
+
+__all__ = ["TokenPipeline", "synthetic_batch", "benchmark_suite"]

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the compute hot spots (validated interpret=True).
+
+tc_tile      — dense-block triangle counting (masked MXU matmul)
+spmv_tile    — batched dense-block SpMV (PageRank dense path)
+frontier_tile— bottom-up BFS frontier probe (masked row reduction)
+attn_tile    — flash-style fused attention (LM substrate)
+ops          — jit'd wrappers w/ TPU/interpret dispatch
+ref          — pure-jnp oracles for all of the above
+"""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

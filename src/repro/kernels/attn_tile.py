@@ -1,0 +1,100 @@
+"""Pallas TPU kernel: flash-style fused attention (LM substrate hot spot).
+
+Online-softmax attention with (bq, d) × (bk, d) MXU matmuls and running
+(m, l, acc) statistics in VMEM scratch — no (S, S) materialization, so
+the VMEM working set is bq·d + bk·d + bq·bk floats per step regardless
+of sequence length.  Supports causal masking with suffix alignment
+(q_offset = S_k − S_q) so the same kernel serves prefill and decode.
+
+Grid: (B·H, S_q/bq, S_k/bk), kv-blocks innermost (sequential) so the
+accumulator carries across kv steps of one q block.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            scale, causal, nk):
+    kk = pl.program_id(2)
+
+    @pl.when(kk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale      # (bq, d)
+    k = k_ref[0].astype(jnp.float32)              # (bk, d)
+    v = v_ref[0].astype(jnp.float32)              # (bk, d)
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )                                             # (bq, bk)
+    if causal:
+        bq, bk = s.shape
+        sq_total = pl.num_programs(1) * bq
+        sk_total = nk * bk
+        row = pl.program_id(1) * bq + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        col = kk * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        # suffix alignment: query i attends to keys ≤ i + (S_k - S_q)
+        s = jnp.where(col <= row + (sk_total - sq_total), s, _NEG)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]       # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.where(s > _NEG / 2, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.exp(jnp.minimum(m_prev - m_new, 0.0))
+    l_ref[...] = alpha * l_prev + p.sum(axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(kk == nk - 1)
+    def _finish():
+        o_ref[0, :, :] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_k", "interpret")
+)
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128, interpret: bool = True):
+    """(B,H,Sq,D),(B,H,Sk,D),(B,H,Sk,D) → (B,H,Sq,D) fused attention."""
+    b, h, sq, d = q.shape
+    sk = k.shape[2]
+    bq = min(block_q, sq)
+    bk = min(block_k, sk)
+    assert sq % bq == 0 and sk % bk == 0
+    scale = d ** -0.5
+    qf = q.reshape(b * h, sq, d)
+    kf = k.reshape(b * h, sk, d)
+    vf = v.reshape(b * h, sk, d)
+    nk = sk // bk
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, nk=nk),
+        grid=(b * h, sq // bq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, i, j: (bh, j, 0)),
+            pl.BlockSpec((1, bk, d), lambda bh, i, j: (bh, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bh, i, j: (bh, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * h, sq, d), q.dtype),
+        scratch_shapes=[
+            # f32 running accumulators live in VMEM across kv steps
+            pltpu.VMEM((bq, d), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, d)

@@ -1,0 +1,49 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+On a TPU backend the compiled kernels run natively; everywhere else
+(this CPU container, unit tests) they execute in ``interpret=True``
+mode, which runs the same kernel body per grid step in Python/XLA and
+validates the BlockSpec tiling logic.  ``set_interpret`` overrides the
+auto-detection (tests use it to force interpret explicitly).
+"""
+from __future__ import annotations
+
+import jax
+
+from .tc_tile import tc_tiles as _tc_tiles
+from .spmv_tile import spmv_tiles as _spmv_tiles
+from .frontier_tile import frontier_tiles as _frontier_tiles
+from .attn_tile import flash_attention as _flash_attention
+
+_FORCE_INTERPRET: bool | None = None
+
+
+def set_interpret(value: bool | None) -> None:
+    global _FORCE_INTERPRET
+    _FORCE_INTERPRET = value
+
+
+def _interpret() -> bool:
+    if _FORCE_INTERPRET is not None:
+        return _FORCE_INTERPRET
+    return jax.default_backend() != "tpu"
+
+
+def tc_tiles(a_ik, a_jk, a_ij, *, block_t: int = 128):
+    return _tc_tiles(a_ik, a_jk, a_ij, block_t=block_t, interpret=_interpret())
+
+
+def spmv_tiles(tiles, xs, *, block_t: int = 128):
+    return _spmv_tiles(tiles, xs, block_t=block_t, interpret=_interpret())
+
+
+def frontier_tiles(tiles, fcols, *, block_t: int = 128):
+    return _frontier_tiles(tiles, fcols, block_t=block_t, interpret=_interpret())
+
+
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 128,
+                    block_k: int = 128):
+    return _flash_attention(
+        q, k, v, causal=causal, block_q=block_q, block_k=block_k,
+        interpret=_interpret(),
+    )

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each function is the mathematical definition of the corresponding kernel
+in this package; kernel tests sweep shapes/dtypes and
+``assert_allclose`` against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT_MAX = jnp.int32(2**31 - 1)
+
+
+def tc_tiles_ref(a_ik: jnp.ndarray, a_jk: jnp.ndarray, a_ij: jnp.ndarray) -> jnp.ndarray:
+    """Σ_b Σ_{r,s} (A_ik[b] · A_jk[b]ᵀ)[r,s] * A_ij[b][r,s]  → scalar f32.
+
+    The per-block-list triangle count of the dense MXU path: wedge counts
+    masked by the edge block.
+    """
+    w = jnp.einsum(
+        "brc,bsc->brs", a_ik.astype(jnp.float32), a_jk.astype(jnp.float32)
+    )
+    return jnp.sum(w * a_ij.astype(jnp.float32))
+
+
+def spmv_tiles_ref(tiles: jnp.ndarray, xs: jnp.ndarray) -> jnp.ndarray:
+    """y[b] = A[b]ᵀ · x[b] for a batch of dense blocks — (nd,T,T),(nd,T)→(nd,T)."""
+    return jnp.einsum("brc,br->bc", tiles.astype(jnp.float32), xs.astype(jnp.float32))
+
+
+def frontier_tiles_ref(tiles: jnp.ndarray, fcols: jnp.ndarray) -> jnp.ndarray:
+    """Bottom-up BFS tile step: per tile row, the smallest local column c
+    with an edge into the frontier, else INT_MAX — (nd,T,T),(nd,T)→(nd,T) i32."""
+    t = tiles.shape[-1]
+    colid = jnp.arange(t, dtype=jnp.int32)[None, None, :]
+    hit = (tiles > 0) & (fcols[:, None, :] > 0)
+    return jnp.where(hit, colid, INT_MAX).min(axis=2)
+
+
+def spmv_ell_ref(idx, valid, x):
+    """(B,R,K) gather-and-mask row sums: y[b,r] = Σ_k x[b, idx[b,r,k]]·valid."""
+    gathered = jax.vmap(lambda xi, ii: xi[ii])(x, idx)
+    return jnp.sum(gathered * valid.astype(x.dtype), axis=2)
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """Plain softmax attention oracle — q,k,v: (B, H, S, D) → (B, H, S, D)."""
+    d = q.shape[-1]
+    scale = (d ** -0.5) if scale is None else scale
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        s_q, s_k = logits.shape[-2], logits.shape[-1]
+        mask = jnp.tril(jnp.ones((s_q, s_k), bool), k=s_k - s_q)
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jnp.exp(logits - logits.max(-1, keepdims=True))
+    probs = probs / probs.sum(-1, keepdims=True)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,49 @@
+"""Pallas TPU kernel: ELL-format SpMV — the VPU/sparse-path hot spot.
+
+The sparse path stores light blocks as padded neighbor lists (ELLPACK:
+``idx`` (R, K) column indices + validity mask).  y[r] = Σ_k x[idx[r,k]]
+for valid k — a gather + row reduction, the shape of PageRank/BFS work
+on blocks too sparse for the bitmap/MXU path.
+
+Tiling: grid (R/br,); each step holds a (br, K) index/mask panel and the
+full x vector in VMEM (the block-list bound: the engine only hands this
+kernel blocks whose source range fits one tile, so x here is a stripe
+slice, not the whole graph — the same VMEM bounding the paper uses
+device memory for).  Gathers lower to VPU dynamic loads on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(idx_ref, val_ref, x_ref, y_ref):
+    idx = idx_ref[0]                         # (br, K) int32
+    msk = val_ref[0]                         # (br, K) float (0/1)
+    x = x_ref[0]                             # (N,)
+    gathered = x[idx]                        # (br, K) VPU gather
+    y_ref[0, :] = jnp.sum(gathered * msk, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r", "interpret"))
+def spmv_ell(idx, valid, x, *, block_r: int = 128, interpret: bool = True):
+    """(B,R,K) idx + (B,R,K) mask + (B,N) x → (B,R) row sums of x[idx]."""
+    b, r, k = idx.shape
+    n = x.shape[1]
+    br = min(block_r, r)
+    assert r % br == 0
+    return pl.pallas_call(
+        _kernel,
+        grid=(b, r // br),
+        in_specs=[
+            pl.BlockSpec((1, br, k), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, br, k), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, br), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, r), x.dtype),
+        interpret=interpret,
+    )(idx, valid.astype(x.dtype), x)

@@ -1,0 +1,267 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("DRYRUN_EXTRA_XLA_FLAGS", "")
+)
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell the appropriate step function (train_step / prefill_step /
+serve_step) is jitted with the production in/out shardings and
+``.lower().compile()``-ed against ShapeDtypeStruct inputs — no byte of
+the model is ever materialized.  The compiled artifact yields:
+
+* ``memory_analysis()``  — proves the per-device working set fits,
+* ``cost_analysis()``    — per-device FLOPs / bytes for §Roofline,
+* post-optimization HLO  — the partitioner's actual collective schedule,
+  summed into per-kind wire bytes.
+
+Results are printed and (with --out) written as JSON for
+benchmarks/roofline consumption.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2.5-32b --shape train_4k
+  python -m repro.launch.dryrun --arch all --shape all --multi-pod --out runs/
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+
+from repro.configs import SHAPES, get_config, list_archs
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.models.sharding import (
+    EP_ONLY_EXPERT_RULES, MeshCtx, batch_spec, cache_spec,
+    named_sharding_tree, param_specs, set_mesh_ctx,
+)
+from repro.models.steps import (
+    abstract_decode_state, abstract_opt_state, abstract_params, input_specs,
+    make_prefill_step, make_serve_step, make_train_step, supports_shape,
+)
+from repro.roofline import collective_bytes_from_hlo, model_flops, roofline_terms
+from repro.roofline.hlo_cost import hlo_cost_model
+
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _batch_shardings(ctx: MeshCtx, specs):
+    return jax.tree.map(
+        lambda s: NamedSharding(ctx.mesh, batch_spec(ctx, s.shape)), specs
+    )
+
+
+def _decode_state_shardings(ctx: MeshCtx, state_shapes):
+    def one(path, leaf):
+        name = "/".join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        if leaf.ndim == 0:
+            return NamedSharding(ctx.mesh, P())
+        if name.endswith("/k") or name.endswith("/v"):
+            # KV cache (L, B, T, H, D): seq axis 2
+            return NamedSharding(
+                ctx.mesh, cache_spec(ctx, leaf.shape, seq_axis=2)
+            )
+        # recurrent states (L, B, ...): batch over dp when divisible
+        return NamedSharding(ctx.mesh, cache_spec(ctx, leaf.shape, seq_axis=None))
+
+    return jax.tree_util.tree_map_with_path(one, state_shapes)
+
+
+def _parse_override(kv: str):
+    k, v = kv.split("=", 1)
+    for cast in (int, float):
+        try:
+            return k, cast(v)
+        except ValueError:
+            pass
+    if v in ("true", "false", "True", "False"):
+        return k, v.lower() == "true"
+    return k, v
+
+
+def dryrun_cell(arch: str, shape_name: str, *, multi_pod: bool,
+                verbose: bool = True, overrides: dict | None = None) -> dict:
+    from dataclasses import replace as _replace
+
+    cfg = get_config(arch)
+    if overrides:
+        cfg = _replace(cfg, **overrides)
+    shape = SHAPES[shape_name]
+    ok, why = supports_shape(cfg, shape)
+    if not ok:
+        return dict(arch=arch, shape=shape_name,
+                    mesh="2x16x16" if multi_pod else "16x16",
+                    status="skipped", reason=why)
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = int(np.prod(list(mesh.shape.values())))
+    ctx = set_mesh_ctx(mesh)
+    t0 = time.perf_counter()
+    try:
+        with mesh:
+            extra_rules = (
+                EP_ONLY_EXPERT_RULES
+                if cfg.moe_dispatch_sharding in ("grouped", "auto_ep", "manual")
+                else None
+            )
+            p_shapes = abstract_params(cfg)
+            p_spec = param_specs(ctx, p_shapes, extra_rules)
+            p_sh = named_sharding_tree(ctx, p_spec)
+            specs = input_specs(cfg, shape)
+            b_sh = _batch_shardings(ctx, specs)
+
+            if shape.kind == "train":
+                o_shapes = abstract_opt_state(cfg)
+                o_sh = named_sharding_tree(
+                    ctx, param_specs(ctx, o_shapes, extra_rules))
+                step = make_train_step(cfg)
+                rep = NamedSharding(mesh, P())
+                jf = jax.jit(
+                    step,
+                    in_shardings=(p_sh, o_sh, b_sh, rep),
+                    out_shardings=(p_sh, o_sh, rep),
+                )
+                lowered = jf.lower(
+                    p_shapes, o_shapes, specs,
+                    jax.ShapeDtypeStruct((), np.int32),
+                )
+            elif shape.kind == "prefill":
+                step = make_prefill_step(cfg)
+                jf = jax.jit(step, in_shardings=(p_sh, b_sh))
+                lowered = jf.lower(p_shapes, specs)
+            else:  # decode
+                s_shapes = abstract_decode_state(cfg, shape)
+                s_sh = _decode_state_shardings(ctx, s_shapes)
+                step = make_serve_step(cfg)
+                rep = NamedSharding(mesh, P())
+                logits_sh = NamedSharding(
+                    mesh,
+                    batch_spec(ctx, (shape.global_batch, cfg.vocab)),
+                )
+                jf = jax.jit(
+                    step,
+                    in_shardings=(p_sh, s_sh, b_sh),
+                    out_shardings=(logits_sh, s_sh),
+                )
+                lowered = jf.lower(p_shapes, s_shapes, specs)
+
+            t_lower = time.perf_counter() - t0
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost_list = compiled.cost_analysis()
+            cost = cost_list[0] if isinstance(cost_list, (list, tuple)) else cost_list
+            hlo = compiled.as_text()
+            # trip-count-aware cost model (cost_analysis counts each
+            # lax.scan body once — see roofline/hlo_cost.py)
+            hc = hlo_cost_model(hlo)
+            coll = hc["coll"]
+            terms = roofline_terms(
+                {"flops": hc["flops"], "bytes accessed": hc["bytes"]},
+                coll, chips=chips,
+            )
+            terms["xla_cost_analysis_flops_flat"] = float(cost.get("flops", 0.0))
+            terms["cost_model_flags"] = hc["flags"]
+            mf = model_flops(cfg, shape)
+            hlo_total_flops = terms["hlo_flops_per_chip"] * chips
+            result = dict(
+                arch=arch,
+                shape=shape_name,
+                mesh="2x16x16" if multi_pod else "16x16",
+                status="ok",
+                chips=chips,
+                seconds_lower=round(t_lower, 2),
+                seconds_compile=round(t_compile, 2),
+                memory=dict(
+                    argument_bytes=getattr(mem, "argument_size_in_bytes", None),
+                    output_bytes=getattr(mem, "output_size_in_bytes", None),
+                    temp_bytes=getattr(mem, "temp_size_in_bytes", None),
+                    generated_code_bytes=getattr(
+                        mem, "generated_code_size_in_bytes", None
+                    ),
+                ),
+                roofline=terms,
+                model_flops=mf,
+                useful_flops_ratio=(
+                    mf / hlo_total_flops if hlo_total_flops else None
+                ),
+                collectives=coll,
+                top_traffic=hc.get("top_traffic", []),
+                params=sum(
+                    int(np.prod(l.shape)) for l in jax.tree.leaves(p_shapes)
+                ),
+            )
+            if verbose:
+                print(f"== {arch} × {shape_name} × {result['mesh']} ==")
+                print("memory_analysis:", mem)
+                print("cost_analysis flops/chip:", terms["hlo_flops_per_chip"])
+                print("collectives:", json.dumps(coll["per_kind"]))
+                print(
+                    "roofline s: compute={t_compute:.4f} memory={t_memory:.4f}"
+                    " collective={t_collective:.4f} dominant={dominant}".format(
+                        **terms
+                    )
+                )
+            return result
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        return dict(
+            arch=arch, shape=shape_name,
+            mesh="2x16x16" if multi_pod else "16x16",
+            status="error", error=f"{type(e).__name__}: {e}",
+            traceback=traceback.format_exc()[-2000:],
+        )
+    finally:
+        set_mesh_ctx(None)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="directory for JSON results")
+    ap.add_argument("--set", action="append", default=[], metavar="KEY=VAL",
+                    help="ArchConfig override(s), e.g. --set attn_impl=chunked")
+    ap.add_argument("--tag", default="", help="suffix for result filenames")
+    args = ap.parse_args(argv)
+
+    overrides = dict(_parse_override(kv) for kv in getattr(args, "set"))
+
+    archs = list_archs() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                res = dryrun_cell(arch, shape, multi_pod=mp,
+                                  overrides=overrides)
+                if overrides:
+                    res["overrides"] = overrides
+                if res["status"] == "error":
+                    failures += 1
+                    print(f"!! {arch} × {shape} × {res['mesh']}: "
+                          f"{res['error']}", file=sys.stderr)
+                elif res["status"] == "skipped":
+                    print(f"-- {arch} × {shape}: skipped ({res['reason']})")
+                if args.out:
+                    os.makedirs(args.out, exist_ok=True)
+                    tag = f"__{args.tag}" if args.tag else ""
+                    fn = f"{arch}__{shape}__{res['mesh']}{tag}.json".replace("/", "_")
+                    with open(os.path.join(args.out, fn), "w") as f:
+                        json.dump(res, f, indent=1)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,69 @@
+"""Batched serving driver: prefill-free cached decode of N tokens.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-32b --smoke \
+      --batch 4 --tokens 32
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_smoke
+from repro.models import lm
+from repro.models.steps import make_serve_step
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--cache-len", type=int, default=256)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    key = jax.random.key(0)
+    params = lm.init_params(cfg, key)
+    state = lm.init_decode_state(cfg, args.batch, args.cache_len)
+    serve = jax.jit(make_serve_step(cfg))
+
+    batch_extra = {}
+    if cfg.family == "vlm":
+        batch_extra["vision"] = jnp.zeros(
+            (args.batch, cfg.vision_tokens, cfg.d_model), lm.Dtype(cfg.dtype).param
+        )
+    if cfg.is_encdec:
+        batch_extra["memory"] = jnp.zeros(
+            (args.batch, cfg.encoder_frames, cfg.d_model), lm.Dtype(cfg.dtype).param
+        )
+
+    toks = jnp.zeros((args.batch,), jnp.int32)
+    out_tokens = []
+    t0 = time.perf_counter()
+    for i in range(args.tokens):
+        logits, state = serve(params, state, dict(tokens=toks, **batch_extra))
+        if args.temperature > 0:
+            key, sub = jax.random.split(key)
+            toks = jax.random.categorical(sub, logits / args.temperature, -1)
+        else:
+            toks = jnp.argmax(logits, -1)
+        toks = toks.astype(jnp.int32)
+        out_tokens.append(np.asarray(toks))
+    dt = time.perf_counter() - t0
+    seq = np.stack(out_tokens, 1)
+    print("generated token ids (first row):", seq[0][:16], "...")
+    print(
+        f"{args.batch} streams × {args.tokens} tokens in {dt:.2f}s "
+        f"→ {args.batch * args.tokens / dt:.1f} tok/s"
+    )
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,13 @@
+"""LM substrate: unified config-driven model covering all assigned families."""
+from . import lm, steps, sharding
+from .steps import (
+    make_train_step, make_serve_step, make_prefill_step, input_specs,
+    abstract_params, abstract_opt_state, abstract_decode_state, supports_shape,
+)
+
+__all__ = [
+    "lm", "steps", "sharding",
+    "make_train_step", "make_serve_step", "make_prefill_step", "input_specs",
+    "abstract_params", "abstract_opt_state", "abstract_decode_state",
+    "supports_shape",
+]

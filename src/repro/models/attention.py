@@ -1,0 +1,215 @@
+"""Attention: GQA self-attention (full / sliding-window / causal),
+single-token decode against a KV cache, and cross-attention.
+
+All functions are pure; weights come in as a dict produced by
+``init_attn``.  The XLA einsum path is the default (used by the dry-run
+and CPU tests); the Pallas flash kernel is switchable for TPU runtime.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, dense_init, rope, zeros_init
+
+__all__ = ["init_attn", "self_attention", "decode_attention", "cross_attention",
+           "init_cross_attn"]
+
+
+def init_attn(key, d_model, n_heads, n_kv_heads, d_head, *, bias, dtype):
+    ks = jax.random.split(key, 4)
+    p = dict(
+        wq=dense_init(ks[0], (d_model, n_heads * d_head), dtype),
+        wk=dense_init(ks[1], (d_model, n_kv_heads * d_head), dtype),
+        wv=dense_init(ks[2], (d_model, n_kv_heads * d_head), dtype),
+        wo=dense_init(ks[3], (n_heads * d_head, d_model), dtype),
+    )
+    if bias:
+        p.update(
+            bq=jnp.zeros((n_heads * d_head,), dtype),
+            bk=jnp.zeros((n_kv_heads * d_head,), dtype),
+            bv=jnp.zeros((n_kv_heads * d_head,), dtype),
+        )
+    return p
+
+
+def _project_qkv(p, x, n_heads, n_kv_heads, d_head):
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, p["wv"])
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, s, n_heads, d_head)
+    k = k.reshape(b, s, n_kv_heads, d_head)
+    v = v.reshape(b, s, n_kv_heads, d_head)
+    return q, k, v
+
+
+def _chunked_sdpa(q, k, v, *, causal, window, block_k: int = 512):
+    """Online-softmax attention over kv chunks (flash-attention recurrence
+    at the XLA level).  The (S_q × S_k) score matrix never exists as one
+    buffer: each scan step produces only an (S_q × block_k) tile whose
+    softmax partials fold into running (m, l, acc) — XLA fuses the tile
+    chain, so the HBM traffic drops from O(S_q·S_k) score bytes to the
+    O(S_q·d) carry (the §Perf memory-term optimization; see
+    EXPERIMENTS.md).  Semantics identical to _sdpa (same masking rules).
+    """
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    hkv = k.shape[2]
+    g = h // hkv
+    bk = min(block_k, t)
+    assert t % bk == 0, (t, bk)
+    nk = t // bk
+    qg = q.reshape(b, s, hkv, g, d).astype(jnp.float32) * (d ** -0.5)
+    kc = k.reshape(b, nk, bk, hkv, d)
+    vc = v.reshape(b, nk, bk, hkv, d)
+    qpos = jnp.arange(s)[:, None] + (t - s if causal else 0)
+
+    def step(carry, inp):
+        m_prev, l_prev, acc = carry
+        kb, vb, j = inp                                 # (b,bk,hkv,d) ×2
+        logits = jnp.einsum(
+            "bshgd,bthd->bhgst", qg, kb.astype(jnp.float32)
+        )                                               # (b,hkv,g,s,bk)
+        kpos = j * bk + jnp.arange(bk)[None, :]
+        mask = jnp.ones((s, bk), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window:
+            mask &= kpos > qpos - window
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        m_new = jnp.maximum(m_prev, logits.max(-1))
+        p = jnp.where(logits > -1e29, jnp.exp(logits - m_new[..., None]), 0.0)
+        alpha = jnp.exp(jnp.minimum(m_prev - m_new, 0.0))
+        l_new = alpha * l_prev + p.sum(-1)
+        acc = acc * alpha[..., None] + jnp.einsum(
+            "bhgst,bthd->bhgsd", p, vb.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, hkv, g, s), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, s), jnp.float32)
+    acc0 = jnp.zeros((b, hkv, g, s, d), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, acc0),
+        (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+         jnp.arange(nk)),
+    )
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, s, h, d).astype(q.dtype)
+
+
+def _sdpa(q, k, v, *, causal, window, q_pos0=0, probs_dtype=None):
+    """q: (B,S,H,D); k,v: (B,T,Hkv,D) — grouped to H. Returns (B,S,H,D)."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    hkv = k.shape[2]
+    group = h // hkv
+    qg = q.reshape(b, s, hkv, group, d)
+    logits = jnp.einsum("bshgd,bthd->bhgst", qg, k,
+                        preferred_element_type=jnp.float32)
+    logits *= d ** -0.5
+    qpos = q_pos0 + jnp.arange(s)[:, None]
+    kpos = jnp.arange(t)[None, :]
+    mask = jnp.ones((s, t), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    if probs_dtype is not None:
+        # bf16 score chain: halves the dominant (…,S,S) buffer traffic;
+        # the softmax max/sum reductions still run in f32 (§Perf lever)
+        logits = logits.astype(probs_dtype)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    probs = probs.astype(probs_dtype or v.dtype)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs.astype(v.dtype), v)
+    return out.reshape(b, s, h, d)
+
+
+def self_attention(p, x, *, n_heads, n_kv_heads, d_head, rope_theta,
+                   causal=True, window=0, use_pallas=False, impl="full",
+                   probs_dtype=None):
+    b, s, _ = x.shape
+    q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, d_head)
+    if rope_theta:
+        cos, sin = rope(jnp.arange(s), d_head, rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    if use_pallas and not window and d_head % 64 == 0 and s % 128 == 0:
+        from ..kernels import ops
+
+        group = n_heads // n_kv_heads
+        kr = jnp.repeat(k, group, axis=2)
+        vr = jnp.repeat(v, group, axis=2)
+        out = ops.flash_attention(
+            q.transpose(0, 2, 1, 3), kr.transpose(0, 2, 1, 3),
+            vr.transpose(0, 2, 1, 3), causal=causal,
+        ).transpose(0, 2, 1, 3)
+    elif impl == "chunked" and s > 512:
+        out = _chunked_sdpa(q, k, v, causal=causal, window=window)
+    else:
+        out = _sdpa(q, k, v, causal=causal, window=window,
+                    probs_dtype=probs_dtype)
+    out = out.reshape(b, s, n_heads * d_head)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"])
+
+
+def decode_attention(p, x, cache_k, cache_v, pos, *, n_heads, n_kv_heads,
+                     d_head, rope_theta, window=0):
+    """One-token decode. x: (B,1,d); cache: (B,T,Hkv,D); pos: scalar index.
+
+    Returns (out (B,1,d), new_cache_k, new_cache_v).  For sliding-window
+    layers the cache is a ring buffer of size ``window``.
+    """
+    b = x.shape[0]
+    q, k, v = _project_qkv(p, x, n_heads, n_kv_heads, d_head)
+    if rope_theta:
+        cos, sin = rope(pos[None], d_head, rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    t = cache_k.shape[1]
+    slot = jnp.where(window, pos % jnp.maximum(t, 1), pos)
+    cache_k = jax.lax.dynamic_update_slice(cache_k, k, (0, slot, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(cache_v, v, (0, slot, 0, 0))
+    hkv = cache_k.shape[2]
+    group = n_heads // hkv
+    qg = q.reshape(b, 1, hkv, group, d_head)
+    logits = jnp.einsum("bshgd,bthd->bhgst", qg, cache_k).astype(jnp.float32)
+    logits *= d_head ** -0.5
+    kpos = jnp.arange(t)
+    if window:
+        # ring buffer: valid slots are the last `window` positions
+        valid = (kpos <= slot) | (pos >= t)
+    else:
+        valid = kpos <= pos
+    logits = jnp.where(valid[None, None, None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(cache_v.dtype)
+    out = jnp.einsum("bhgst,bthd->bshgd", probs, cache_v)
+    out = out.reshape(b, 1, n_heads * d_head)
+    return jnp.einsum("bsh,hd->bsd", out, p["wo"]), cache_k, cache_v
+
+
+def init_cross_attn(key, d_model, n_heads, n_kv_heads, d_head, *, dtype):
+    p = init_attn(key, d_model, n_heads, n_kv_heads, d_head, bias=False,
+                  dtype=dtype)
+    p["gate"] = jnp.zeros((), dtype)  # tanh-gated (Llama-3.2-Vision style)
+    return p
+
+
+def cross_attention(p, x, kv_feats, *, n_heads, n_kv_heads, d_head,
+                    gated=True):
+    """x: (B,S,d) queries; kv_feats: (B,T,d) encoder/vision features."""
+    b, s, _ = x.shape
+    t = kv_feats.shape[1]
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(b, s, n_heads, d_head)
+    k = jnp.einsum("btd,dh->bth", kv_feats, p["wk"]).reshape(b, t, n_kv_heads, d_head)
+    v = jnp.einsum("btd,dh->bth", kv_feats, p["wv"]).reshape(b, t, n_kv_heads, d_head)
+    out = _sdpa(q, k, v, causal=False, window=0)
+    out = out.reshape(b, s, n_heads * d_head)
+    out = jnp.einsum("bsh,hd->bsd", out, p["wo"])
+    if gated:
+        out = jnp.tanh(p["gate"].astype(jnp.float32)).astype(out.dtype) * out
+    return out

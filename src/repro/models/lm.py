@@ -1,0 +1,572 @@
+"""Unified LM: one config-driven model covering all six assigned families.
+
+Layer stacks are *stacked pytrees* scanned with ``lax.scan`` (compact
+HLO, O(1) compile cost in depth) and rematerialized per layer
+(``jax.checkpoint``).  Families:
+
+* dense   — pre-RMSNorm GQA + (SwiGLU | GELU) MLP, RoPE, optional QKV bias
+* moe     — GQA + capacity-routed MoE FFN (+ optional shared experts)
+* hybrid  — Hymba macro: parallel sliding-window attention + Mamba branch
+            sharing the layer input, then MLP
+* ssm     — xLSTM: mLSTM blocks with every ``slstm_every``-th an sLSTM
+* vlm     — dense decoder; every ``cross_attn_every``-th layer carries a
+            gated cross-attention to (stub) vision patch embeddings.
+            Implemented as a two-level scan (groups × sublayers) so only
+            cross layers own cross-attn parameters.
+* audio   — Whisper enc-dec: bidirectional encoder over (stub) frame
+            embeddings, causal decoder with per-layer cross-attention.
+
+Training loss is computed in sequence chunks (never materializes the
+full (B,S,V) logits).  Decode carries per-layer caches/states stacked on
+a leading layer dim; recurrent families have O(1) decode state, which is
+what makes ``long_500k`` feasible (see DESIGN §5).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from jax.ad_checkpoint import checkpoint_name
+
+from ..configs.base import ArchConfig
+from .attention import (
+    cross_attention, decode_attention, init_attn, init_cross_attn,
+    self_attention,
+)
+from .common import Dtype, dense_init, gelu_mlp, layer_norm, rms_norm, swiglu
+from .moe import init_moe, moe_ffn
+from .sharding import constrain
+from .ssm import (
+    init_mamba, init_mlstm, init_slstm,
+    mamba_init_state, mamba_seq, mamba_seq_assoc, mamba_step,
+    mlstm_init_state, mlstm_seq, mlstm_seq_chunked, mlstm_step,
+    slstm_init_state, slstm_seq, slstm_step,
+)
+
+__all__ = ["init_params", "forward_loss", "init_decode_state", "decode_step"]
+
+LOSS_CHUNK = 512
+
+
+# ======================================================================
+# init
+# ======================================================================
+
+
+def _init_mlp(key, cfg: ArchConfig, dtype):
+    ks = jax.random.split(key, 2)
+    if cfg.mlp_type == "swiglu":
+        k3 = jax.random.fold_in(key, 3)
+        return dict(
+            w_gate=dense_init(ks[0], (cfg.d_model, cfg.d_ff), dtype),
+            w_up=dense_init(ks[1], (cfg.d_model, cfg.d_ff), dtype),
+            w_down=dense_init(k3, (cfg.d_ff, cfg.d_model), dtype),
+        )
+    return dict(
+        w_up=dense_init(ks[0], (cfg.d_model, cfg.d_ff), dtype),
+        b_up=jnp.zeros((cfg.d_ff,), dtype),
+        w_down=dense_init(ks[1], (cfg.d_ff, cfg.d_model), dtype),
+        b_down=jnp.zeros((cfg.d_model,), dtype),
+    )
+
+
+def _init_layer(key, cfg: ArchConfig, dtype):
+    """One decoder layer's params (without VLM cross-attn)."""
+    ks = jax.random.split(key, 4)
+    p: dict[str, Any] = dict(ln1=jnp.ones((cfg.d_model,), dtype))
+    if cfg.family == "ssm":
+        p["mlstm"] = init_mlstm(ks[0], cfg.d_model, cfg.n_heads, dtype=dtype)
+        p["slstm"] = init_slstm(ks[1], cfg.d_model, cfg.n_heads, dtype=dtype)
+        return p
+    p["attn"] = init_attn(
+        ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head,
+        bias=cfg.qkv_bias, dtype=dtype,
+    )
+    p["ln2"] = jnp.ones((cfg.d_model,), dtype)
+    if cfg.family == "hybrid":
+        p["mamba"] = init_mamba(ks[1], cfg.d_model, cfg.ssm_state,
+                                cfg.ssm_conv, dtype=dtype)
+    if cfg.n_experts:
+        p["moe"] = init_moe(ks[2], cfg.d_model, cfg.n_experts, cfg.moe_d_ff,
+                            cfg.n_shared_experts, dtype=dtype)
+    else:
+        p["mlp"] = _init_mlp(ks[3], cfg, dtype)
+    return p
+
+
+def _stack(fn, keys):
+    return jax.vmap(fn)(keys)
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    dt = Dtype(cfg.dtype)
+    dtype = dt.param
+    keys = jax.random.split(key, 8)
+    params: dict[str, Any] = dict(
+        embed=dense_init(keys[0], (cfg.vocab, cfg.d_model), dtype, scale=0.02),
+        final_norm=jnp.ones((cfg.d_model,), dtype),
+    )
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(
+            keys[1], (cfg.d_model, cfg.vocab), dtype
+        )
+
+    if cfg.family == "vlm":
+        g = cfg.cross_attn_every
+        n_groups = cfg.n_layers // g
+        lkeys = jax.random.split(keys[2], n_groups * g).reshape(n_groups, g)
+        params["layers"] = jax.vmap(
+            lambda gk: jax.vmap(lambda k: _init_layer(k, cfg, dtype))(gk)
+        )(lkeys)
+        xkeys = jax.random.split(keys[3], n_groups)
+        params["xattn"] = jax.vmap(
+            lambda k: dict(
+                ln=jnp.ones((cfg.d_model,), dtype),
+                attn=init_cross_attn(k, cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.d_head, dtype=dtype),
+            )
+        )(xkeys)
+    else:
+        lkeys = jax.random.split(keys[2], cfg.n_layers)
+        params["layers"] = _stack(lambda k: _init_layer(k, cfg, dtype), lkeys)
+
+    if cfg.is_encdec:
+        ekeys = jax.random.split(keys[4], cfg.encoder_layers)
+
+        def enc_layer(k):
+            k1, k2 = jax.random.split(k)
+            return dict(
+                ln1=jnp.ones((cfg.d_model,), dtype),
+                ln1_b=jnp.zeros((cfg.d_model,), dtype),
+                attn=init_attn(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.d_head, bias=cfg.qkv_bias, dtype=dtype),
+                ln2=jnp.ones((cfg.d_model,), dtype),
+                ln2_b=jnp.zeros((cfg.d_model,), dtype),
+                mlp=_init_mlp(k2, cfg, dtype),
+            )
+
+        params["encoder"] = _stack(enc_layer, ekeys)
+        params["enc_norm"] = jnp.ones((cfg.d_model,), dtype)
+        params["enc_norm_b"] = jnp.zeros((cfg.d_model,), dtype)
+        params["enc_pos"] = dense_init(
+            keys[5], (cfg.encoder_frames, cfg.d_model), dtype, scale=0.02
+        )
+        xkeys = jax.random.split(keys[6], cfg.n_layers)
+        params["dec_xattn"] = _stack(
+            lambda k: dict(
+                ln=jnp.ones((cfg.d_model,), dtype),
+                attn=init_cross_attn(k, cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.d_head, dtype=dtype),
+            ),
+            xkeys,
+        )
+    return params
+
+
+# ======================================================================
+# layer application
+# ======================================================================
+
+
+def _apply_mlp(cfg, p, x):
+    if cfg.mlp_type == "swiglu":
+        return swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+    return gelu_mlp(x, p["w_up"], p["b_up"], p["w_down"], p["b_down"])
+
+
+def _decoder_layer(cfg: ArchConfig, p, h, aux, *, use_pallas, layer_flag=None):
+    """One decoder layer (train/prefill form). Returns (h, aux)."""
+    akw = dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+               d_head=cfg.d_head, rope_theta=cfg.rope_theta)
+    if cfg.family == "ssm":
+        x = rms_norm(h, p["ln1"])
+
+        def do_mlstm(x):
+            if cfg.mlstm_impl == "chunked":
+                return mlstm_seq_chunked(p["mlstm"], x, n_heads=cfg.n_heads,
+                                         chunk=cfg.mlstm_chunk)
+            return mlstm_seq(p["mlstm"], x, n_heads=cfg.n_heads)
+
+        def do_slstm(x):
+            return slstm_seq(p["slstm"], x, n_heads=cfg.n_heads)
+
+        out = jax.lax.cond(layer_flag, do_slstm, do_mlstm, x)
+        return h + out, aux
+
+    x = rms_norm(h, p["ln1"])
+    attn_out = self_attention(
+        p["attn"], x, causal=True, window=cfg.attn_window,
+        use_pallas=use_pallas, impl=cfg.attn_impl,
+        probs_dtype=jnp.bfloat16 if cfg.attn_probs_dtype == "bfloat16" else None,
+        **akw,
+    )
+    # selective recompute: optionally keep attention outputs across the
+    # backward pass so the O(S²) score chain runs once, not twice
+    attn_out = checkpoint_name(attn_out, "attn_out")
+    if cfg.family == "hybrid":
+        mamba_fn = mamba_seq_assoc if cfg.mamba_impl == "assoc" else mamba_seq
+        attn_out = attn_out + mamba_fn(p["mamba"], x, d_state=cfg.ssm_state)
+        attn_out = attn_out * 0.5  # Hymba mean-fuses the parallel branches
+    h = h + attn_out
+    h = constrain(h, ("dp", "tp", None))
+    x = rms_norm(h, p["ln2"])
+    if cfg.n_experts:
+        y, moe_aux = moe_ffn(p["moe"], x, top_k=cfg.top_k,
+                             capacity_factor=cfg.capacity_factor,
+                             dispatch_sharding=cfg.moe_dispatch_sharding)
+        aux = jax.tree.map(lambda a, b: a + b, aux, moe_aux) if aux else moe_aux
+    else:
+        y = _apply_mlp(cfg, p["mlp"], x)
+    h = h + y
+    return constrain(h, ("dp", "tp", None)), aux
+
+
+def _zero_aux(cfg):
+    if cfg.n_experts:
+        return dict(load_balance=jnp.zeros((), jnp.float32),
+                    z_loss=jnp.zeros((), jnp.float32))
+    return None
+
+
+def _remat(cfg, fn):
+    if cfg.remat_policy == "save_attn":
+        policy = jax.checkpoint_policies.save_only_these_names("attn_out")
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+def _run_decoder(cfg: ArchConfig, params, h, *, vision=None, memory=None,
+                 use_pallas=False):
+    """Scan the decoder stack. h: (B,S,d) embeddings."""
+    aux0 = _zero_aux(cfg)
+
+    if cfg.family == "vlm":
+        def group_body(carry, layer):
+            h, aux = carry
+            gp, xp = layer
+            x = rms_norm(h, xp["ln"])
+            h = h + cross_attention(
+                xp["attn"], x, vision, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+            )
+
+            def sub_body(carry, lp):
+                h, aux = carry
+                h, aux = _decoder_layer(cfg, lp, h, aux, use_pallas=use_pallas)
+                return (h, aux), None
+
+            (h, aux), _ = jax.lax.scan(sub_body, (h, aux), gp)
+            return (h, aux), None
+
+        body = _remat(cfg, group_body)
+        (h, aux), _ = jax.lax.scan(
+            body, (h, aux0), (params["layers"], params["xattn"])
+        )
+        return h, aux
+
+    if cfg.is_encdec:
+        def dec_body(carry, layer):
+            h, aux = carry
+            lp, xp = layer
+            h, aux = _decoder_layer(cfg, lp, h, aux, use_pallas=use_pallas)
+            x = rms_norm(h, xp["ln"])
+            h = h + cross_attention(
+                xp["attn"], x, memory, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head, gated=False,
+            )
+            return (h, aux), None
+
+        body = _remat(cfg, dec_body)
+        (h, aux), _ = jax.lax.scan(
+            body, (h, aux0), (params["layers"], params["dec_xattn"])
+        )
+        return h, aux
+
+    flags = None
+    if cfg.family == "ssm":
+        k = max(cfg.slstm_every, 1)
+        flags = jnp.asarray(
+            [(i % k == k - 1) and cfg.slstm_every > 0
+             for i in range(cfg.n_layers)]
+        )
+
+    def body(carry, layer):
+        h, aux = carry
+        if flags is not None:
+            lp, flag = layer
+            h, aux = _decoder_layer(cfg, lp, h, aux, use_pallas=use_pallas,
+                                    layer_flag=flag)
+        else:
+            h, aux = _decoder_layer(cfg, layer, h, aux, use_pallas=use_pallas)
+        return (h, aux), None
+
+    body = _remat(cfg, body)
+    xs = (params["layers"], flags) if flags is not None else params["layers"]
+    (h, aux), _ = jax.lax.scan(body, (h, aux0), xs)
+    return h, aux
+
+
+def _run_encoder(cfg: ArchConfig, params, frames):
+    """Whisper encoder over (stub) frame embeddings (B,F,d)."""
+    h = frames + params["enc_pos"][None, : frames.shape[1]]
+
+    def body(h, lp):
+        x = layer_norm(h, lp["ln1"], lp["ln1_b"])
+        h = h + self_attention(
+            lp["attn"], x, causal=False, n_heads=cfg.n_heads,
+            n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head, rope_theta=0.0,
+            impl=cfg.attn_impl,
+        )
+        x = layer_norm(h, lp["ln2"], lp["ln2_b"])
+        return h + _apply_mlp(cfg, lp["mlp"], x), None
+
+    h, _ = jax.lax.scan(jax.checkpoint(body), h, params["encoder"])
+    return layer_norm(h, params["enc_norm"], params["enc_norm_b"])
+
+
+# ======================================================================
+# training forward: chunked cross-entropy
+# ======================================================================
+
+
+def _lm_head(cfg, params):
+    return (
+        params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    )
+
+
+def _chunked_loss(cfg, params, h, labels):
+    """h: (B,S,d), labels: (B,S) → mean NLL without full logits."""
+    b, s, d = h.shape
+    chunk = min(cfg.loss_chunk if cfg.loss_chunk > 0 else LOSS_CHUNK, s)
+    n_chunks = s // chunk
+    head = _lm_head(cfg, params)
+    hc = h.reshape(b, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, n_chunks, chunk).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(acc, inp):
+        hx, lx = inp                                   # (B,chunk,d),(B,chunk)
+        logits = jnp.einsum("bsd,dv->bsv", hx, head).astype(jnp.float32)
+        logits = constrain(logits, ("dp", None, "tp"))
+        lse = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, lx[..., None], -1)[..., 0]
+        return acc + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hc, lc))
+    return total / (b * s)
+
+
+def forward_logits(cfg: ArchConfig, params, batch, *, use_pallas=False):
+    """Full (B,S,V) logits — test/eval only (training uses chunked loss)."""
+    tokens = batch["tokens"]
+    emb = jnp.take(params["embed"], tokens, axis=0)
+    memory = None
+    if cfg.is_encdec:
+        memory = _run_encoder(cfg, params, batch["frames"])
+    h, _ = _run_decoder(
+        cfg, params, emb, vision=batch.get("vision"), memory=memory,
+        use_pallas=use_pallas,
+    )
+    h = rms_norm(h, params["final_norm"])
+    return jnp.einsum("bsd,dv->bsv", h, _lm_head(cfg, params)).astype(jnp.float32)
+
+
+def forward_loss(cfg: ArchConfig, params, batch, *, use_pallas=False):
+    """batch: tokens (B,S), labels (B,S) [+ vision/frames stubs].
+
+    Returns (loss, metrics).
+    """
+    tokens = batch["tokens"]
+    emb = jnp.take(params["embed"], tokens, axis=0)
+    emb = constrain(emb, ("dp", "tp", None))
+    memory = None
+    if cfg.is_encdec:
+        memory = _run_encoder(cfg, params, batch["frames"])
+    h, aux = _run_decoder(
+        cfg, params, emb, vision=batch.get("vision"), memory=memory,
+        use_pallas=use_pallas,
+    )
+    h = rms_norm(h, params["final_norm"])
+    loss = _chunked_loss(cfg, params, h, batch["labels"])
+    metrics = dict(nll=loss)
+    if aux:
+        loss = loss + 0.01 * aux["load_balance"] + 0.001 * aux["z_loss"]
+        metrics.update(aux)
+    metrics["loss"] = loss
+    return loss, metrics
+
+
+# ======================================================================
+# decode (single-token serve step)
+# ======================================================================
+
+
+def _layer_cache_shapes(cfg: ArchConfig, batch: int, seq_len: int):
+    """Per-layer decode cache/state ShapeDtypeStructs (leading L stacked)."""
+    dt = Dtype(cfg.dtype).param
+    hkv, dh = cfg.n_kv_heads, cfg.d_head
+    t = min(cfg.attn_window, seq_len) if cfg.attn_window else seq_len
+    c: dict[str, Any] = {}
+    if cfg.family == "ssm":
+        dhh = cfg.d_model // cfg.n_heads
+        c["mlstm"] = dict(
+            c=jnp.zeros((cfg.n_layers, batch, cfg.n_heads, dhh, dhh), jnp.float32),
+            n=jnp.zeros((cfg.n_layers, batch, cfg.n_heads, dhh), jnp.float32),
+            m=jnp.full((cfg.n_layers, batch, cfg.n_heads), -1e30, jnp.float32),
+        )
+        c["slstm"] = dict(
+            c=jnp.zeros((cfg.n_layers, batch, cfg.n_heads, dhh), jnp.float32),
+            n=jnp.zeros((cfg.n_layers, batch, cfg.n_heads, dhh), jnp.float32),
+            m=jnp.full((cfg.n_layers, batch, cfg.n_heads), -1e30, jnp.float32),
+            h=jnp.zeros((cfg.n_layers, batch, cfg.n_heads, dhh), jnp.float32),
+        )
+        return c
+    c["k"] = jnp.zeros((cfg.n_layers, batch, t, hkv, dh), dt)
+    c["v"] = jnp.zeros((cfg.n_layers, batch, t, hkv, dh), dt)
+    if cfg.family == "hybrid":
+        c["mamba_h"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.d_model, cfg.ssm_state), jnp.float32
+        )
+        c["mamba_conv"] = jnp.zeros(
+            (cfg.n_layers, batch, cfg.ssm_conv - 1, cfg.d_model), dt
+        )
+    return c
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, seq_len: int):
+    return dict(
+        cache=_layer_cache_shapes(cfg, batch, seq_len),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def _decode_layer(cfg, p, h, cache_l, pos, *, layer_flag=None):
+    akw = dict(n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+               d_head=cfg.d_head, rope_theta=cfg.rope_theta)
+    new_cache = dict(cache_l)
+    if cfg.family == "ssm":
+        x = rms_norm(h, p["ln1"])
+
+        def do_mlstm(args):
+            x, st = args
+            out, ns = mlstm_step(p["mlstm"], x, st["mlstm"], n_heads=cfg.n_heads)
+            return out, dict(st, mlstm=ns)
+
+        def do_slstm(args):
+            x, st = args
+            out, ns = slstm_step(p["slstm"], x, st["slstm"], n_heads=cfg.n_heads)
+            return out, dict(st, slstm=ns)
+
+        out, new_cache = jax.lax.cond(layer_flag, do_slstm, do_mlstm,
+                                      (x, cache_l))
+        return h + out, new_cache
+
+    x = rms_norm(h, p["ln1"])
+    attn_out, k, v = decode_attention(
+        p["attn"], x, cache_l["k"], cache_l["v"], pos,
+        window=cfg.attn_window, **akw,
+    )
+    new_cache["k"], new_cache["v"] = k, v
+    if cfg.family == "hybrid":
+        m_out, mh, mconv = mamba_step(
+            p["mamba"], x, cache_l["mamba_h"], cache_l["mamba_conv"],
+            d_state=cfg.ssm_state,
+        )
+        new_cache["mamba_h"], new_cache["mamba_conv"] = mh, mconv
+        attn_out = (attn_out + m_out) * 0.5
+    h = h + attn_out
+    x = rms_norm(h, p["ln2"])
+    if cfg.n_experts:
+        y, _ = moe_ffn(p["moe"], x, top_k=cfg.top_k,
+                       capacity_factor=cfg.capacity_factor,
+                       dispatch_sharding=cfg.moe_dispatch_sharding)
+    else:
+        y = _apply_mlp(cfg, p["mlp"], x)
+    return h + y, new_cache
+
+
+def decode_step(cfg: ArchConfig, params, state, tokens, *, memory=None,
+                vision=None):
+    """One decode step. tokens: (B,) int32 → (logits (B,V), new state)."""
+    pos = state["pos"]
+    h = jnp.take(params["embed"], tokens[:, None], axis=0)
+    h = constrain(h, ("dp", None, None))
+
+    if cfg.family == "vlm":
+        g = cfg.cross_attn_every
+
+        def group_body(h, layer):
+            gp, xp, gcache = layer
+            x = rms_norm(h, xp["ln"])
+            h = h + cross_attention(
+                xp["attn"], x, vision, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head,
+            )
+
+            def sub(h, sub_layer):
+                lp, lcache = sub_layer
+                h, nc = _decode_layer(cfg, lp, h, lcache, pos)
+                return h, nc
+
+            h, new_gcache = jax.lax.scan(sub, h, (gp, gcache))
+            return h, new_gcache
+
+        cache = state["cache"]
+        n_groups = cfg.n_layers // g
+        gcaches = jax.tree.map(
+            lambda a: a.reshape((n_groups, g) + a.shape[1:]), cache
+        )
+        h, new_gc = jax.lax.scan(
+            group_body, h, (params["layers"], params["xattn"], gcaches)
+        )
+        new_cache = jax.tree.map(
+            lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), new_gc
+        )
+    elif cfg.is_encdec:
+        def body(h, layer):
+            lp, xp, lcache = layer
+            h, nc = _decode_layer(cfg, lp, h, lcache, pos)
+            x = rms_norm(h, xp["ln"])
+            h = h + cross_attention(
+                xp["attn"], x, memory, n_heads=cfg.n_heads,
+                n_kv_heads=cfg.n_kv_heads, d_head=cfg.d_head, gated=False,
+            )
+            return h, nc
+
+        h, new_cache = jax.lax.scan(
+            body, h, (params["layers"], params["dec_xattn"], state["cache"])
+        )
+    else:
+        flags = None
+        if cfg.family == "ssm":
+            k = max(cfg.slstm_every, 1)
+            flags = jnp.asarray(
+                [(i % k == k - 1) and cfg.slstm_every > 0
+                 for i in range(cfg.n_layers)]
+            )
+
+        def body(h, layer):
+            if flags is not None:
+                lp, lcache, flag = layer
+                h, nc = _decode_layer(cfg, lp, h, lcache, pos, layer_flag=flag)
+            else:
+                lp, lcache = layer
+                h, nc = _decode_layer(cfg, lp, h, lcache, pos)
+            return h, nc
+
+        xs = (
+            (params["layers"], state["cache"], flags)
+            if flags is not None
+            else (params["layers"], state["cache"])
+        )
+        h, new_cache = jax.lax.scan(body, h, xs)
+
+    h = rms_norm(h, params["final_norm"])
+    logits = jnp.einsum("bsd,dv->bsv", h, _lm_head(cfg, params))
+    logits = constrain(logits, ("dp", None, "tp"))
+    return logits[:, 0].astype(jnp.float32), dict(cache=new_cache, pos=pos + 1)

@@ -1,0 +1,231 @@
+"""Sharding rules: DP/FSDP/TP/EP/SP over the production mesh.
+
+Mesh axes: ``("data","model")`` single-pod, ``("pod","data","model")``
+multi-pod.  Policy:
+
+* **Parameters** — tensor-parallel over ``model`` (attention heads, FFN
+  hidden, MoE experts, vocab) and FSDP over ``data`` (the remaining
+  large dim).  Across ``pod`` parameters are *replicated* (DP between
+  pods, FSDP+TP within a pod) — inter-pod links are the slowest, so
+  only gradient all-reduce crosses them.
+* **Activations** — batch over (``pod``, ``data``); the residual stream
+  is sequence-sharded over ``model`` between blocks (Megatron-SP style:
+  norms/elementwise run sequence-parallel, attention/FFN gather what
+  they need — GSPMD inserts those collectives from the annotations).
+* **Decode caches** — batch over ``data`` when batch ≥ axis, otherwise
+  the KV sequence dim is sharded (sequence-parallel decode, used by
+  ``long_500k``).
+
+Functions degrade to no-ops without a mesh context, so the same model
+code runs single-device tests untouched.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "MeshCtx", "set_mesh_ctx", "get_mesh_ctx", "constrain",
+    "param_specs", "named_sharding_tree", "batch_spec", "cache_spec",
+]
+
+_CTX: "MeshCtx | None" = None
+
+
+class MeshCtx:
+    def __init__(self, mesh: Mesh):
+        self.mesh = mesh
+        names = mesh.axis_names
+        self.tp = "model" if "model" in names else None
+        self.fsdp = tuple(a for a in ("data",) if a in names)
+        self.dp = tuple(a for a in ("pod", "data") if a in names)
+
+    def size(self, axis) -> int:
+        if axis is None:
+            return 1
+        if isinstance(axis, tuple):
+            return int(np.prod([self.mesh.shape[a] for a in axis]))
+        return int(self.mesh.shape[axis])
+
+
+def set_mesh_ctx(mesh: Mesh | None) -> MeshCtx | None:
+    global _CTX
+    _CTX = MeshCtx(mesh) if mesh is not None else None
+    return _CTX
+
+
+def get_mesh_ctx() -> "MeshCtx | None":
+    return _CTX
+
+
+def _logical_to_axis(ctx: MeshCtx, name):
+    if name is None:
+        return None
+    if name == "dp":
+        return ctx.dp if len(ctx.dp) > 1 else (ctx.dp[0] if ctx.dp else None)
+    if name == "fsdp":
+        return ctx.fsdp if len(ctx.fsdp) > 1 else (ctx.fsdp[0] if ctx.fsdp else None)
+    if name == "tp":
+        return ctx.tp
+    if name == "dp+tp":
+        axes = tuple(a for a in (*ctx.dp, ctx.tp) if a)
+        return axes
+    raise ValueError(name)
+
+
+def _fits(ctx: MeshCtx, dim: int, axis) -> bool:
+    return axis is not None and dim % ctx.size(axis) == 0
+
+
+def logical_spec(ctx: MeshCtx, shape, logical) -> P:
+    """Map logical axis names to mesh axes, dropping non-divisible ones."""
+    out = []
+    for dim, name in zip(shape, logical):
+        ax = _logical_to_axis(ctx, name)
+        out.append(ax if _fits(ctx, dim, ax) else None)
+    return P(*out)
+
+
+def constrain(x, logical):
+    """with_sharding_constraint with logical names; no-op without a mesh."""
+    ctx = _CTX
+    if ctx is None:
+        return x
+    spec = logical_spec(ctx, x.shape, logical)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec)
+    )
+
+
+# ---------------------------------------------------------------- params
+
+# (regex on the flattened param path, logical spec per trailing dims).
+# Paths look like "layers/attn/wq", "encoder/layers/mlp/w_up", "embed"...
+# Leading stack dims (layer / group) are always unsharded (None).
+_RULES: list[tuple[str, tuple]] = [
+    (r"(^|/)embed$", ("tp", "fsdp")),              # (V, d)
+    (r"(^|/)lm_head$", ("fsdp", "tp")),            # (d, V)
+    (r"(^|/)pos_embed$", (None, "fsdp")),          # (S, d)
+    (r"/(wq|wk|wv|w_gate|w_up|wz|in_proj|x_proj|ogate|wo_gate|sh_gate|sh_up)$",
+     ("fsdp", "tp")),                              # (d, h)
+    (r"/(wo|w_down|out_proj|dt_proj|sh_down)$", ("tp", "fsdp")),  # (h, d)
+    (r"/router$", ("fsdp", "tp")),                 # (d, E)
+    (r"/moe/(w_gate|w_up|w_down)$", ("tp", "fsdp", None)),  # (E, d, f) EP
+    (r"/(bq|bk|bv|b_up|ln.*|.*norm.*|gate|dt_bias|d_skip|bf|bi)$", None),
+    (r"/(conv_w|a_log)$", None),
+    (r"/(wi|wf)$", (None, None)),
+    (r"/rz$", (None, None, None)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def spec_for_param(ctx: MeshCtx, path: str, shape, extra_rules=None) -> P:
+    logical = None
+    for pat, rule in (list(extra_rules or []) + _RULES):
+        if re.search(pat, path):
+            logical = rule
+            break
+    if logical is None:
+        # fallback: shard the largest divisible dim over tp, next over fsdp
+        if len(shape) == 0:
+            return P()
+        order = np.argsort(shape)[::-1]
+        axes = [None] * len(shape)
+        for cand, name in zip(order, ("tp", "fsdp")):
+            ax = _logical_to_axis(ctx, name)
+            if _fits(ctx, shape[cand], ax):
+                axes[cand] = ax
+        return P(*axes)
+    if len(shape) > len(logical):  # leading stack dims
+        logical = (None,) * (len(shape) - len(logical)) + tuple(logical)
+    else:
+        logical = tuple(logical[-len(shape):]) if len(shape) else ()
+    out = []
+    for dim, name in zip(shape, logical):
+        ax = _logical_to_axis(ctx, name)
+        out.append(ax if _fits(ctx, dim, ax) else None)
+    return P(*out)
+
+
+def param_specs(ctx: MeshCtx, params_shapes: Any, extra_rules=None):
+    """PartitionSpec tree for a param (or optimizer-state) shape tree.
+
+    ``extra_rules`` prepend to the table (e.g. grouped-MoE makes expert
+    weights EP-only: replicated over data, E over model).
+    """
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: spec_for_param(ctx, _path_str(path), leaf.shape,
+                                          extra_rules),
+        params_shapes,
+    )
+
+
+EP_ONLY_EXPERT_RULES = [
+    # grouped-MoE: expert weights are EP-sharded only (E over model),
+    # replicated across data — expert einsums become collective-free
+    (r"/moe/(w_gate|w_up|w_down)$", ("tp", None, None)),
+]
+
+
+def named_sharding_tree(ctx: MeshCtx, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(ctx.mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------- inputs
+
+
+def batch_spec(ctx: MeshCtx, shape) -> P:
+    """Token batches: (B, S) or embedding stubs (B, T, d) — batch over dp."""
+    ax = _logical_to_axis(ctx, "dp")
+    if not _fits(ctx, shape[0], ax):
+        # small-batch fallback: try data only, else replicate
+        ax = ctx.fsdp[0] if ctx.fsdp and shape[0] % ctx.size(ctx.fsdp[0]) == 0 else None
+    return P(*([ax] + [None] * (len(shape) - 1)))
+
+
+def cache_spec(ctx: MeshCtx, shape, *, seq_axis: int, batch_axis: int = 1) -> P:
+    """KV caches (L, B, T, H, D) or recurrent states (L, B, ...).
+
+    Shard batch over dp when divisible; otherwise shard the sequence axis
+    (sequence-parallel decode for long_500k).  Heads over tp if divisible,
+    else the sequence axis picks up tp too.
+    """
+    axes: list = [None] * len(shape)
+    dp_ax = _logical_to_axis(ctx, "dp")
+    used_tp = False
+    if _fits(ctx, shape[batch_axis], dp_ax):
+        axes[batch_axis] = dp_ax
+    elif seq_axis is not None and _fits(ctx, shape[seq_axis], dp_ax):
+        axes[seq_axis] = dp_ax
+    # heads (dim -2) over tp
+    if len(shape) >= 2 and ctx.tp and shape[-2] % ctx.size(ctx.tp) == 0:
+        axes[-2] = ctx.tp
+        used_tp = True
+    if not used_tp and seq_axis is not None and axes[seq_axis] is None and _fits(
+        ctx, shape[seq_axis], ctx.tp
+    ):
+        axes[seq_axis] = ctx.tp
+    elif not used_tp and seq_axis is not None and axes[seq_axis] == dp_ax:
+        both = _logical_to_axis(ctx, "dp+tp")
+        if _fits(ctx, shape[seq_axis], both):
+            axes[seq_axis] = both
+    return P(*axes)

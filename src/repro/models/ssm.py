@@ -1,0 +1,426 @@
+"""Recurrent sequence mixers: Mamba (S6) for the hybrid family and
+mLSTM / sLSTM for the xLSTM family.
+
+All three expose a *sequence* form (used in training/prefill; a
+``lax.scan`` over time with ``jax.checkpoint`` chunking so the backward
+pass stores only chunk-boundary states) and a *step* form (single-token
+decode with explicit carried state — these models have O(1) decode
+state, which is what makes the ``long_500k`` shape tractable).
+
+The recurrent scan form is the paper-faithful baseline; the chunkwise
+matmul-parallel form of mLSTM is a §Perf iteration (see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import dense_init
+
+__all__ = [
+    "init_mamba", "mamba_seq", "mamba_step", "mamba_init_state",
+    "init_mlstm", "mlstm_seq", "mlstm_step", "mlstm_init_state",
+    "init_slstm", "slstm_seq", "slstm_step", "slstm_init_state",
+]
+
+_CHUNK = 256  # remat chunk for sequence scans
+
+
+def _chunked_scan(step_fn, state, xs, length):
+    """scan over time with jax.checkpoint per chunk (bounded backward mem)."""
+    if length <= _CHUNK or length % _CHUNK != 0:
+        return jax.lax.scan(step_fn, state, xs)
+
+    @jax.checkpoint
+    def chunk(state, xs_chunk):
+        return jax.lax.scan(step_fn, state, xs_chunk)
+
+    n_chunks = length // _CHUNK
+    xs_c = jax.tree.map(
+        lambda a: a.reshape((n_chunks, _CHUNK) + a.shape[1:]), xs
+    )
+    state, ys = jax.lax.scan(chunk, state, xs_c)
+    ys = jax.tree.map(lambda a: a.reshape((length,) + a.shape[2:]), ys)
+    return state, ys
+
+
+# ======================================================================
+# Mamba (S6) — selective state space, diagonal A
+# ======================================================================
+
+
+def init_mamba(key, d_model, d_state, d_conv, *, dtype):
+    d_in = d_model  # hybrid branch keeps d_inner == d_model (DESIGN §5)
+    dt_rank = max(1, d_model // 16)
+    ks = jax.random.split(key, 6)
+    a = np.tile(np.arange(1, d_state + 1, dtype=np.float32), (d_in, 1))
+    return dict(
+        in_proj=dense_init(ks[0], (d_model, 2 * d_in), dtype),
+        conv_w=dense_init(ks[1], (d_conv, d_in), dtype, scale=0.5),
+        x_proj=dense_init(ks[2], (d_in, dt_rank + 2 * d_state), dtype),
+        dt_proj=dense_init(ks[3], (dt_rank, d_in), dtype),
+        dt_bias=jnp.zeros((d_in,), jnp.float32) + 0.5,
+        a_log=jnp.asarray(np.log(a)),                 # (d_in, N) f32
+        d_skip=jnp.ones((d_in,), jnp.float32),
+        out_proj=dense_init(ks[4], (d_in, d_model), dtype),
+    )
+
+
+def _mamba_inputs(p, x, d_state):
+    """Shared projections: x (B,S,d) → (u, z, delta, bmat, cmat)."""
+    d_in = p["dt_proj"].shape[1]
+    dt_rank = p["dt_proj"].shape[0]
+    uz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    u, z = jnp.split(uz, 2, axis=-1)                  # (B,S,d_in) each
+    # depthwise causal conv over seq
+    w = p["conv_w"]                                   # (K, d_in)
+    k = w.shape[0]
+    upad = jnp.pad(u, ((0, 0), (k - 1, 0), (0, 0)))
+    conv = sum(
+        upad[:, i : i + u.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    u = jax.nn.silu(conv)
+    proj = jnp.einsum("bsd,de->bse", u, p["x_proj"])
+    dt, b, c = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("bsr,rd->bsd", dt, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"]
+    )                                                  # (B,S,d_in) f32
+    return u, z, delta, b.astype(jnp.float32), c.astype(jnp.float32)
+
+
+def mamba_init_state(batch, d_model, d_state):
+    return jnp.zeros((batch, d_model, d_state), jnp.float32)
+
+
+def mamba_seq(p, x, *, d_state):
+    """x: (B,S,d) → (B,S,d); recurrent scan over S."""
+    u, z, delta, b, c = _mamba_inputs(p, x, d_state)
+    a = -jnp.exp(p["a_log"])                           # (d_in, N)
+
+    def step(h, inp):
+        u_t, dt_t, b_t, c_t = inp                     # (B,d_in),(B,d_in),(B,N),(B,N)
+        da = jnp.exp(dt_t[..., None] * a[None])       # (B,d_in,N)
+        h = da * h + (dt_t * u_t.astype(jnp.float32))[..., None] * b_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = (
+        u.transpose(1, 0, 2),
+        delta.transpose(1, 0, 2),
+        b.transpose(1, 0, 2),
+        c.transpose(1, 0, 2),
+    )
+    h0 = mamba_init_state(x.shape[0], a.shape[0], d_state)
+    _, ys = _chunked_scan(step, h0, xs, x.shape[1])
+    y = ys.transpose(1, 0, 2).astype(x.dtype)         # (B,S,d_in)
+    y = y + u * p["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bsd,de->bse", y, p["out_proj"])
+
+
+def mamba_seq_assoc(p, x, *, d_state):
+    """Mamba via ``lax.associative_scan`` (§Perf iteration for hybrid).
+
+    The diagonal SSM recurrence h_t = a_t ⊙ h_{t-1} + b_t is associative
+    in (a, b), so a Blelchloch scan computes all states in O(log S)
+    parallel passes over (B,S,d,N) tensors — the per-timestep state
+    round-trips of the sequential scan (the dominant HBM term in the
+    baseline roofline) collapse into a few full-tensor sweeps, and the
+    sequence axis becomes shardable.  Exact same math as ``mamba_seq``.
+    """
+    u, z, delta, bmat, cmat = _mamba_inputs(p, x, d_state)
+    a = -jnp.exp(p["a_log"])                            # (d_in, N)
+    da = jnp.exp(delta[..., None] * a[None, None])      # (B,S,d,N)
+    bu = (delta * u.astype(jnp.float32))[..., None] * bmat[:, :, None, :]
+
+    def comb(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, ar * bl + br
+
+    _, hs = jax.lax.associative_scan(comb, (da, bu), axis=1)
+    y = jnp.einsum("bsdn,bsn->bsd", hs, cmat).astype(x.dtype)
+    y = y + u * p["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("bsd,de->bse", y, p["out_proj"])
+
+
+def mamba_step(p, x, h, conv_buf, *, d_state):
+    """Single-token decode. x: (B,1,d); h: (B,d_in,N); conv_buf: (B,K-1,d_in)."""
+    d_in = p["dt_proj"].shape[1]
+    dt_rank = p["dt_proj"].shape[0]
+    uz = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+    u, z = jnp.split(uz, 2, axis=-1)
+    w = p["conv_w"]
+    k = w.shape[0]
+    seq = jnp.concatenate([conv_buf, u[:, 0:1, :].astype(conv_buf.dtype)], 1)
+    conv = jnp.einsum("bkd,kd->bd", seq[:, -k:, :], w)
+    new_buf = seq[:, 1:, :]
+    u1 = jax.nn.silu(conv)                             # (B,d_in)
+    proj = jnp.einsum("bd,de->be", u1, p["x_proj"])
+    dt, b, c = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    delta = jax.nn.softplus(
+        jnp.einsum("br,rd->bd", dt, p["dt_proj"]).astype(jnp.float32)
+        + p["dt_bias"]
+    )
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(delta[..., None] * a[None])
+    h = da * h + (delta * u1.astype(jnp.float32))[..., None] * b.astype(
+        jnp.float32
+    )[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, c.astype(jnp.float32)).astype(x.dtype)
+    y = y + u1 * p["d_skip"].astype(x.dtype)
+    y = y * jax.nn.silu(z[:, 0])
+    return jnp.einsum("bd,de->be", y, p["out_proj"])[:, None, :], h, new_buf
+
+
+# ======================================================================
+# mLSTM — matrix memory with exponential gating (xLSTM)
+# ======================================================================
+
+
+def init_mlstm(key, d_model, n_heads, *, dtype):
+    dh = d_model // n_heads
+    ks = jax.random.split(key, 6)
+    return dict(
+        wq=dense_init(ks[0], (d_model, d_model), dtype),
+        wk=dense_init(ks[1], (d_model, d_model), dtype),
+        wv=dense_init(ks[2], (d_model, d_model), dtype),
+        wi=dense_init(ks[3], (d_model, n_heads), jnp.float32, scale=0.01),
+        wf=dense_init(ks[4], (d_model, n_heads), jnp.float32, scale=0.01),
+        bf=jnp.ones((n_heads,), jnp.float32) * 3.0,   # open forget gates
+        bi=jnp.zeros((n_heads,), jnp.float32),
+        wo=dense_init(ks[5], (d_model, d_model), dtype),
+        ogate=dense_init(jax.random.fold_in(key, 7), (d_model, d_model), dtype),
+    )
+
+
+def mlstm_init_state(batch, n_heads, dh):
+    return dict(
+        c=jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, n_heads, dh), jnp.float32),
+        m=jnp.full((batch, n_heads), -1e30, jnp.float32),
+    )
+
+
+def _mlstm_gates(p, x):
+    i_pre = jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["wi"]) + p["bi"]
+    f_pre = jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["wf"]) + p["bf"]
+    return i_pre, f_pre
+
+
+def _mlstm_qkv(p, x, n_heads):
+    b, s, d = x.shape
+    dh = d // n_heads
+    q = jnp.einsum("bsd,de->bse", x, p["wq"]).reshape(b, s, n_heads, dh)
+    k = jnp.einsum("bsd,de->bse", x, p["wk"]).reshape(b, s, n_heads, dh)
+    v = jnp.einsum("bsd,de->bse", x, p["wv"]).reshape(b, s, n_heads, dh)
+    return q, k * (dh ** -0.5), v
+
+
+def _mlstm_cell(state, q_t, k_t, v_t, i_pre, f_pre):
+    """One timestep of the stabilized mLSTM recurrence (f32)."""
+    c, n, m = state["c"], state["n"], state["m"]
+    m_new = jnp.maximum(f_pre + m, i_pre)              # log-space stabilizer
+    i_g = jnp.exp(i_pre - m_new)[..., None]            # (B,H,1)
+    f_g = jnp.exp(f_pre + m - m_new)[..., None]
+    n = f_g * n + i_g * k_t
+    c = f_g[..., None] * c + i_g[..., None] * (
+        v_t[..., :, None] * k_t[..., None, :]
+    )                                                  # (B,H,dv,dk)
+    denom = jnp.maximum(
+        jnp.abs(jnp.einsum("bhk,bhk->bh", n, q_t)), jnp.exp(-m_new)
+    )[..., None]
+    h = jnp.einsum("bhvk,bhk->bhv", c, q_t) / denom
+    return dict(c=c, n=n, m=m_new), h
+
+
+def mlstm_seq_chunked(p, x, *, n_heads, chunk: int = 64):
+    """Chunkwise-parallel stabilized mLSTM (§Perf iteration for xlstm).
+
+    The per-timestep recurrence materializes the (B,H,dh,dh) matrix state
+    every step — O(S·dh²) HBM traffic that dominated the baseline roofline
+    (memory term ~2500s for xlstm×train_4k).  The chunkwise form keeps the
+    state only at chunk boundaries and computes intra-chunk interactions
+    as (W×dh)·(dh×W) matmuls with a log-space decay mask — O(S·dh²/W)
+    state traffic and MXU-shaped compute.  Numerically equivalent to
+    ``mlstm_seq`` (same stabilization; tested to ~1e-5).
+    """
+    b, s, d = x.shape
+    h_ = n_heads
+    dh = d // h_
+    w = min(chunk, s)
+    assert s % w == 0
+    nc = s // w
+    q, k, v = _mlstm_qkv(p, x, n_heads)
+    i_pre, f_pre = _mlstm_gates(p, x)                  # (B,S,H) f32
+
+    # chunk views: (nc, B, H, W, dh) / (nc, B, H, W)
+    def cview(a):
+        if a.ndim == 4:
+            return a.reshape(b, nc, w, h_, -1).transpose(1, 0, 3, 2, 4)
+        return a.reshape(b, nc, w, h_).transpose(1, 0, 3, 2)
+
+    qc, kc, vc = cview(q.astype(jnp.float32)), cview(k.astype(jnp.float32)), \
+        cview(v.astype(jnp.float32))
+    ic, fc = cview(i_pre), cview(f_pre)
+
+    def chunk_step(carry, inp):
+        c_hat, n_hat, m = carry                       # C·e^{-m}; (B,H,dh,dh)
+        qw, kw, vw, iw, fw = inp                      # (B,H,W,*)
+        csum = jnp.cumsum(fw, axis=-1)                # F_t within chunk
+        ftot = csum[..., -1:]                         # (B,H,1)
+        # D[t,τ] = F_t - F_τ + i_τ  (τ ≤ t), else -inf
+        dmat = csum[..., :, None] - csum[..., None, :] + iw[..., None, :]
+        tri = jnp.tril(jnp.ones((w, w), bool))
+        dmat = jnp.where(tri, dmat, -1e30)
+        m_intra = dmat.max(-1)                        # (B,H,W)
+        m_inter = m[..., None] + csum                 # (B,H,W)
+        m_t = jnp.maximum(m_intra, m_inter)
+        # intra-chunk scores
+        scores = jnp.einsum("bhtd,bhsd->bhts", qw, kw)
+        wmat = jnp.where(tri, jnp.exp(dmat - m_t[..., None]), 0.0)
+        intra = jnp.einsum("bhts,bhsd->bhtd", scores * wmat, vw)
+        intra_n = jnp.sum(scores * wmat, -1)          # (B,H,W)
+        # inter-chunk (carry) contribution
+        lam = jnp.exp(m_inter - m_t)                  # (B,H,W)
+        inter = jnp.einsum("bhvk,bhtk->bhtv", c_hat, qw) * lam[..., None]
+        inter_n = jnp.einsum("bhk,bhtk->bht", n_hat, qw) * lam
+        denom = jnp.maximum(jnp.abs(inter_n + intra_n), jnp.exp(-m_t))
+        h_out = (inter + intra) / denom[..., None]
+        # boundary state update
+        m_new = jnp.maximum(m + ftot[..., 0],
+                            (ftot - csum + iw).max(-1))
+        wgt = jnp.exp(ftot - csum + iw - m_new[..., None])   # (B,H,W)
+        c_new = (
+            jnp.exp(m + ftot[..., 0] - m_new)[..., None, None] * c_hat
+            + jnp.einsum("bhtv,bhtk->bhvk", vw * wgt[..., None], kw)
+        )
+        n_new = (
+            jnp.exp(m + ftot[..., 0] - m_new)[..., None] * n_hat
+            + jnp.einsum("bht,bhtk->bhk", wgt, kw)
+        )
+        return (c_new, n_new, m_new), h_out
+
+    c0 = jnp.zeros((b, h_, dh, dh), jnp.float32)
+    n0 = jnp.zeros((b, h_, dh), jnp.float32)
+    m0 = jnp.full((b, h_), -1e30, jnp.float32)
+    (_, _, _), hs = jax.lax.scan(chunk_step, (c0, n0, m0), (qc, kc, vc, ic, fc))
+    # (nc,B,H,W,dh) → (B,S,d)
+    hseq = hs.transpose(1, 0, 3, 2, 4).reshape(b, s, d).astype(x.dtype)
+    o = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["ogate"]))
+    return jnp.einsum("bsd,de->bse", hseq * o, p["wo"])
+
+
+def mlstm_seq(p, x, *, n_heads):
+    b, s, d = x.shape
+    dh = d // n_heads
+    q, k, v = _mlstm_qkv(p, x, n_heads)
+    i_pre, f_pre = _mlstm_gates(p, x)
+
+    def step(state, inp):
+        q_t, k_t, v_t, ip, fp = inp
+        state, h = _mlstm_cell(
+            state, q_t.astype(jnp.float32), k_t.astype(jnp.float32),
+            v_t.astype(jnp.float32), ip, fp,
+        )
+        return state, h
+
+    xs = tuple(
+        a.transpose(1, 0, 2, 3) if a.ndim == 4 else a.transpose(1, 0, 2)
+        for a in (q, k, v, i_pre, f_pre)
+    )
+    _, hs = _chunked_scan(step, mlstm_init_state(b, n_heads, dh), xs, s)
+    h = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    o = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["ogate"]))
+    return jnp.einsum("bsd,de->bse", h * o, p["wo"])
+
+
+def mlstm_step(p, x, state, *, n_heads):
+    """x: (B,1,d) single-token decode."""
+    b, _, d = x.shape
+    q, k, v = _mlstm_qkv(p, x, n_heads)
+    i_pre, f_pre = _mlstm_gates(p, x)
+    state, h = _mlstm_cell(
+        state, q[:, 0].astype(jnp.float32), k[:, 0].astype(jnp.float32),
+        v[:, 0].astype(jnp.float32), i_pre[:, 0], f_pre[:, 0],
+    )
+    h = h.reshape(b, 1, d).astype(x.dtype)
+    o = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["ogate"]))
+    return jnp.einsum("bsd,de->bse", h * o, p["wo"]), state
+
+
+# ======================================================================
+# sLSTM — scalar memory, per-head recurrent connection (xLSTM)
+# ======================================================================
+
+
+def init_slstm(key, d_model, n_heads, *, dtype):
+    dh = d_model // n_heads
+    ks = jax.random.split(key, 6)
+    return dict(
+        wz=dense_init(ks[0], (d_model, d_model), dtype),
+        wi=dense_init(ks[1], (d_model, n_heads), jnp.float32, scale=0.01),
+        wf=dense_init(ks[2], (d_model, n_heads), jnp.float32, scale=0.01),
+        wo_gate=dense_init(ks[3], (d_model, d_model), dtype),
+        rz=dense_init(ks[4], (n_heads, dh, dh), jnp.float32, scale=0.1),
+        bf=jnp.ones((n_heads,), jnp.float32) * 3.0,
+        bi=jnp.zeros((n_heads,), jnp.float32),
+        wo=dense_init(ks[5], (d_model, d_model), dtype),
+    )
+
+
+def slstm_init_state(batch, n_heads, dh):
+    return dict(
+        c=jnp.zeros((batch, n_heads, dh), jnp.float32),
+        n=jnp.zeros((batch, n_heads, dh), jnp.float32),
+        m=jnp.full((batch, n_heads), -1e30, jnp.float32),
+        h=jnp.zeros((batch, n_heads, dh), jnp.float32),
+    )
+
+
+def _slstm_cell(p, state, z_in, i_pre, f_pre):
+    c, n, m, h_prev = state["c"], state["n"], state["m"], state["h"]
+    z = jnp.tanh(z_in + jnp.einsum("bhk,hkj->bhj", h_prev, p["rz"]))
+    m_new = jnp.maximum(f_pre + m, i_pre)
+    i_g = jnp.exp(i_pre - m_new)[..., None]
+    f_g = jnp.exp(f_pre + m - m_new)[..., None]
+    c = f_g * c + i_g * z
+    n = f_g * n + i_g
+    h = c / jnp.maximum(n, 1e-6)
+    return dict(c=c, n=n, m=m_new, h=h), h
+
+
+def slstm_seq(p, x, *, n_heads):
+    b, s, d = x.shape
+    dh = d // n_heads
+    z_in = jnp.einsum("bsd,de->bse", x, p["wz"]).reshape(b, s, n_heads, dh)
+    i_pre = jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["wi"]) + p["bi"]
+    f_pre = jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["wf"]) + p["bf"]
+
+    def step(state, inp):
+        z_t, ip, fp = inp
+        return _slstm_cell(p, state, z_t.astype(jnp.float32), ip, fp)
+
+    xs = (z_in.transpose(1, 0, 2, 3), i_pre.transpose(1, 0, 2),
+          f_pre.transpose(1, 0, 2))
+    _, hs = _chunked_scan(step, slstm_init_state(b, n_heads, dh), xs, s)
+    h = hs.transpose(1, 0, 2, 3).reshape(b, s, d).astype(x.dtype)
+    o = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["wo_gate"]))
+    return jnp.einsum("bsd,de->bse", h * o, p["wo"])
+
+
+def slstm_step(p, x, state, *, n_heads):
+    b, _, d = x.shape
+    dh = d // n_heads
+    z_in = jnp.einsum("bsd,de->bse", x, p["wz"]).reshape(b, n_heads, dh)
+    i_pre = (jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["wi"]) + p["bi"])[:, 0]
+    f_pre = (jnp.einsum("bsd,dh->bsh", x.astype(jnp.float32), p["wf"]) + p["bf"])[:, 0]
+    state, h = _slstm_cell(p, state, z_in.astype(jnp.float32), i_pre, f_pre)
+    h = h.reshape(b, 1, d).astype(x.dtype)
+    o = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x, p["wo_gate"]))
+    return jnp.einsum("bsd,de->bse", h * o, p["wo"]), state

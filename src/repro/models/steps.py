@@ -1,0 +1,170 @@
+"""Train / serve steps + input_specs — the dry-run and driver contract.
+
+``make_train_step(cfg)`` returns a pure function
+``(params, opt_state, batch, step) -> (params, opt_state, metrics)``
+(loss → grad → AdamW, all inside one jit).  ``make_serve_step(cfg)``
+returns ``(params, state, tokens[, stubs]) -> (logits, state)``.
+
+``input_specs(cfg, shape)`` produces ShapeDtypeStruct stand-ins for
+every model input of an (arch × shape) cell — weak-type-correct,
+shardable, no device allocation — and ``abstract_params``/
+``abstract_opt_state``/``abstract_decode_state`` give the state trees
+the same way (via ``jax.eval_shape``), so a full production-mesh
+``lower().compile()`` never materializes a byte.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig, ShapeSpec
+from ..optim import adamw_init, adamw_update, cosine_schedule
+from . import lm
+from .common import Dtype
+
+__all__ = [
+    "make_train_step", "make_serve_step", "input_specs",
+    "abstract_params", "abstract_opt_state", "abstract_decode_state",
+    "supports_shape",
+]
+
+
+def supports_shape(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Assignment rules: which (arch × shape) cells are defined."""
+    if shape.name == "long_500k":
+        if cfg.family not in ("hybrid", "ssm"):
+            return False, (
+                "long_500k needs sub-quadratic attention; "
+                f"{cfg.name} is pure full-attention (see DESIGN §5)"
+            )
+    return True, ""
+
+
+# ---------------------------------------------------------------- inputs
+
+
+def _token_spec(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    dt = Dtype(cfg.dtype).param
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind in ("train", "prefill"):
+        batch = dict(
+            tokens=_token_spec((b, s)),
+            labels=_token_spec((b, s)),
+        )
+        if cfg.family == "vlm":
+            batch["vision"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision_tokens, cfg.d_model), dt
+            )
+        if cfg.is_encdec:
+            batch["frames"] = jax.ShapeDtypeStruct(
+                (b, cfg.encoder_frames, cfg.d_model), dt
+            )
+        return batch
+    # decode: one new token against a seq_len-deep cache
+    out = dict(tokens=_token_spec((b,)))
+    if cfg.family == "vlm":
+        out["vision"] = jax.ShapeDtypeStruct((b, cfg.vision_tokens, cfg.d_model), dt)
+    if cfg.is_encdec:
+        out["memory"] = jax.ShapeDtypeStruct((b, cfg.encoder_frames, cfg.d_model), dt)
+    return out
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(
+        lambda: lm.init_params(cfg, jax.random.key(0))
+    )
+
+
+def abstract_opt_state(cfg: ArchConfig):
+    params = abstract_params(cfg)
+    return jax.eval_shape(adamw_init, params)
+
+
+def abstract_decode_state(cfg: ArchConfig, shape: ShapeSpec):
+    return jax.eval_shape(
+        lambda: lm.init_decode_state(cfg, shape.global_batch, shape.seq_len)
+    )
+
+
+# ----------------------------------------------------------------- steps
+
+
+def make_train_step(cfg: ArchConfig, *, base_lr=3e-4, total_steps=10_000,
+                    warmup_steps=200, use_pallas=False, grad_compress=False,
+                    microbatch: int = 0):
+    sched = cosine_schedule(base_lr, warmup_steps, total_steps)
+
+    def loss_fn(params, batch):
+        return lm.forward_loss(cfg, params, batch, use_pallas=use_pallas)
+
+    def train_step(params, opt_state, batch, step):
+        if microbatch and microbatch > 1:
+            # gradient accumulation over microbatches via scan
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((microbatch, b // microbatch) + x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(acc, mbatch):
+                (l, m), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mbatch
+                )
+                acc_g, acc_l = acc
+                return (
+                    jax.tree.map(jnp.add, acc_g, g),
+                    acc_l + l,
+                ), None
+
+            zero_g = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (gsum, lsum), _ = jax.lax.scan(
+                acc_body, (zero_g, jnp.zeros((), jnp.float32)), mb
+            )
+            grads = jax.tree.map(lambda g: g / microbatch, gsum)
+            loss = lsum / microbatch
+            metrics = dict(loss=loss, nll=loss)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True
+            )(params, batch)
+        lr = sched(step)
+        params, opt_state, gnorm = adamw_update(
+            params, grads, opt_state, lr=lr
+        )
+        metrics = dict(metrics, grad_norm=gnorm, lr=lr)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, *, use_pallas=False):
+    """Forward-only loss eval at prefill shape (inference-prefill cell)."""
+
+    def prefill_step(params, batch):
+        loss, metrics = lm.forward_loss(cfg, params, batch,
+                                        use_pallas=use_pallas)
+        return metrics
+
+    return prefill_step
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, state, batch):
+        logits, state = lm.decode_step(
+            cfg, params, state, batch["tokens"],
+            memory=batch.get("memory"), vision=batch.get("vision"),
+        )
+        return logits, state
+
+    return serve_step

@@ -1,0 +1,14 @@
+"""Hand-rolled optimizers (no optax): AdamW, momentum SGD, schedules,
+and int8 gradient compression with error feedback."""
+from .adamw import adamw_init, adamw_update, sgdm_init, sgdm_update
+from .schedules import cosine_schedule, linear_warmup
+from .compress import (
+    compress_int8, decompress_int8, compressed_psum, error_feedback_init,
+)
+
+__all__ = [
+    "adamw_init", "adamw_update", "sgdm_init", "sgdm_update",
+    "cosine_schedule", "linear_warmup",
+    "compress_int8", "decompress_int8", "compressed_psum",
+    "error_feedback_init",
+]

@@ -1,0 +1,67 @@
+"""AdamW and momentum-SGD, pure pytree functions.
+
+Moments are f32 regardless of param dtype (mixed-precision practice:
+bf16 params + f32 optimizer state).  State shapes mirror params, so the
+FSDP/TP param sharding rules apply verbatim to the state tree.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["adamw_init", "adamw_update", "sgdm_init", "sgdm_update"]
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return dict(
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def adamw_update(params, grads, state, *, lr, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, grad_clip=1.0):
+    count = state["count"] + 1
+    # global-norm clip
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads))
+    )
+    scale = jnp.minimum(1.0, grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    def upd(p, g, mu, nu):
+        g = g.astype(jnp.float32) * scale
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * g * g
+        mu_hat = mu / (1 - b1 ** count)
+        nu_hat = nu / (1 - b2 ** count)
+        step = mu_hat / (jnp.sqrt(nu_hat) + eps)
+        new_p = p.astype(jnp.float32) - lr * (step + weight_decay * p.astype(jnp.float32))
+        return new_p.astype(p.dtype), mu, nu
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, dict(mu=new_mu, nu=new_nu, count=count), gnorm
+
+
+def sgdm_init(params):
+    return dict(
+        mom=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def sgdm_update(params, grads, state, *, lr, momentum=0.9, weight_decay=0.0):
+    def upd(p, g, m):
+        g = g.astype(jnp.float32) + weight_decay * p.astype(jnp.float32)
+        m = momentum * m + g
+        return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+
+    out = jax.tree.map(upd, params, grads, state["mom"])
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_mom = jax.tree.map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_params, dict(mom=new_mom, count=state["count"] + 1)

@@ -1,0 +1,24 @@
+"""LR schedules as step → lr functions (jit-safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["linear_warmup", "cosine_schedule"]
+
+
+def linear_warmup(base_lr: float, warmup_steps: int):
+    def fn(step):
+        return base_lr * jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+    return fn
+
+
+def cosine_schedule(base_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    def fn(step):
+        warm = jnp.minimum(1.0, (step + 1) / max(warmup_steps, 1))
+        prog = jnp.clip(
+            (step - warmup_steps) / max(total_steps - warmup_steps, 1), 0.0, 1.0
+        )
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * warm * cos
+    return fn

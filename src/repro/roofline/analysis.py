@@ -1,0 +1,131 @@
+"""Three-term roofline from a compiled (SPMD-partitioned) executable.
+
+    compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+    memory term     = HLO_bytes / (chips × HBM_bw)
+    collective term = collective_bytes / (chips × link_bw)
+
+``compiled.cost_analysis()`` supplies per-device FLOPs/bytes (the SPMD
+module IS the per-device program, so no division by chips is applied to
+those).  Collective bytes are NOT in cost_analysis — they are summed
+from the post-optimization HLO text (the only place the partitioner's
+actual all-gather/all-reduce/… schedule is visible), with op-specific
+ring multipliers.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = ["HW", "collective_bytes_from_hlo", "roofline_terms", "model_flops",
+           "parse_shape_bytes"]
+
+
+@dataclass(frozen=True)
+class HW:
+    """TPU v5e-class target (assignment constants)."""
+
+    peak_flops: float = 197e12       # bf16 FLOP/s per chip
+    hbm_bw: float = 819e9            # bytes/s per chip
+    link_bw: float = 50e9            # bytes/s per ICI link
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*([^=]+?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute|"
+    r"all-gather-start|all-reduce-start|reduce-scatter-start|"
+    r"collective-permute-start)\(",
+    re.MULTILINE,
+)
+
+
+def parse_shape_bytes(shape_str: str) -> int:
+    """Sum bytes over all shapes in an HLO result type (handles tuples)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+# wire-bytes multiplier per collective kind (ring algorithms, n→large)
+_FACTORS = {
+    "all-reduce": 2.0,          # reduce-scatter + all-gather
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict:
+    """Sum wire bytes of every collective in post-optimization HLO."""
+    per_kind: dict[str, float] = {}
+    count: dict[str, int] = {}
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        kind = kind.removesuffix("-start")
+        b = parse_shape_bytes(shape_str) * _FACTORS[kind]
+        per_kind[kind] = per_kind.get(kind, 0.0) + b
+        count[kind] = count.get(kind, 0) + 1
+    return dict(
+        total=sum(per_kind.values()),
+        per_kind=per_kind,
+        counts=count,
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE); D = tokens.
+
+    For decode shapes D = global_batch (one token per sequence); train
+    includes the 3× backward factor, inference kinds use 2·N·D.
+    """
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token/seq
+
+
+def roofline_terms(cost: dict, coll: dict, *, chips: int, hw: HW = HW()) -> dict:
+    """cost = compiled.cost_analysis() (per-device); coll from HLO text
+    (per-device program as well)."""
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+    coll_bytes = float(coll["total"])
+    t_compute = flops / hw.peak_flops
+    t_memory = bytes_acc / hw.hbm_bw
+    t_coll = coll_bytes / hw.link_bw
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory), ("collective", t_coll),
+        key=lambda kv: kv[1],
+    )[0]
+    return dict(
+        t_compute=t_compute,
+        t_memory=t_memory,
+        t_collective=t_coll,
+        dominant=dominant,
+        hlo_flops_per_chip=flops,
+        hlo_bytes_per_chip=bytes_acc,
+        collective_bytes_per_chip=coll_bytes,
+        chips=chips,
+    )

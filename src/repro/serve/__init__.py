@@ -1,0 +1,4 @@
+"""Serving substrate: slot-based batched decode engine."""
+from .engine import ServeEngine, Request
+
+__all__ = ["ServeEngine", "Request"]

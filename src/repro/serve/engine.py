@@ -1,0 +1,105 @@
+"""Slot-based batched serving engine.
+
+A fixed-capacity decode batch of B slots serves a request queue in
+*waves*: a wave admits up to B requests, step-decodes them together
+through one compiled ``decode_step`` (prompt tokens are teacher-forced
+through the same cached path, then generation continues), retires
+finished slots by masking, and starts the next wave when the batch
+drains.  Wave admission keeps every slot at the same cache position, so
+a single scalar-position decode step (the same one the dry-run lowers)
+serves the whole stream — the continuous-batching upgrade (per-slot
+positions) is a serving-layer change, not a model change, and is noted
+as future work.
+
+The scheduler analogy to the paper: requests are tasks, slots are
+executors; the queue keeps executors busy and masking retires stragglers
+without stalling the wave.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..models import lm
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    output: list[int] = field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ArchConfig, params, *, batch_slots: int = 4,
+                 cache_len: int = 256):
+        self.cfg = cfg
+        self.params = params
+        self.b = batch_slots
+        self.cache_len = cache_len
+        self._pending: list[Request] = []
+        self.finished: list[Request] = []
+        self.steps_executed = 0
+
+        def step_fn(params, state, tokens):
+            logits, state = lm.decode_step(cfg, params, state, tokens)
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32), state
+
+        self._step = jax.jit(step_fn)
+
+    def submit(self, req: Request) -> None:
+        self._pending.append(req)
+
+    # ------------------------------------------------------------------
+    def _run_wave(self, wave: list[Request]) -> None:
+        state = lm.init_decode_state(self.cfg, self.b, self.cache_len)
+        tokens = np.zeros(self.b, np.int32)
+        cursor = np.zeros(self.b, np.int64)   # position in prompt
+        active = np.zeros(self.b, bool)
+        for i, req in enumerate(wave):
+            tokens[i] = req.prompt[0] if req.prompt else 0
+            active[i] = True
+
+        while active.any() and int(np.max(cursor)) < self.cache_len - 1:
+            next_tok, state = self._step(
+                self.params, state, jnp.asarray(tokens)
+            )
+            self.steps_executed += 1
+            next_np = np.asarray(next_tok)
+            for i, req in enumerate(wave):
+                if not active[i]:
+                    continue
+                cursor[i] += 1
+                if cursor[i] < len(req.prompt):
+                    tokens[i] = req.prompt[int(cursor[i])]  # teacher-force
+                    continue
+                tok = int(next_np[i])
+                req.output.append(tok)
+                tokens[i] = tok
+                if (
+                    len(req.output) >= req.max_new_tokens
+                    or (req.eos_id is not None and tok == req.eos_id)
+                ):
+                    active[i] = False
+                    req.done = True
+                    self.finished.append(req)
+        for i, req in enumerate(wave):  # cache-length retirement
+            if active[i]:
+                req.done = True
+                self.finished.append(req)
+
+    def run_until_drained(self) -> list[Request]:
+        while self._pending:
+            wave = self._pending[: self.b]
+            self._pending = self._pending[self.b:]
+            self._run_wave(wave)
+        return self.finished

@@ -1,0 +1,4 @@
+"""Training loop substrate."""
+from .loop import TrainLoop, TrainConfig
+
+__all__ = ["TrainLoop", "TrainConfig"]

@@ -1,0 +1,34 @@
+import numpy as np
+import networkx as nx
+import pytest
+
+from repro.core import rmat, grid_road, star_skew, erdos_renyi, build_block_store
+
+
+def to_nx(g):
+    G = nx.Graph()
+    G.add_nodes_from(range(g.n))
+    src, dst = g.coo()
+    G.add_edges_from(zip(src.tolist(), dst.tolist()))
+    return G
+
+
+@pytest.fixture(scope="session")
+def small_graphs():
+    """Three structurally different graphs (skewed, road, extreme-skew)."""
+    return {
+        "rmat": rmat(8, 8, seed=3),
+        "road": grid_road(16),
+        "star": star_skew(512, hubs=3, seed=1),
+        "er": erdos_renyi(400, 6.0, seed=2),
+    }
+
+
+@pytest.fixture(scope="session")
+def nx_graphs(small_graphs):
+    return {k: to_nx(g) for k, g in small_graphs.items()}
+
+
+@pytest.fixture(scope="session")
+def stores(small_graphs):
+    return {k: build_block_store(g, 4) for k, g in small_graphs.items()}

@@ -1,0 +1,106 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs ref.py oracles."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.tc_tile import tc_tiles
+from repro.kernels.spmv_tile import spmv_tiles
+from repro.kernels.frontier_tile import frontier_tiles
+from repro.kernels.attn_tile import flash_attention
+
+RNG = np.random.default_rng(42)
+
+
+def _tiles(nb, t, density, dtype):
+    return jnp.asarray((RNG.random((nb, t, t)) < density).astype(dtype))
+
+
+@pytest.mark.parametrize("nb,t", [(1, 128), (3, 128), (2, 256), (1, 512)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_tc_tiles(nb, t, dtype):
+    a, b, m = (_tiles(nb, t, 0.05, dtype) for _ in range(3))
+    got = tc_tiles(a, b, m, interpret=True)
+    want = ref.tc_tiles_ref(a, b, m)
+    np.testing.assert_allclose(np.float32(got), np.float32(want), rtol=1e-5)
+
+
+@pytest.mark.parametrize("block_t", [128, 256])
+def test_tc_tiles_block_sweep(block_t):
+    a, b, m = (_tiles(2, 256, 0.05, np.float32) for _ in range(3))
+    got = tc_tiles(a, b, m, block_t=block_t, interpret=True)
+    np.testing.assert_allclose(np.float32(got), np.float32(ref.tc_tiles_ref(a, b, m)),
+                               rtol=1e-5)
+
+
+@pytest.mark.parametrize("nb,t", [(1, 128), (4, 128), (2, 256)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_spmv_tiles(nb, t, dtype):
+    tiles = _tiles(nb, t, 0.1, dtype)
+    xs = jnp.asarray(RNG.random((nb, t)).astype(np.float32)).astype(dtype)
+    got = spmv_tiles(tiles, xs, interpret=True)
+    want = ref.spmv_tiles_ref(tiles, xs)
+    np.testing.assert_allclose(np.float32(got), np.float32(want),
+                               rtol=2e-2 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("nb,t", [(1, 128), (4, 128), (2, 256), (1, 512)])
+def test_frontier_tiles(nb, t):
+    tiles = _tiles(nb, t, 0.05, np.float32)
+    f = jnp.asarray((RNG.random((nb, t)) < 0.3).astype(np.float32))
+    got = frontier_tiles(tiles, f, interpret=True)
+    want = ref.frontier_tiles_ref(tiles, f)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_frontier_tiles_empty_frontier():
+    tiles = _tiles(2, 128, 0.05, np.float32)
+    f = jnp.zeros((2, 128), jnp.float32)
+    got = frontier_tiles(tiles, f, interpret=True)
+    assert np.all(np.asarray(got) == 2**31 - 1)
+
+
+@pytest.mark.parametrize(
+    "b,h,sq,sk,d,causal",
+    [
+        (1, 2, 128, 128, 64, True),
+        (2, 1, 128, 256, 64, True),   # suffix-aligned causal (decode-like)
+        (1, 1, 256, 256, 128, False),
+        (1, 1, 256, 128, 64, False),
+    ],
+)
+def test_flash_attention(b, h, sq, sk, d, causal):
+    q = jnp.asarray(RNG.standard_normal((b, h, sq, d)).astype(np.float32))
+    k = jnp.asarray(RNG.standard_normal((b, h, sk, d)).astype(np.float32))
+    v = jnp.asarray(RNG.standard_normal((b, h, sk, d)).astype(np.float32))
+    got = flash_attention(q, k, v, causal=causal, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_flash_attention_bf16():
+    q = jnp.asarray(RNG.standard_normal((1, 2, 128, 64))).astype(jnp.bfloat16)
+    k = jnp.asarray(RNG.standard_normal((1, 2, 128, 64))).astype(jnp.bfloat16)
+    v = jnp.asarray(RNG.standard_normal((1, 2, 128, 64))).astype(jnp.bfloat16)
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    want = ref.attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(
+        np.float32(got), np.float32(want), rtol=5e-2, atol=5e-2
+    )
+
+
+@pytest.mark.parametrize("b,r,k,n", [(1, 128, 8, 256), (3, 256, 16, 512)])
+@pytest.mark.parametrize("dtype", [np.float32, jnp.bfloat16])
+def test_spmv_ell(b, r, k, n, dtype):
+    from repro.kernels.spmv_ell import spmv_ell
+
+    idx = jnp.asarray(RNG.integers(0, n, (b, r, k)).astype(np.int32))
+    valid = jnp.asarray((RNG.random((b, r, k)) < 0.7))
+    x = jnp.asarray(RNG.random((b, n)).astype(np.float32)).astype(dtype)
+    got = spmv_ell(idx, valid, x, interpret=True)
+    want = ref.spmv_ell_ref(idx, valid, x)
+    np.testing.assert_allclose(
+        np.float32(got), np.float32(want),
+        rtol=3e-2 if dtype == jnp.bfloat16 else 1e-5,
+    )

@@ -1,0 +1,96 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import from_edges, build_block_store, partition_symmetric_2d
+from repro.core.scheduler import lpt_assign
+from repro.algorithms import pagerank, shiloach_vishkin, triangle_count
+
+settings.register_profile("ci", deadline=None, max_examples=20)
+settings.load_profile("ci")
+
+
+@st.composite
+def random_graph(draw, max_n=64, max_m=160):
+    n = draw(st.integers(4, max_n))
+    m = draw(st.integers(1, max_m))
+    src = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+    dst = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+    return from_edges(np.array(src), np.array(dst), n=n)
+
+
+@given(random_graph(), st.integers(1, 5))
+def test_blocks_partition_edges(g, p):
+    """Invariant (paper §3.1): blocks are disjoint, B ≡ G."""
+    store = build_block_store(g, p)
+    assert store.block_ptr[-1] == g.m
+    # sorted (src,dst) multiset identical to the graph's edge set
+    a = np.sort(store.src.astype(np.int64) * g.n + store.dst)
+    s, d = g.coo()
+    b = np.sort(s.astype(np.int64) * g.n + d)
+    assert np.array_equal(a, b)
+
+
+@given(random_graph(), st.integers(1, 5))
+def test_cuts_monotone_cover(g, p):
+    cuts = partition_symmetric_2d(g, p)
+    assert cuts[0] == 0 and cuts[-1] == g.n
+    assert np.all(np.diff(cuts) >= 0)
+
+
+@given(
+    st.lists(st.floats(0.1, 100.0), min_size=1, max_size=40),
+    st.integers(1, 6),
+)
+def test_lpt_bound(weights, d):
+    w = np.asarray(weights)
+    a = lpt_assign(w, d)
+    loads = np.zeros(d)
+    np.add.at(loads, a, w)
+    assert np.isclose(loads.sum(), w.sum())
+    opt_lb = max(w.sum() / d, w.max())
+    assert loads.max() <= 4 / 3 * opt_lb + 1e-6
+
+
+@given(random_graph())
+def test_pagerank_is_distribution(g):
+    store = build_block_store(g, 2)
+    pr = pagerank(store, mode="sparse_only", max_iters=30)
+    assert np.all(pr >= 0)
+    assert abs(pr.sum() - 1.0) < 1e-3
+
+
+@given(random_graph())
+def test_sv_is_valid_components(g):
+    """Same label ⇔ connected (union-find oracle)."""
+    store = build_block_store(g, 2)
+    C = shiloach_vishkin(store)
+    parent = list(range(g.n))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    s, d = g.coo()
+    for u, v in zip(s.tolist(), d.tolist()):
+        parent[find(u)] = find(v)
+    roots = {find(v) for v in range(g.n)}
+    assert len(np.unique(C)) == len(roots)
+    for u in range(g.n):
+        for v in range(u + 1, g.n):
+            if find(u) == find(v):
+                assert C[u] == C[v]
+
+
+@given(random_graph(max_n=40, max_m=100), st.permutations(list(range(8))))
+def test_tc_permutation_invariant(g, perm_seed):
+    """Triangle count is invariant under vertex relabeling."""
+    want = triangle_count(g, p=2)
+    rng = np.random.default_rng(sum(perm_seed))
+    perm = rng.permutation(g.n)
+    s, d = g.coo()
+    g2 = from_edges(perm[s], perm[d], n=g.n)
+    assert triangle_count(g2, p=2) == want

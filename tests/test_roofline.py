@@ -1,0 +1,80 @@
+"""Roofline analysis unit tests: HLO collective parsing + term math."""
+import numpy as np
+import pytest
+
+from repro.roofline import (
+    HW, collective_bytes_from_hlo, model_flops, roofline_terms,
+)
+from repro.roofline.analysis import parse_shape_bytes
+from repro.configs import SHAPES, get_config
+
+
+def test_parse_shape_bytes():
+    assert parse_shape_bytes("bf16[16,2048,512]") == 16 * 2048 * 512 * 2
+    assert parse_shape_bytes("f32[8]") == 32
+    assert parse_shape_bytes("(f32[4,4], bf16[2])") == 64 + 4
+    assert parse_shape_bytes("pred[128]") == 128
+    assert parse_shape_bytes("f32[]") == 4  # scalar
+
+
+def test_collective_parse():
+    hlo = """
+  %all-gather.1 = bf16[16,1024]{1,0} all-gather(%p0), dimensions={0}
+  %x = f32[4]{0} add(%a, %b)
+  ROOT %all-reduce.2 = f32[256,256]{1,0} all-reduce(%x2), to_apply=%sum
+  %rs = f32[8,8]{1,0} reduce-scatter(%y), dimensions={0}
+  %ag2 = (bf16[2,2]{1,0}, bf16[2,2]{1,0}) all-gather-start(%z), dimensions={0}
+"""
+    out = collective_bytes_from_hlo(hlo)
+    ag = 16 * 1024 * 2 + 2 * (2 * 2 * 2)     # all-gather + all-gather-start
+    ar = 256 * 256 * 4 * 2.0                 # ring factor 2
+    rs = 8 * 8 * 4
+    assert out["per_kind"]["all-gather"] == ag
+    assert out["per_kind"]["all-reduce"] == ar
+    assert out["per_kind"]["reduce-scatter"] == rs
+    assert out["counts"]["all-gather"] == 2
+    assert out["total"] == ag + ar + rs
+
+
+def test_roofline_terms_dominance():
+    cost = {"flops": 197e12, "bytes accessed": 819e9 / 2}
+    coll = dict(total=50e9 * 2, per_kind={}, counts={})
+    t = roofline_terms(cost, coll, chips=256)
+    assert abs(t["t_compute"] - 1.0) < 1e-9
+    assert abs(t["t_memory"] - 0.5) < 1e-9
+    assert abs(t["t_collective"] - 2.0) < 1e-9
+    assert t["dominant"] == "collective"
+
+
+def test_model_flops_moe_uses_active_params():
+    dense = get_config("qwen2.5-32b")
+    moe = get_config("qwen3-moe-235b-a22b")
+    sh = SHAPES["train_4k"]
+    # MoE 235B has ~22B active → its MODEL_FLOPS must be well below a
+    # same-token dense-235B estimate and in the same ballpark as 32B dense
+    f_moe = model_flops(moe, sh)
+    f_dense = model_flops(dense, sh)
+    assert f_moe < 2.5 * f_dense
+    full_would_be = 6.0 * moe.param_count() * sh.global_batch * sh.seq_len
+    assert f_moe < 0.25 * full_would_be
+
+
+def test_decode_flops_scale_with_batch_only():
+    cfg = get_config("qwen2.5-32b")
+    f = model_flops(cfg, SHAPES["decode_32k"])
+    assert f == 2.0 * cfg.active_param_count() * SHAPES["decode_32k"].global_batch
+
+
+def test_param_counts_sane():
+    """Abstract-params and analytic counts agree (consistency of both)."""
+    import jax
+    from repro.models.steps import abstract_params
+
+    for arch in ["qwen2.5-32b", "deepseek-moe-16b", "whisper-base"]:
+        cfg = get_config(arch)
+        exact = sum(
+            int(np.prod(l.shape))
+            for l in jax.tree.leaves(abstract_params(cfg))
+        )
+        approx = cfg.param_count()
+        assert 0.6 < exact / approx < 1.7, (arch, exact, approx)
