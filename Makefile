@@ -1,0 +1,13 @@
+# Tier-1 verify — the exact command CI runs (see ROADMAP.md).
+.PHONY: test bench examples
+
+test:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
+
+bench:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m benchmarks.run --scale small
+
+examples:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python examples/quickstart.py
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python examples/pipeline.py
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python examples/heterogeneous_schedule.py

@@ -3,15 +3,14 @@ graphs whose dense representation exceeds accelerator memory because a
 task only ever needs the blocks of ONE block-list resident.
 
 Emulation on this container: sweep a per-task "device memory" budget
-(tile_dim² bytes × blocks-per-list) and show the hybrid engine still
+(tile_dim² bytes × blocks-per-list) and show the hybrid plan still
 completes with bounded resident tile bytes while dense-only with an
 unbounded budget would need the full dense matrix (n² >> budget)."""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.core import build_block_store
-from repro.core.engine import Engine
+from repro.core import build_block_store, compile_plan
 from repro.algorithms import tc_algorithm
 from repro.algorithms.tc import orient_dag
 from repro.data import benchmark_suite
@@ -19,7 +18,7 @@ from repro.data import benchmark_suite
 from .common import csv_row, time_median
 
 
-def run(scale: str = "small", repeats: int = 3) -> list[str]:
+def run(scale: str = "small", repeats: int = 3, backend: str = "xla") -> list[str]:
     rows = []
     g = benchmark_suite(scale)["social"]
     dag = orient_dag(g)
@@ -27,9 +26,10 @@ def run(scale: str = "small", repeats: int = 3) -> list[str]:
     full_dense_bytes = n * n * 4
     for tile_dim, p in [(128, 16), (256, 8), (512, 4)]:
         store = build_block_store(dag, p)
-        eng = Engine(tc_algorithm(), store, mode="hybrid", tile_dim=tile_dim,
-                     dense_density=0.001)
-        t = time_median(lambda: eng.run(), repeats=repeats)
+        plan = compile_plan(tc_algorithm(), store, mode="hybrid",
+                            tile_dim=tile_dim, dense_density=0.001,
+                            backend=backend)
+        t = time_median(lambda: plan.run(), repeats=repeats)
         resident = 3 * tile_dim * tile_dim * 4  # one block-list (3 tiles)
         rows.append(csv_row(
             f"oversub/tc/tile_{tile_dim}_p{p}", t,

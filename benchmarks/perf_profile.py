@@ -5,8 +5,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import build_block_store
-from repro.core.engine import Engine
+from repro.core import build_block_store, compile_plan
 from repro.algorithms import (
     afforest_algorithm, bfs_algorithm, pagerank_algorithm, sv_algorithm,
     tc_algorithm,
@@ -20,7 +19,7 @@ MODES = ["sparse_only", "dense_only", "hybrid"]
 TAUS = [1.0, 1.1, 1.25, 1.5, 2.0, 4.0]
 
 
-def run(scale: str = "small", repeats: int = 3) -> list[str]:
+def run(scale: str = "small", repeats: int = 3, backend: str = "xla") -> list[str]:
     graphs = benchmark_suite(scale)
     algos = {
         "pr": pagerank_algorithm, "sv": sv_algorithm, "cc": afforest_algorithm,
@@ -34,10 +33,10 @@ def run(scale: str = "small", repeats: int = 3) -> list[str]:
                 base = orient_dag(g) if aname == "tc" else g
                 store = build_block_store(base, 4)
                 try:
-                    eng = Engine(afac(), store, mode=mode, tile_dim=512,
-                                 dense_density=0.001)
+                    plan = compile_plan(afac(), store, mode=mode, tile_dim=512,
+                                        dense_density=0.001, backend=backend)
                     times[mode][inst] = time_median(
-                        lambda: eng.run(), repeats=repeats
+                        lambda: plan.run(), repeats=repeats
                     )
                 except Exception:
                     times[mode][inst] = float("inf")

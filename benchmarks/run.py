@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV.  Sections:
   lm        — LM-substrate roofline cells from the dry-run (assignment)
 
 Usage: PYTHONPATH=src python -m benchmarks.run [--scale small|bench]
+                                               [--backend reference|xla|pallas]
 """
 from __future__ import annotations
 
@@ -19,6 +20,10 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--scale", default="small", choices=["small", "bench"])
     ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument(
+        "--backend", default="xla", choices=["reference", "xla", "pallas"],
+        help="kernel backend for the graph sections (plan registry)",
+    )
     ap.add_argument(
         "--only", default=None,
         help="comma list of sections (table1,sched,profile,oversub,lm)",
@@ -34,12 +39,17 @@ def main(argv=None) -> None:
         "oversub": oversub.run,
         "lm": lm_roofline.run,
     }
+    # the LM section predates the graph-plan API and takes no backend
+    graph_sections = {"table1", "sched", "profile", "oversub"}
     chosen = args.only.split(",") if args.only else list(sections)
 
     print("name,us_per_call,derived")
     for sec in chosen:
+        kw = dict(scale=args.scale, repeats=args.repeats)
+        if sec in graph_sections:
+            kw["backend"] = args.backend
         try:
-            for row in sections[sec](scale=args.scale, repeats=args.repeats):
+            for row in sections[sec](**kw):
                 print(row)
         except Exception as e:  # noqa: BLE001 — report, continue suite
             print(f"{sec}/ERROR,0.0,{type(e).__name__}: {e}", file=sys.stdout)

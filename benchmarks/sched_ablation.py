@@ -5,8 +5,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import build_block_store, build_schedule
-from repro.core.engine import Engine
+from repro.core import build_block_store, build_schedule, compile_plan
 from repro.algorithms import pagerank_algorithm, tc_algorithm, bfs_algorithm
 from repro.algorithms.tc import orient_dag
 from repro.data import benchmark_suite
@@ -16,7 +15,7 @@ from .common import csv_row, time_median
 MODES = ["sparse_only", "dense_only", "hybrid"]
 
 
-def run(scale: str = "small", repeats: int = 3) -> list[str]:
+def run(scale: str = "small", repeats: int = 3, backend: str = "xla") -> list[str]:
     rows = []
     g = benchmark_suite(scale)["kron"]
     dag = orient_dag(g)
@@ -24,10 +23,10 @@ def run(scale: str = "small", repeats: int = 3) -> list[str]:
     # mode ablation on TC (the paper's most mode-sensitive kernel)
     for mode in MODES:
         store = build_block_store(dag, 4)
-        eng = Engine(tc_algorithm(), store, mode=mode, tile_dim=512,
-                     dense_density=0.001)
-        t = time_median(lambda: eng.run(), repeats=repeats)
-        st = eng.schedule.stats
+        plan = compile_plan(tc_algorithm(), store, mode=mode, tile_dim=512,
+                            dense_density=0.001, backend=backend)
+        t = time_median(lambda: plan.run(), repeats=repeats)
+        st = plan.schedule.stats
         rows.append(csv_row(
             f"sched/tc/{mode}", t,
             f"dense_tasks={st['dense_tasks']};makespan={st['makespan_ratio']:.2f}",
@@ -36,20 +35,21 @@ def run(scale: str = "small", repeats: int = 3) -> list[str]:
     # PageRank mode ablation
     for mode in MODES[:1] + MODES[2:]:
         store = build_block_store(g, 4)
-        eng = Engine(pagerank_algorithm(), store, mode=mode,
-                     dense_density=0.001)
-        t = time_median(lambda: eng.run(), repeats=repeats)
+        plan = compile_plan(pagerank_algorithm(), store, mode=mode,
+                            dense_density=0.001, backend=backend)
+        t = time_median(lambda: plan.run(), repeats=repeats)
         rows.append(csv_row(f"sched/pr/{mode}", t))
 
     # cut-off (dense_frac) sweep — the paper's GPU cut-off knob
     for frac in (0.1, 0.3, 0.5, 0.8):
         store = build_block_store(dag, 4)
-        eng = Engine(tc_algorithm(), store, mode="hybrid", dense_frac=frac,
-                     dense_density=0.001, tile_dim=512)
-        t = time_median(lambda: eng.run(), repeats=repeats)
+        plan = compile_plan(tc_algorithm(), store, mode="hybrid",
+                            dense_frac=frac, dense_density=0.001,
+                            tile_dim=512, backend=backend)
+        t = time_median(lambda: plan.run(), repeats=repeats)
         rows.append(csv_row(
             f"sched/tc/cutoff_{frac}", t,
-            f"dense_weight_frac={eng.schedule.stats['dense_weight_frac']:.2f}",
+            f"dense_weight_frac={plan.schedule.stats['dense_weight_frac']:.2f}",
         ))
 
     # LPT packing quality across device counts (straggler headroom)

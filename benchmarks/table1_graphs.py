@@ -9,8 +9,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import build_block_store
-from repro.core.engine import Engine
+from repro.core import build_block_store, compile_plan
 from repro.algorithms import (
     afforest_algorithm, bfs_algorithm, pagerank_algorithm, sv_algorithm,
     tc_algorithm,
@@ -29,24 +28,25 @@ ALGOS = {
 }
 
 
-def _engine_for(algo: str, g, mode: str, p: int = 4):
+def _plan_for(algo: str, g, mode: str, p: int = 4, backend: str = "xla"):
     if algo == "tc":
         store = build_block_store(orient_dag(g), p)
     else:
         store = build_block_store(g, p)
     alg = ALGOS[algo]()
-    return Engine(alg, store, mode=mode, dense_density=0.001, tile_dim=512)
+    return compile_plan(alg, store, mode=mode, dense_density=0.001,
+                        tile_dim=512, backend=backend)
 
 
-def run(scale: str = "small", repeats: int = 3) -> list[str]:
+def run(scale: str = "small", repeats: int = 3, backend: str = "xla") -> list[str]:
     rows = []
     graphs = benchmark_suite(scale)
     for gname, g in graphs.items():
         for algo in ALGOS:
-            eng_h = _engine_for(algo, g, "hybrid")
-            t_h = time_median(lambda: eng_h.run(), repeats=repeats)
-            eng_s = _engine_for(algo, g, "sparse_only")
-            t_s = time_median(lambda: eng_s.run(), repeats=repeats)
+            plan_h = _plan_for(algo, g, "hybrid", backend=backend)
+            t_h = time_median(lambda: plan_h.run(), repeats=repeats)
+            plan_s = _plan_for(algo, g, "sparse_only", backend=backend)
+            t_s = time_median(lambda: plan_s.run(), repeats=repeats)
             rows.append(
                 csv_row(
                     f"table1/{algo}/{gname}", t_h,

@@ -8,17 +8,20 @@ LPT packing across 8 virtual devices, and the resulting makespan ratio.
 """
 import numpy as np
 
-from repro.core import rmat, degree_order, build_block_store, build_schedule
+from repro.core import rmat, degree_order, build_block_store, compile_plan
 from repro.algorithms import pagerank_algorithm
 
 # skewed RMAT; degree ordering concentrates hub-hub edges into a dense
 # corner block (exactly the structure the paper's TC work exploits)
 g, _ = degree_order(rmat(12, 16, seed=3))
 store = build_block_store(g, 8)
-sched = build_schedule(
+# compile_plan builds the schedule as a first-class artifact; it is
+# inspectable on the plan before (or without) ever executing it
+plan = compile_plan(
     pagerank_algorithm(), store, num_devices=8, mode="hybrid",
     dense_density=0.02, dense_frac=0.5, tile_dim=1024,
 )
+sched = plan.schedule
 
 print("task  weight(E)   path    device")
 for t in sched.order[:16]:

@@ -7,15 +7,15 @@ triangle count / clustering — all through the block-based API.
 """
 import numpy as np
 
-from repro.core import rmat, from_edges, build_block_store
-from repro.algorithms import connected_components, bfs, triangle_count
+from repro.core import rmat, from_edges, build_block_store, compile_plan
+from repro.algorithms import afforest_algorithm, bfs_algorithm, triangle_count
 
 g = rmat(12, 8, seed=42)
 print(f"input graph: n={g.n} m={g.m}")
 
 # 1. connected components → giant component
 store = build_block_store(g, 4)
-comp = connected_components(store)
+comp = compile_plan(afforest_algorithm(), store).run().result
 labels, counts = np.unique(comp, return_counts=True)
 giant = labels[np.argmax(counts)]
 members = np.where(comp == giant)[0]
@@ -31,7 +31,7 @@ g2 = from_edges(remap[s[keep]], remap[d[keep]], n=members.size)
 # 3. BFS from the max-degree vertex → level ordering
 store2 = build_block_store(g2, 4)
 root = int(np.argmax(np.diff(g2.indptr)))
-out = bfs(store2, source=root)
+out = compile_plan(bfs_algorithm(root), store2).run().result
 order = np.argsort(out["dist"], kind="stable")
 perm = np.empty(g2.n, np.int64)
 perm[order] = np.arange(g2.n)

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.functors import BlockAlgorithm, Mode
+from ..kernels import get_kernel
 
 __all__ = ["bfs_algorithm", "bfs"]
 
@@ -50,7 +51,7 @@ def _init_factory(source: int):
 
 
 def _top_down(ctx, state, edge_mask):
-    src, dst = ctx["src"], ctx["dst"]
+    src, dst = ctx.src, ctx.dst
     parent, frontier = state["parent"], state["frontier"]
     n = parent.shape[0]
     unvisited = parent == _UNVISITED
@@ -63,7 +64,7 @@ def _top_down(ctx, state, edge_mask):
 
 def _bottom_up_edges(ctx, state, edge_mask):
     # reversed roles: unvisited src looks for any frontier dst neighbor
-    src, dst = ctx["src"], ctx["dst"]
+    src, dst = ctx.src, ctx.dst
     parent, frontier = state["parent"], state["frontier"]
     n = parent.shape[0]
     unvisited = parent == _UNVISITED
@@ -75,7 +76,7 @@ def _bottom_up_edges(ctx, state, edge_mask):
 
 
 def _kernel_sparse(ctx, state, it):
-    msk = ctx["sparse_edge_mask"]
+    msk = ctx.sparse_edge_mask
     parent = jax.lax.cond(
         state["dir_dense"],
         lambda: _bottom_up_edges(ctx, state, msk),
@@ -85,30 +86,22 @@ def _kernel_sparse(ctx, state, it):
 
 
 def _bottom_up_tiles(ctx, state):
-    tiles = ctx["tiles"]                   # (nd, T, T)
-    t = ctx["tile_dim"]
+    tiles = ctx.tiles                      # (nd, T, T)
+    t = ctx.tile_dim
     parent = state["parent"]
     n = parent.shape[0]
     fpad = jnp.concatenate([state["frontier"], jnp.zeros((t,), bool)])
     fcols = jax.vmap(
         lambda c0: jax.lax.dynamic_slice(fpad, (c0,), (t,))
-    )(ctx["tile_col_start"])               # (nd, T)
-    if ctx["use_pallas"]:
-        from ..kernels import ops
-
-        cand_local = ops.frontier_tiles(tiles, fcols)   # (nd, T) int32 col or INT_MAX
-    else:
-        colid = jnp.arange(t, dtype=jnp.int32)[None, None, :]
-        masked = jnp.where(
-            (tiles > 0) & fcols[:, None, :], colid, _UNVISITED
-        )                                   # (nd, T, T)
-        cand_local = masked.min(axis=2)     # (nd, T)
+    )(ctx.tile_col_start)                  # (nd, T)
+    # per tile row: smallest local frontier column, else INT_MAX
+    cand_local = get_kernel("frontier_tiles", ctx.backend)(tiles, fcols)
     cand = jnp.where(
         cand_local == _UNVISITED,
         _UNVISITED,
-        cand_local + ctx["tile_col_start"][:, None].astype(jnp.int32),
+        cand_local + ctx.tile_col_start[:, None].astype(jnp.int32),
     )
-    rows = ctx["tile_row_start"][:, None] + jnp.arange(t)[None, :]
+    rows = ctx.tile_row_start[:, None] + jnp.arange(t)[None, :]
     rows = jnp.minimum(rows, n)            # tile rows past n are padding
     unvisited_pad = jnp.concatenate([parent == _UNVISITED, jnp.asarray([False])])
     cand = jnp.where(unvisited_pad[rows], cand, _UNVISITED)
@@ -117,7 +110,7 @@ def _bottom_up_tiles(ctx, state):
 
 
 def _kernel_dense(ctx, state, it):
-    msk = ctx["dense_edge_mask"]
+    msk = ctx.dense_edge_mask
     parent = jax.lax.cond(
         state["dir_dense"],
         lambda: _bottom_up_tiles(ctx, state),
@@ -136,14 +129,14 @@ def _post(ctx, state, it):
 
 def bfs_algorithm(source: int = 0, *, max_iters: int = 10_000,
                   beta: int = 24) -> BlockAlgorithm:
-    def before(ctx, state, it):
+    def before(host, state, it):
         # Beamer heuristic, host side (I_B): go bottom-up while the
         # frontier is a large fraction of the graph
         nf = int(jax.device_get(state["nf"]))
-        dense = nf * beta > ctx["n"]
+        dense = nf * beta > host.n
         return dict(state, dir_dense=jnp.asarray(dense))
 
-    def after(ctx, state, it):
+    def after(host, state, it):
         return state, bool(jax.device_get(state["nf"]) > 0)
 
     return BlockAlgorithm(
@@ -164,7 +157,7 @@ def bfs_algorithm(source: int = 0, *, max_iters: int = 10_000,
     )
 
 
-def bfs(store, source: int = 0, **engine_kw) -> dict:
-    from ..core.engine import Engine
+def bfs(store, source: int = 0, **plan_kw) -> dict:
+    from ..core.engine import compile_plan
 
-    return Engine(bfs_algorithm(source), store, **engine_kw).run().result
+    return compile_plan(bfs_algorithm(source), store, **plan_kw).run().result

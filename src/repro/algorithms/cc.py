@@ -56,8 +56,8 @@ def _init(store):
 
 def _make_kernel(k_rounds: int):
     def kernel(ctx, state, it):
-        indptr, indices, degrees = ctx["indptr"], ctx["indices"], ctx["degrees"]
-        src, dst, msk = ctx["src"], ctx["dst"], ctx["sparse_edge_mask"]
+        indptr, indices, degrees = ctx.indptr, ctx.indices, ctx.degrees
+        src, dst, msk = ctx.src, ctx.dst, ctx.sparse_edge_mask
         C = state["C"]
         n = C.shape[0]
 
@@ -83,7 +83,7 @@ def _make_kernel(k_rounds: int):
 
 def afforest_algorithm(*, k_rounds: int = 2, sample_size: int = 1024,
                        max_iters: int = 200) -> BlockAlgorithm:
-    def before(ctx, state, it):
+    def before(host, state, it):
         if it == k_rounds:  # I_B: detect the giant component once
             C = np.asarray(jax.device_get(state["C"]))
             n = C.shape[0]
@@ -93,7 +93,7 @@ def afforest_algorithm(*, k_rounds: int = 2, sample_size: int = 1024,
             state = dict(state, c_skip=jnp.asarray(vals[np.argmax(counts)], jnp.int32))
         return state
 
-    def after(ctx, state, it):
+    def after(host, state, it):
         if it < k_rounds:
             return state, True
         return state, bool(jax.device_get(state["H"]) > 0)
@@ -107,11 +107,14 @@ def afforest_algorithm(*, k_rounds: int = 2, sample_size: int = 1024,
         after=after,
         max_iterations=max_iters,
         finalize=lambda store, state: np.asarray(state["C"]),
-        metadata=dict(combine=dict(C="min", H="add", c_skip="max")),
+        metadata=dict(
+            combine=dict(C="min", H="add", c_skip="max"),
+            params=dict(k_rounds=k_rounds),
+        ),
     )
 
 
-def connected_components(store, **engine_kw) -> np.ndarray:
-    from ..core.engine import Engine
+def connected_components(store, **plan_kw) -> np.ndarray:
+    from ..core.engine import compile_plan
 
-    return Engine(afforest_algorithm(), store, **engine_kw).run().result
+    return compile_plan(afforest_algorithm(), store, **plan_kw).run().result

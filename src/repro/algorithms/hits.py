@@ -24,7 +24,7 @@ def _init(store):
 
 
 def _kernel_sparse(ctx, state, it):
-    src, dst, msk = ctx["src"], ctx["dst"], ctx["sparse_edge_mask"]
+    src, dst, msk = ctx.src, ctx.dst, ctx.sparse_edge_mask
     hub, auth = state["hub"], state["auth"]
     # authority update: a[v] += h[u] over edges u→v
     a_new = jnp.zeros_like(auth).at[dst].add(jnp.where(msk, hub[src], 0.0))
@@ -37,7 +37,7 @@ def _kernel_sparse(ctx, state, it):
 
 
 def hits_algorithm(*, tol: float = 1e-8, max_iters: int = 100) -> BlockAlgorithm:
-    def after(ctx, state, it):
+    def after(host, state, it):
         return state, bool(jax.device_get(state["delta"]) > tol)
 
     return BlockAlgorithm(
@@ -54,8 +54,8 @@ def hits_algorithm(*, tol: float = 1e-8, max_iters: int = 100) -> BlockAlgorithm
     )
 
 
-def hits(store, **engine_kw) -> dict:
-    from ..core.engine import Engine
+def hits(store, **plan_kw) -> dict:
+    from ..core.engine import compile_plan
 
-    return Engine(hits_algorithm(), store, mode="sparse_only",
-                  **engine_kw).run().result
+    return compile_plan(hits_algorithm(), store, mode="sparse_only",
+                        **plan_kw).run().result

@@ -28,7 +28,7 @@ def _init(store):
 
 def _make_kernel(k: int):
     def kernel(ctx, state, it):
-        src, dst, msk = ctx["src"], ctx["dst"], ctx["sparse_edge_mask"]
+        src, dst, msk = ctx.src, ctx.dst, ctx.sparse_edge_mask
         alive = state["alive"]
         contrib = (msk & alive[src] & alive[dst]).astype(jnp.int32)
         deg = jnp.zeros(alive.shape[0], jnp.int32).at[dst].add(contrib)
@@ -40,7 +40,7 @@ def _make_kernel(k: int):
 
 
 def kcore_algorithm(k: int, *, max_iters: int = 10_000) -> BlockAlgorithm:
-    def after(ctx, state, it):
+    def after(host, state, it):
         return state, bool(jax.device_get(state["peeled"]) > 0)
 
     return BlockAlgorithm(
@@ -55,9 +55,9 @@ def kcore_algorithm(k: int, *, max_iters: int = 10_000) -> BlockAlgorithm:
     )
 
 
-def k_core(store, k: int, **engine_kw) -> np.ndarray:
+def k_core(store, k: int, **plan_kw) -> np.ndarray:
     """Boolean membership mask of the k-core."""
-    from ..core.engine import Engine
+    from ..core.engine import compile_plan
 
-    return Engine(kcore_algorithm(k), store, mode="sparse_only",
-                  **engine_kw).run().result
+    return compile_plan(kcore_algorithm(k), store, mode="sparse_only",
+                        **plan_kw).run().result

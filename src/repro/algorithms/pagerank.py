@@ -20,16 +20,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..core.functors import BlockAlgorithm, Mode
+from ..kernels import get_kernel
 
 __all__ = ["pagerank_algorithm", "pagerank"]
 
 
-def _prepare(ctx, store, sched):
-    ctx["inv_deg"] = jnp.asarray(
-        1.0 / np.maximum(store.degrees, 1).astype(np.float32)
+def _prepare(store, sched):
+    return dict(
+        inv_deg=jnp.asarray(1.0 / np.maximum(store.degrees, 1).astype(np.float32)),
+        dangling=jnp.asarray(store.degrees == 0),
     )
-    ctx["dangling"] = jnp.asarray((store.degrees == 0))
-    return ctx
 
 
 def _init(store):
@@ -42,36 +42,31 @@ def _init(store):
 
 
 def _kernel_sparse(ctx, state, it):
-    src, dst, msk = ctx["src"], ctx["dst"], ctx["sparse_edge_mask"]
-    contrib = state["rank"] * ctx["inv_deg"]
+    src, dst, msk = ctx.src, ctx.dst, ctx.sparse_edge_mask
+    contrib = state["rank"] * ctx.extras["inv_deg"]
     vals = jnp.where(msk, contrib[src], 0.0)
     acc = state["acc"].at[dst].add(vals)
     return dict(state, acc=acc)
 
 
 def _kernel_dense(ctx, state, it):
-    tiles = ctx["tiles"]                      # (nd, T, T) 0/1 float32
-    t = ctx["tile_dim"]
-    contrib = state["rank"] * ctx["inv_deg"]
+    tiles = ctx.tiles                         # (nd, T, T) 0/1 float32
+    t = ctx.tile_dim
+    contrib = state["rank"] * ctx.extras["inv_deg"]
     pad = jnp.zeros((t,), contrib.dtype)
     xpad = jnp.concatenate([contrib, pad])
     xs = jax.vmap(
         lambda r0: jax.lax.dynamic_slice(xpad, (r0,), (t,))
-    )(ctx["tile_row_start"])                  # (nd, T)
-    if ctx["use_pallas"]:
-        from ..kernels import ops
-
-        ys = ops.spmv_tiles(tiles, xs)        # (nd, T)
-    else:
-        ys = jnp.einsum("brc,br->bc", tiles, xs)
-    idx = ctx["tile_col_start"][:, None] + jnp.arange(t)[None, :]
+    )(ctx.tile_row_start)                     # (nd, T)
+    ys = get_kernel("spmv_tiles", ctx.backend)(tiles, xs)   # (nd, T)
+    idx = ctx.tile_col_start[:, None] + jnp.arange(t)[None, :]
     acc_pad = jnp.concatenate([state["acc"], pad]).at[idx].add(ys)
     return dict(state, acc=acc_pad[: state["acc"].shape[0]])
 
 
 def _post(ctx, state, it, damping=0.85):
     n = state["rank"].shape[0]
-    dangling_mass = jnp.sum(jnp.where(ctx["dangling"], state["rank"], 0.0))
+    dangling_mass = jnp.sum(jnp.where(ctx.extras["dangling"], state["rank"], 0.0))
     new_rank = (1.0 - damping) / n + damping * (state["acc"] + dangling_mass / n)
     delta = jnp.sum(jnp.abs(new_rank - state["rank"]))
     return dict(rank=new_rank, acc=jnp.zeros_like(state["acc"]), delta=delta)
@@ -82,7 +77,7 @@ def pagerank_algorithm(*, damping: float = 0.85, tol: float = 1e-4,
     def post(ctx, state, it):
         return _post(ctx, state, it, damping)
 
-    def after(ctx, state, it):
+    def after(host, state, it):
         return state, bool(jax.device_get(state["delta"]) > tol)
 
     return BlockAlgorithm(
@@ -96,17 +91,17 @@ def pagerank_algorithm(*, damping: float = 0.85, tol: float = 1e-4,
         after=after,
         max_iterations=max_iters,
         finalize=lambda store, state: np.asarray(state["rank"]),
-        metadata=dict(combine="add"),
+        metadata=dict(combine="add", params=dict(damping=damping)),
     )
 
 
-def pagerank(store, **engine_kw) -> np.ndarray:
-    """Convenience wrapper: run PageRank on a BlockStore, return ranks."""
-    from ..core.engine import Engine
+def pagerank(store, **plan_kw) -> np.ndarray:
+    """Convenience wrapper: compile + run PageRank on a BlockStore."""
+    from ..core.engine import compile_plan
 
     alg = pagerank_algorithm(
-        damping=engine_kw.pop("damping", 0.85),
-        tol=engine_kw.pop("tol", 1e-4),
-        max_iters=engine_kw.pop("max_iters", 20),
+        damping=plan_kw.pop("damping", 0.85),
+        tol=plan_kw.pop("tol", 1e-4),
+        max_iters=plan_kw.pop("max_iters", 20),
     )
-    return Engine(alg, store, **engine_kw).run().result
+    return compile_plan(alg, store, **plan_kw).run().result

@@ -36,7 +36,7 @@ def _init(store):
 
 
 def _hook(ctx, state):
-    src, dst, msk = ctx["src"], ctx["dst"], ctx["sparse_edge_mask"]
+    src, dst, msk = ctx.src, ctx.dst, ctx.sparse_edge_mask
     C = state["C"]
     n = C.shape[0]
     cu, cv = C[src], C[dst]
@@ -73,12 +73,12 @@ def _kernel_sparse(ctx, state, it):
 
 
 def sv_algorithm(*, max_iters: int = 200) -> BlockAlgorithm:
-    def before(ctx, state, it):
+    def before(host, state, it):
         if it % 2 == 0:  # I_B: reset H before each hooking iteration
             state = dict(state, H=jnp.asarray(0, jnp.int32))
         return state
 
-    def after(ctx, state, it):
+    def after(host, state, it):
         if it % 2 == 0:
             return state, True  # always follow a hook with a link
         # I_A after the link: continue iff the preceding hook did work
@@ -97,7 +97,7 @@ def sv_algorithm(*, max_iters: int = 200) -> BlockAlgorithm:
     )
 
 
-def shiloach_vishkin(store, **engine_kw) -> np.ndarray:
-    from ..core.engine import Engine
+def shiloach_vishkin(store, **plan_kw) -> np.ndarray:
+    from ..core.engine import compile_plan
 
-    return Engine(sv_algorithm(), store, **engine_kw).run().result
+    return compile_plan(sv_algorithm(), store, **plan_kw).run().result

@@ -27,6 +27,7 @@ import numpy as np
 from ..core.blocks import build_block_store
 from ..core.functors import BlockAlgorithm, Mode
 from ..core.graph import Graph, degree_order, from_edges
+from ..kernels import get_kernel
 
 __all__ = ["tc_algorithm", "triangle_count", "orient_dag"]
 
@@ -57,8 +58,13 @@ def _make_blocklists(store):
     return np.asarray(out, dtype=np.int64)
 
 
-def _prepare(ctx, store, sched):
-    """Bucketed sparse items + tile triple indices (host side, one-time)."""
+def _prepare(store, sched):
+    """Bucketed sparse items + tile triple indices (host side, one-time).
+
+    Returns ``Context.extras``: the bucket dicts mix traced arrays
+    (``sg``/``lg``/``sb``/``lb``) with static ints (``dp``/``steps``
+    drive shapes/unroll) — the typed Context keeps that split.
+    """
     p = store.p
     bls = sched.blocklists
     dense_mask = sched.dense_task_mask
@@ -106,18 +112,18 @@ def _prepare(ctx, store, sched):
                         lb=jnp.asarray(lb[sel]),
                     )
                 )
-    ctx["tc_buckets"] = buckets
+    extras = {"tc_buckets": buckets}
 
     # ---- dense triples: tile index per block ---------------------------
     if dense_mask.any():
         tid_of_block = {int(b): t for t, b in enumerate(store.tile_block_ids)}
         triples = bls[dense_mask]
-        ctx["tc_tiles_idx"] = jnp.asarray(
+        extras["tc_tiles_idx"] = jnp.asarray(
             [[tid_of_block[int(b)] for b in row] for row in triples], dtype=jnp.int32
         )
     else:
-        ctx["tc_tiles_idx"] = None
-    return ctx
+        extras["tc_tiles_idx"] = None
+    return extras
 
 
 def _bucket_count(indices, bucket):
@@ -143,26 +149,20 @@ def _bucket_count(indices, bucket):
 
 def _kernel_sparse(ctx, state, it):
     nt = state["nt"]
-    for bucket in ctx["tc_buckets"]:
-        nt = nt + _bucket_count(ctx["indices"], bucket)
+    for bucket in ctx.extras["tc_buckets"]:
+        nt = nt + _bucket_count(ctx.indices, bucket)
     return dict(state, nt=nt)
 
 
 def _kernel_dense(ctx, state, it):
-    idx = ctx["tc_tiles_idx"]
+    idx = ctx.extras["tc_tiles_idx"]
     if idx is None:
         return state
-    tiles = ctx["tiles"]
+    tiles = ctx.tiles
     a_ij = tiles[idx[:, 0]]
     a_ik = tiles[idx[:, 1]]
     a_jk = tiles[idx[:, 2]]
-    if ctx["use_pallas"]:
-        from ..kernels import ops
-
-        cnt = ops.tc_tiles(a_ik, a_jk, a_ij)
-    else:
-        wedges = jnp.einsum("brc,bsc->brs", a_ik, a_jk)
-        cnt = jnp.sum(wedges * a_ij)
+    cnt = get_kernel("tc_tiles", ctx.backend)(a_ik, a_jk, a_ij)
     return dict(state, nt=state["nt"] + cnt.astype(jnp.int32))
 
 
@@ -182,10 +182,10 @@ def tc_algorithm() -> BlockAlgorithm:
     )
 
 
-def triangle_count(g: Graph, p: int = 8, **engine_kw) -> int:
-    """End-to-end TC: degree order → DAG orient → block store → engine."""
-    from ..core.engine import Engine
+def triangle_count(g: Graph, p: int = 8, **plan_kw) -> int:
+    """End-to-end TC: degree order → DAG orient → block store → plan."""
+    from ..core.engine import compile_plan
 
     dag = orient_dag(g)
     store = build_block_store(dag, p)
-    return Engine(tc_algorithm(), store, **engine_kw).run().result
+    return compile_plan(tc_algorithm(), store, **plan_kw).run().result

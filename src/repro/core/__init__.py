@@ -1,10 +1,31 @@
-"""PGAbB-JAX core: blocks, block-lists, functors, scheduler, engine.
+"""PGAbB-JAX core: blocks, block-lists, functors, scheduler, plans.
 
-This package is the paper's primary contribution rebuilt in JAX:
-the block-based programming model (graph → conformal 2-D blocks →
+This package is the paper's primary contribution rebuilt in JAX: the
+block-based programming model (graph → conformal 2-D blocks →
 block-lists → tasks), the six-functor user API, and the
 heterogeneity-aware scheduler (dense/MXU vs sparse/VPU paths, LPT
 device packing).
+
+The execution API separates **build/compile** from **execute**::
+
+    from repro.core import rmat, build_block_store, compile_plan
+    from repro.algorithms import pagerank_algorithm
+
+    store = build_block_store(rmat(12, 8, seed=7), 4)
+    plan = compile_plan(pagerank_algorithm(), store, backend="xla")
+    ranks = plan.run().result          # execute (reusable)
+    plan.schedule.stats                # the schedule is inspectable
+    plan.run(other_store)              # same shapes → no recompilation
+
+:func:`compile_plan` composes block-lists, estimates and sorts tasks,
+splits the dense/sparse paths, packs devices, runs the algorithm's
+``prepare``, and jit-compiles the per-iteration step against a typed
+:class:`~repro.core.context.Context` (device arrays + static scalars;
+host objects live in :class:`~repro.core.context.HostCtx` and never
+cross the jit boundary).  Kernel implementations are selected per
+kernel from the backend registry (``"reference" | "xla" | "pallas"``).
+The legacy :class:`~repro.core.engine.Engine` remains as a deprecated
+shim over ``compile_plan``.
 """
 from .graph import (
     Graph,
@@ -22,7 +43,8 @@ from .partition import Layout, partition_1d, partition_symmetric_2d, make_layout
 from .blocks import BlockStore, build_block_store
 from .functors import BlockAlgorithm, Mode, default_estimate
 from .scheduler import Schedule, build_schedule, lpt_assign
-from .engine import Engine, run
+from .context import Context, HostCtx, build_context, build_host_ctx
+from .engine import Plan, compile_plan, RunResult, Engine, run
 
 __all__ = [
     "Graph", "from_edges", "read_edge_list", "load_binary", "save_binary",
@@ -31,5 +53,7 @@ __all__ = [
     "BlockStore", "build_block_store",
     "BlockAlgorithm", "Mode", "default_estimate",
     "Schedule", "build_schedule", "lpt_assign",
+    "Context", "HostCtx", "build_context", "build_host_ctx",
+    "Plan", "compile_plan", "RunResult",
     "Engine", "run",
 ]

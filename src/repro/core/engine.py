@@ -1,81 +1,51 @@
-"""Iterative execution engine (paper §4.1, Fig. 2).
+"""Compiled execution plans (paper §4.1, Fig. 2) — build/compile vs execute.
 
 Execution flow reproduced from the paper:
 
   read → partition into blocks → compose block-lists (P_C/P_G) →
   estimate (E) & sort → [ I_B → run kernels on all tasks → I_A ]*
 
-The per-iteration body is a single jitted function.  Inside it the two
-paths run back-to-back over their own slice of the work:
+The API separates the two halves of that pipeline:
 
-* the **sparse path** (K_H analog) sees the segmented COO restricted to
-  its tasks via a static edge mask,
-* the **dense path** (K_D analog) sees the packed bitmap tiles.
+* :func:`compile_plan` does everything *before* the bracket once —
+  schedule composition, dense-tile materialization, algorithm
+  ``prepare``, backend resolution — and returns a :class:`Plan` that
+  owns the jitted per-iteration step.
+* :meth:`Plan.run` executes the bracketed loop: ``I_B`` and ``I_A`` run
+  host-side between steps (they may look at global attributes, flip
+  direction flags, and decide termination, exactly like the paper);
+  the step itself runs the sparse (K_H analog) and dense (K_D analog)
+  kernels back-to-back over their own slices of the work.
 
-``I_B``/``I_A`` run host-side between steps, exactly like the paper
-(they are allowed to look at global attributes, flip direction flags,
-reset counters, and decide termination).
+A ``Plan`` is reusable across runs and across *graphs*: the jitted step
+is fetched from a process-wide cache keyed on
+``(algorithm name, params, backend)``, and jit's own shape bucketing
+makes a second graph with the same padded shapes hit the compiled
+executable instead of retracing.  Kernels receive a typed
+:class:`~repro.core.context.Context` (device arrays + static scalars);
+hooks receive a :class:`~repro.core.context.HostCtx` (store, schedule).
+Host objects never cross the jit boundary, so there is no ctx
+split/merge machinery anymore.
+
+The legacy :class:`Engine` remains as a thin deprecated shim over
+``compile_plan``.
 """
 from __future__ import annotations
 
 import time
+import warnings
 from dataclasses import dataclass
 from typing import Any
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from .blocks import BlockStore
+from .context import Context, HostCtx, build_context, build_host_ctx
 from .functors import BlockAlgorithm
 from .scheduler import Schedule, build_schedule
 
-__all__ = ["Engine", "run"]
-
-
-def _split_ctx(ctx):
-    """Recursively split a context into (dynamic jnp-array pytree, static rest).
-
-    Dicts/lists/tuples are traversed; ``jax.Array`` leaves go to the
-    dynamic side (same container shape, ``None`` holes on the static
-    side), everything else (ints, callables, host objects) stays static.
-    """
-    if isinstance(ctx, jax.Array):
-        return ctx, _DYN
-    if isinstance(ctx, dict):
-        dyn, static = {}, {}
-        for k, v in ctx.items():
-            d, s = _split_ctx(v)
-            dyn[k], static[k] = d, s
-        return dyn, static
-    if isinstance(ctx, (list, tuple)):
-        pairs = [_split_ctx(v) for v in ctx]
-        dyn = [p[0] for p in pairs]
-        static = [p[1] for p in pairs]
-        return dyn, static
-    return None, ctx
-
-
-class _Dyn:
-    """Sentinel marking 'value lives on the dynamic side'."""
-
-    def __repr__(self) -> str:  # pragma: no cover
-        return "<dyn>"
-
-
-_DYN = _Dyn()
-
-
-def _merge_ctx(dyn, static):
-    if static is _DYN:
-        return dyn
-    if isinstance(static, dict):
-        return {k: _merge_ctx(dyn[k], static[k]) for k in static}
-    if isinstance(static, (list, tuple)):
-        return [
-            _merge_ctx(d, s) for d, s in zip(dyn, static)
-        ]
-    return static
+__all__ = ["Plan", "compile_plan", "RunResult", "Engine", "run"]
 
 
 @dataclass
@@ -87,7 +57,240 @@ class RunResult:
     schedule_stats: dict
 
 
+# ----------------------------------------------------------------------
+# Shared compiled steps: one entry per (alg identity, backend).  jit's
+# internal cache buckets by context/state shapes below this, so two
+# same-shape graphs — or two Plans for the same algorithm — share one
+# compilation.
+class _CompiledStep:
+    def __init__(self, alg: BlockAlgorithm) -> None:
+        self.traces = 0
+
+        def step(ctx: Context, state, it, run_dense: bool):
+            self.traces += 1  # trace-time side effect == compile counter
+            if alg.kernel_sparse is not None:
+                state = alg.kernel_sparse(ctx, state, it)
+            if alg.kernel_dense is not None and run_dense:
+                state = alg.kernel_dense(ctx, state, it)
+            if alg.post is not None:
+                state = alg.post(ctx, state, it)
+            return state
+
+        self._jit = jax.jit(step, static_argnums=(3,))
+
+    def __call__(self, ctx: Context, state, it, run_dense: bool):
+        return self._jit(ctx, state, it, run_dense)
+
+
+_STEP_CACHE: dict[tuple, _CompiledStep] = {}
+
+
+def _alg_cache_key(alg: BlockAlgorithm, backend: str) -> tuple:
+    """Algorithms are identified by (name, trace-affecting params, backend).
+
+    Factories record trace-affecting parameters under
+    ``metadata["params"]``; two factory calls with equal params produce
+    behaviourally identical kernels and may share a compiled step.
+    """
+    params = alg.metadata.get("params")
+    return (alg.name, repr(sorted(params.items())) if params else None, backend)
+
+
+def _compiled_step_for(alg: BlockAlgorithm, backend: str, *,
+                       share: bool = True) -> _CompiledStep:
+    if not share:
+        return _CompiledStep(alg)
+    key = _alg_cache_key(alg, backend)
+    entry = _STEP_CACHE.get(key)
+    if entry is None:
+        entry = _STEP_CACHE[key] = _CompiledStep(alg)
+    return entry
+
+
+# ----------------------------------------------------------------------
+@dataclass
+class _Binding:
+    """Per-store compiled inputs: the typed contexts + static routing."""
+
+    store: BlockStore
+    schedule: Schedule
+    context: Context
+    host: HostCtx
+    run_dense: bool
+
+
+class Plan:
+    """A compiled, reusable execution plan for one algorithm.
+
+    Produced by :func:`compile_plan`.  ``plan.run()`` executes on the
+    store it was compiled against; ``plan.run(other_store)`` binds and
+    runs another graph — reusing the jitted step outright when the
+    padded shapes match (no recompilation).
+    """
+
+    def __init__(self, alg: BlockAlgorithm, store: BlockStore,
+                 schedule: Schedule | None, *, backend: str,
+                 num_devices: int, mode: str, tile_dim: int,
+                 dense_frac: float, dense_density: float,
+                 share: bool = True) -> None:
+        from ..kernels.registry import resolve_backend
+
+        self.alg = alg
+        self.backend = resolve_backend(backend)
+        self._sched_kw = dict(
+            num_devices=num_devices, mode=mode, tile_dim=tile_dim,
+            dense_frac=dense_frac, dense_density=dense_density,
+        )
+        self._step = _compiled_step_for(alg, self.backend, share=share)
+        self._bindings: dict[int, _Binding] = {}
+        self._default = self.bind(store, schedule)
+
+    # Non-default bindings are memoized with a small FIFO cap so a sweep
+    # over many graphs doesn't pin every store's device arrays forever.
+    _MAX_BINDINGS = 8
+
+    # -- build/compile side -------------------------------------------
+    def bind(self, store: BlockStore,
+             schedule: Schedule | None = None) -> _Binding:
+        """Build (and memoize) the typed contexts for ``store``."""
+        cached = self._bindings.get(id(store))
+        if (cached is not None and cached.store is store
+                and (schedule is None or cached.schedule is schedule)):
+            return cached
+        sched = schedule or build_schedule(self.alg, store, **self._sched_kw)
+        extras = (
+            self.alg.prepare(store, sched) if self.alg.prepare is not None else {}
+        )
+        binding = _Binding(
+            store=store,
+            schedule=sched,
+            context=build_context(store, sched, backend=self.backend,
+                                  extras=extras),
+            host=build_host_ctx(store, sched, backend=self.backend),
+            run_dense=(
+                self.alg.kernel_dense is not None
+                and bool(sched.dense_task_mask.any())
+            ),
+        )
+        self._bindings.pop(id(store), None)
+        self._bindings[id(store)] = binding
+        if len(self._bindings) > self._MAX_BINDINGS:
+            default = getattr(self, "_default", None)
+            for key in list(self._bindings):
+                if len(self._bindings) <= self._MAX_BINDINGS:
+                    break
+                if self._bindings[key] is not default:
+                    del self._bindings[key]
+        return binding
+
+    @property
+    def store(self) -> BlockStore:
+        return self._default.store
+
+    @property
+    def schedule(self) -> Schedule:
+        """The schedule is a first-class artifact — inspect it freely."""
+        return self._default.schedule
+
+    @property
+    def context(self) -> Context:
+        return self._default.context
+
+    @property
+    def host(self) -> HostCtx:
+        return self._default.host
+
+    @property
+    def compile_count(self) -> int:
+        """Number of times the step has been traced (≈ jit compilations).
+
+        Shared across every Plan using the same cached step; the reuse
+        tests assert this stays at 1 across same-shape graphs.
+        """
+        return self._step.traces
+
+    # -- execute side --------------------------------------------------
+    def run(self, store: BlockStore | None = None,
+            state: Any | None = None) -> RunResult:
+        """Execute the iteration loop; see module docstring for the contract.
+
+        With ``alg.after`` present, iterate while it returns True (up to
+        ``max_iterations``); without it, run exactly ``max_iterations``
+        steps.
+        """
+        alg = self.alg
+        b = self._default if store is None else self.bind(store)
+        if state is None:
+            assert alg.init_state is not None, f"{alg.name}: init_state required"
+            state = alg.init_state(b.store)
+        t0 = time.perf_counter()
+        it = 0
+        cont = True
+        while cont and it < alg.max_iterations:
+            if alg.before is not None:
+                state = alg.before(b.host, state, it)
+            state = self._step(b.context, state, jnp.int32(it), b.run_dense)
+            if alg.after is not None:
+                state, cont = alg.after(b.host, state, it)
+            it += 1
+        state = jax.tree.map(
+            lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
+            state,
+        )
+        dt = time.perf_counter() - t0
+        result = alg.finalize(b.store, state) if alg.finalize else state
+        return RunResult(
+            result=result,
+            state=state,
+            iterations=it,
+            seconds=dt,
+            schedule_stats=b.schedule.stats,
+        )
+
+
+def compile_plan(
+    alg: BlockAlgorithm,
+    store: BlockStore,
+    schedule: Schedule | None = None,
+    *,
+    backend: str | None = None,
+    num_devices: int = 1,
+    mode: str = "hybrid",
+    tile_dim: int = 512,
+    dense_frac: float = 0.5,
+    dense_density: float = 0.005,
+    share: bool = True,
+    use_pallas: bool = False,
+) -> Plan:
+    """Build + compile: schedule, prepare, typed contexts, jitted step.
+
+    ``backend`` selects kernel implementations per the registry
+    (``"reference" | "xla" | "pallas"``, default ``"xla"``);
+    ``"pallas"`` falls back to ``"xla"`` when no Pallas runtime is
+    available.  ``use_pallas=True`` is the deprecated spelling of
+    ``backend="pallas"`` (an explicit ``backend`` wins).  ``share=False``
+    opts out of the process-wide compiled-step cache (use it for ad-hoc
+    algorithms that reuse a registered name with different kernels).
+    """
+    if backend is None:
+        backend = "pallas" if use_pallas else "xla"
+    return Plan(
+        alg, store, schedule,
+        backend=backend, num_devices=num_devices, mode=mode,
+        tile_dim=tile_dim, dense_frac=dense_frac,
+        dense_density=dense_density, share=share,
+    )
+
+
+# ----------------------------------------------------------------------
+# Legacy shim
 class Engine:
+    """Deprecated: use :func:`compile_plan` → :meth:`Plan.run`.
+
+    Kwarg mapping: ``use_pallas=True`` → ``backend="pallas"`` (else
+    ``"xla"``); everything else passes through unchanged.
+    """
+
     def __init__(
         self,
         alg: BlockAlgorithm,
@@ -97,103 +300,33 @@ class Engine:
         num_devices: int = 1,
         mode: str = "hybrid",
         use_pallas: bool = False,
+        backend: str | None = None,
         tile_dim: int = 512,
         dense_frac: float = 0.5,
         dense_density: float = 0.005,
     ) -> None:
+        warnings.warn(
+            "Engine is deprecated; use compile_plan(alg, store, ...).run()",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        self.plan = compile_plan(
+            alg, store, schedule,
+            backend=backend, use_pallas=use_pallas,
+            num_devices=num_devices, mode=mode, tile_dim=tile_dim,
+            dense_frac=dense_frac, dense_density=dense_density,
+        )
         self.alg = alg
         self.store = store
-        self.schedule = schedule or build_schedule(
-            alg,
-            store,
-            num_devices=num_devices,
-            mode=mode,
-            tile_dim=tile_dim,
-            dense_frac=dense_frac,
-            dense_density=dense_density,
-        )
-        self.use_pallas = use_pallas
-        self.ctx = self._build_context()
-        # Split device arrays out of the context and pass them as jit
-        # ARGUMENTS: baking them in as closure constants makes XLA
-        # constant-fold whole kernels at compile time (minutes for the
-        # dense-tile paths) and bloats every recompile.
-        self._ctx_dyn, self._ctx_static = _split_ctx(self.ctx)
 
-        def step(dyn, state, it):
-            ctx = _merge_ctx(dyn, self._ctx_static)
-            return self._step_impl(ctx, state, it)
+    @property
+    def schedule(self) -> Schedule:
+        return self.plan.schedule
 
-        self._step = jax.jit(step)
-
-    # ------------------------------------------------------------------
-    def _build_context(self) -> dict:
-        """Static per-run context handed to kernels."""
-        store, sched = self.store, self.schedule
-        ctx = store.device_arrays()
-        # static edge → path routing: an edge is on the dense path iff the
-        # task owning its block went dense.  (Bulk mode: task == block.)
-        dense_blocks = np.zeros(store.layout.num_blocks, dtype=bool)
-        if sched.dense_block_ids.size:
-            dense_blocks[sched.dense_block_ids] = True
-        edge_dense = dense_blocks[np.asarray(store.edge_block)]
-        ctx["sparse_edge_mask"] = jnp.asarray(~edge_dense)
-        ctx["dense_edge_mask"] = jnp.asarray(edge_dense)
-        ctx["n"] = store.n
-        ctx["m"] = store.m
-        ctx["p"] = store.p
-        ctx["cuts"] = jnp.asarray(store.layout.cuts)
-        ctx["tile_dim"] = sched.tile_dim
-        ctx["use_pallas"] = self.use_pallas
-        ctx["schedule"] = sched
-        ctx["store"] = store  # host-side only; kernels must not trace through it
-        if self.alg.prepare is not None:
-            ctx = self.alg.prepare(ctx, store, sched)
-        return ctx
-
-    def _step_impl(self, ctx, state, it):
-        alg = self.alg
-        if alg.kernel_sparse is not None:
-            state = alg.kernel_sparse(ctx, state, it)
-        if alg.kernel_dense is not None and self.schedule.dense_task_mask.any():
-            state = alg.kernel_dense(ctx, state, it)
-        if alg.post is not None:
-            state = alg.post(ctx, state, it)
-        return state
-
-    # ------------------------------------------------------------------
     def run(self, state: Any | None = None) -> RunResult:
-        alg = self.alg
-        if state is None:
-            assert alg.init_state is not None, f"{alg.name}: init_state required"
-            state = alg.init_state(self.store)
-        t0 = time.perf_counter()
-        it = 0
-        cont = True
-        while cont and it < alg.max_iterations:
-            if alg.before is not None:
-                state = alg.before(self.ctx, state, it)
-            state = self._step(self._ctx_dyn, state, jnp.int32(it))
-            if alg.after is not None:
-                state, cont = alg.after(self.ctx, state, it)
-            else:
-                cont = False
-            it += 1
-        state = jax.tree.map(
-            lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
-            state,
-        )
-        dt = time.perf_counter() - t0
-        result = alg.finalize(self.store, state) if alg.finalize else state
-        return RunResult(
-            result=result,
-            state=state,
-            iterations=it,
-            seconds=dt,
-            schedule_stats=self.schedule.stats,
-        )
+        return self.plan.run(state=state)
 
 
 def run(alg: BlockAlgorithm, store: BlockStore, **kw) -> RunResult:
-    """One-shot convenience: build a schedule, run the algorithm."""
-    return Engine(alg, store, **kw).run()
+    """One-shot convenience: compile a plan and execute it."""
+    return compile_plan(alg, store, **kw).run()

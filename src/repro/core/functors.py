@@ -5,12 +5,12 @@ A ``BlockAlgorithm`` is PGAbB's user contract translated to JAX:
 =============== =================================================
 paper functor    PGAbB-JAX field
 =============== =================================================
-``K_H``          ``kernel_sparse(arrays, state) -> state``  (VPU path)
-``K_D``          ``kernel_dense(arrays, state) -> state``   (MXU path)
+``K_H``          ``kernel_sparse(ctx, state, it) -> state``  (VPU path)
+``K_D``          ``kernel_dense(ctx, state, it) -> state``   (MXU path)
 ``P_C``/``P_G``  ``make_blocklists(store) -> np.ndarray``  /
                  ``blocklist_predicate(store, blocklist) -> bool``
-``I_B``          ``before(state, it) -> state``   (host side)
-``I_A``          ``after(state, it) -> (state, bool)``  — iterate while True
+``I_B``          ``before(host, state, it) -> state``   (host side)
+``I_A``          ``after(host, state, it) -> (state, bool)`` — iterate while True
 ``E``            ``estimate(store, blocklist) -> float``
 =============== =================================================
 
@@ -19,6 +19,18 @@ written").  ``state`` is a pytree of global/vertex/edge attributes
 (paper: A_G / A_V / A_E) — jnp arrays inside the jitted step, numpy at
 the host boundary.  ``mode`` declares the paper's execution-mode
 classification and drives block-list composition defaults.
+
+Kernels receive a typed :class:`~repro.core.context.Context` (device
+arrays, static scalars, and the algorithm's ``prepare`` outputs under
+``ctx.extras``); the host hooks ``before``/``after`` receive a
+:class:`~repro.core.context.HostCtx` (store, schedule, scalars) — host
+objects never enter the jitted step.
+
+Iteration contract (enforced by :meth:`repro.core.engine.Plan.run`):
+``I_B`` → step → ``I_A``, repeated.  When ``after`` is provided, the
+loop continues while it returns ``True``, bounded by
+``max_iterations``.  When ``after`` is *absent*, the loop runs exactly
+``max_iterations`` iterations (default 1) — it is NOT cut short at one.
 """
 from __future__ import annotations
 
@@ -64,13 +76,16 @@ class BlockAlgorithm:
     # post-path combine, runs inside the jitted step after both kernels
     # (e.g. PageRank applies damping once both paths accumulated)
     post: Callable[..., Any] | None = None
-    # one-time context preparation: (ctx, store, schedule) -> ctx
-    # (algorithms stash bucketed item arrays, tile index maps, ... here)
+    # one-time extras preparation: (store, schedule) -> dict placed on
+    # Context.extras (bucketed item arrays, tile index maps, ...).
+    # jax/numpy array leaves are traced; everything else stays static.
     prepare: Callable[..., dict] | None = None
     # initial attribute state factory: (store) -> pytree
     init_state: Callable[..., Any] | None = None
     # extract final result: (store, state) -> anything
     finalize: Callable[..., Any] | None = None
+    # free-form; factories record trace-affecting parameters under
+    # metadata["params"] so compiled steps are cached per (name, params)
     metadata: dict = field(default_factory=dict)
 
     def __post_init__(self) -> None:

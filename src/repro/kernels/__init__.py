@@ -6,7 +6,21 @@ frontier_tile— bottom-up BFS frontier probe (masked row reduction)
 attn_tile    — flash-style fused attention (LM substrate)
 ops          — jit'd wrappers w/ TPU/interpret dispatch
 ref          — pure-jnp oracles for all of the above
-"""
-from . import ops, ref
+registry     — kernel × backend ("reference"|"xla"|"pallas") dispatch table
 
-__all__ = ["ops", "ref"]
+``ops`` (and through it the Pallas kernel modules) imports lazily and is
+``None`` when no Pallas runtime exists; the registry's fallback chain
+(pallas → xla → reference) keeps every kernel callable regardless.
+"""
+from . import ref, registry
+from .registry import get_kernel, register_kernel, resolve_backend, pallas_available
+
+try:  # Pallas import can fail on minimal hosts; the registry degrades.
+    from . import ops
+except Exception:  # pragma: no cover
+    ops = None  # type: ignore[assignment]
+
+__all__ = [
+    "ops", "ref", "registry",
+    "get_kernel", "register_kernel", "resolve_backend", "pallas_available",
+]

@@ -1,0 +1,160 @@
+"""Kernel-backend registry: named kernels × {reference, xla, pallas}.
+
+Replaces the boolean ``use_pallas`` flag.  Each hot-spot kernel is
+registered once per backend it supports; dispatch happens at trace time
+(the backend name is static aux data on the :class:`~repro.core.context.Context`),
+so the jitted step bakes in exactly one implementation.
+
+Backends
+--------
+``reference``
+    The pure-jnp oracle from :mod:`repro.kernels.ref` — the mathematical
+    definition, used by tests and as the last-resort fallback.
+``xla``
+    The vectorized einsum/gather formulation that XLA fuses well — the
+    default on any backend.
+``pallas``
+    The hand-tiled Pallas kernels (native on TPU, ``interpret=True``
+    elsewhere).
+
+Resolution falls back down the chain ``pallas → xla → reference`` when
+a backend is unavailable or a kernel has no registration for it, so
+``backend="pallas"`` degrades cleanly instead of erroring on hosts
+without a working Pallas lowering.  Dense and sparse paths dispatch
+independently — registration is per kernel name, not global.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+__all__ = [
+    "BACKENDS", "register_kernel", "get_kernel", "resolve_backend",
+    "pallas_available", "registered",
+]
+
+BACKENDS = ("reference", "xla", "pallas")
+_FALLBACK = {"pallas": "xla", "xla": "reference"}
+
+_REGISTRY: dict[tuple[str, str], Callable] = {}
+
+# Test hook: force the availability probe (None = auto-detect).
+_FORCE_PALLAS_AVAILABLE: bool | None = None
+
+
+def pallas_available() -> bool:
+    """Whether a Pallas lowering path exists in this runtime."""
+    if _FORCE_PALLAS_AVAILABLE is not None:
+        return _FORCE_PALLAS_AVAILABLE
+    try:
+        import jax.experimental.pallas  # noqa: F401
+
+        from . import ops  # noqa: F401
+    except Exception:  # pragma: no cover — container without pallas
+        return False
+    return True
+
+
+def resolve_backend(backend: str) -> str:
+    """Validate ``backend`` and apply availability fallback.
+
+    ``pallas`` silently degrades to ``xla`` when no Pallas runtime is
+    importable; unknown names raise.
+    """
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r}; expected one of {BACKENDS}"
+        )
+    if backend == "pallas" and not pallas_available():
+        return "xla"
+    return backend
+
+
+def register_kernel(name: str, backend: str) -> Callable[[Callable], Callable]:
+    """Decorator: register ``fn`` as the ``backend`` implementation of ``name``."""
+    if backend not in BACKENDS:
+        raise ValueError(f"unknown backend {backend!r}")
+
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY[(name, backend)] = fn
+        return fn
+
+    return deco
+
+
+def get_kernel(name: str, backend: str) -> Callable:
+    """Resolve ``name`` for ``backend``, walking the fallback chain."""
+    b = resolve_backend(backend)
+    while True:
+        fn = _REGISTRY.get((name, b))
+        if fn is not None:
+            return fn
+        if b not in _FALLBACK:
+            raise KeyError(
+                f"kernel {name!r} has no registration reachable from "
+                f"backend {backend!r}"
+            )
+        b = _FALLBACK[b]
+
+
+def registered(name: str) -> dict[str, Callable]:
+    """All registered implementations of ``name``, keyed by backend."""
+    return {b: fn for (n, b), fn in _REGISTRY.items() if n == name}
+
+
+# ----------------------------------------------------------------------
+# Built-in registrations for the dense-path tile kernels.  Pallas
+# implementations import lazily inside the wrapper so merely selecting
+# the backend never pays (or breaks on) the Pallas import.
+def _register_builtin() -> None:
+    import jax.numpy as jnp
+
+    from . import ref
+
+    @register_kernel("spmv_tiles", "reference")
+    def _spmv_reference(tiles, xs):
+        return ref.spmv_tiles_ref(tiles, xs)
+
+    @register_kernel("spmv_tiles", "xla")
+    def _spmv_xla(tiles, xs):
+        return jnp.einsum("brc,br->bc", tiles, xs)
+
+    @register_kernel("spmv_tiles", "pallas")
+    def _spmv_pallas(tiles, xs):
+        from . import ops
+
+        return ops.spmv_tiles(tiles, xs)
+
+    @register_kernel("frontier_tiles", "reference")
+    def _frontier_reference(tiles, fcols):
+        return ref.frontier_tiles_ref(tiles, fcols)
+
+    @register_kernel("frontier_tiles", "xla")
+    def _frontier_xla(tiles, fcols):
+        t = tiles.shape[-1]
+        colid = jnp.arange(t, dtype=jnp.int32)[None, None, :]
+        masked = jnp.where((tiles > 0) & fcols[:, None, :], colid, ref.INT_MAX)
+        return masked.min(axis=2)
+
+    @register_kernel("frontier_tiles", "pallas")
+    def _frontier_pallas(tiles, fcols):
+        from . import ops
+
+        return ops.frontier_tiles(tiles, fcols)
+
+    @register_kernel("tc_tiles", "reference")
+    def _tc_reference(a_ik, a_jk, a_ij):
+        return ref.tc_tiles_ref(a_ik, a_jk, a_ij)
+
+    @register_kernel("tc_tiles", "xla")
+    def _tc_xla(a_ik, a_jk, a_ij):
+        wedges = jnp.einsum("brc,bsc->brs", a_ik, a_jk)
+        return jnp.sum(wedges * a_ij)
+
+    @register_kernel("tc_tiles", "pallas")
+    def _tc_pallas(a_ik, a_jk, a_ij):
+        from . import ops
+
+        return ops.tc_tiles(a_ik, a_jk, a_ij)
+
+
+_register_builtin()

@@ -1,7 +1,11 @@
 """Property-based tests (hypothesis) on system invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install .[dev])"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import from_edges, build_block_store, partition_symmetric_2d
 from repro.core.scheduler import lpt_assign
