@@ -1,8 +1,11 @@
 # Tier-1 verify — the exact command CI runs (see ROADMAP.md).
-.PHONY: test bench examples
+.PHONY: test lint bench examples
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
+
+lint:
+	ruff check src tests benchmarks examples
 
 bench:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m benchmarks.run --scale small

@@ -54,7 +54,11 @@ def _top_down(ctx, state, edge_mask):
     src, dst = ctx.src, ctx.dst
     parent, frontier = state["parent"], state["frontier"]
     n = parent.shape[0]
-    unvisited = parent == _UNVISITED
+    # visitation is judged on `dist`, which only `post` writes — so the
+    # guard sees iteration-start state no matter how the level's edge
+    # work is split (sparse→dense chaining in-core, waves streamed) and
+    # the level's min-scatter is order-independent.
+    unvisited = state["dist"] == _UNVISITED
     do = edge_mask & frontier[src] & unvisited[dst]
     tgt = jnp.where(do, dst, n)
     cand = jnp.where(do, src, _UNVISITED)
@@ -67,7 +71,7 @@ def _bottom_up_edges(ctx, state, edge_mask):
     src, dst = ctx.src, ctx.dst
     parent, frontier = state["parent"], state["frontier"]
     n = parent.shape[0]
-    unvisited = parent == _UNVISITED
+    unvisited = state["dist"] == _UNVISITED  # see _top_down
     do = edge_mask & unvisited[src] & frontier[dst]
     tgt = jnp.where(do, src, n)
     cand = jnp.where(do, dst, _UNVISITED)
@@ -103,7 +107,9 @@ def _bottom_up_tiles(ctx, state):
     )
     rows = ctx.tile_row_start[:, None] + jnp.arange(t)[None, :]
     rows = jnp.minimum(rows, n)            # tile rows past n are padding
-    unvisited_pad = jnp.concatenate([parent == _UNVISITED, jnp.asarray([False])])
+    unvisited_pad = jnp.concatenate(
+        [state["dist"] == _UNVISITED, jnp.asarray([False])]  # see _top_down
+    )
     cand = jnp.where(unvisited_pad[rows], cand, _UNVISITED)
     ppad = jnp.concatenate([parent, jnp.asarray([_UNVISITED], jnp.int32)])
     return ppad.at[rows].min(cand)[:n]
@@ -153,7 +159,8 @@ def bfs_algorithm(source: int = 0, *, max_iters: int = 10_000,
             parent=np.asarray(state["parent"]),
             dist=np.asarray(state["dist"]),
         ),
-        metadata=dict(combine=dict(parent="min", dist="min")),
+        metadata=dict(combine=dict(parent="min", dist="min"),
+                      workspace_kernel="frontier_tiles"),
     )
 
 

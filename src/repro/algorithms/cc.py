@@ -6,15 +6,21 @@ CPUs.  Structure:
 
 1. **Neighbor-rounds sampling** (first ``k`` rounds): round ``r`` hooks
    every vertex to its ``r``-th neighbor (a uniform, coalesced edge
-   subset — why the paper gives it to the GPU), followed by pointer
-   jumping.
+   subset — why the paper gives it to the GPU).
 2. **Skip detection** (host, I_B): sample vertices, find the most common
    component ``c_skip`` — the giant component.
 3. **Finalization**: SV-style hooking over all edges *except* those whose
    endpoints already sit in ``c_skip`` (activation-as-masking), repeated
    with compression until no hooks fire.
 
-All phases share the race-free min-scatter hook (see sv.py).
+All phases share the race-free min-scatter hook (see sv.py).  The
+kernel does *only* the hook — a min-decomposable scatter, so the
+streaming executor can fold per-wave partials exactly — while pointer
+jumping (compression) and the hook counter ``H`` live in ``post``,
+which runs once per iteration on the combined state.  ``C_prev``
+(stashed by I_B) is the iteration-start snapshot ``post`` diffs
+against; the count it produces is identical to counting changes before
+compression in-kernel, which is what the pre-refactor code did.
 """
 from __future__ import annotations
 
@@ -35,9 +41,7 @@ def _hook(C, u, v, do):
     do = do & (r1 != r2) & (C[r1] == r1)
     tgt = jnp.where(do, r1, n)
     Cp = jnp.concatenate([C, jnp.asarray([n], jnp.int32)])
-    Cn = Cp.at[tgt].min(r2)[:n]
-    h = jnp.sum((Cn != C).astype(jnp.int32))
-    return Cn, h
+    return Cp.at[tgt].min(r2)[:n]
 
 
 def _compress(C):
@@ -49,6 +53,7 @@ def _compress(C):
 def _init(store):
     return dict(
         C=jnp.arange(store.n, dtype=jnp.int32),
+        C_prev=jnp.arange(store.n, dtype=jnp.int32),
         H=jnp.asarray(0, jnp.int32),
         c_skip=jnp.asarray(-1, jnp.int32),
     )
@@ -61,29 +66,33 @@ def _make_kernel(k_rounds: int):
         C = state["C"]
         n = C.shape[0]
 
-        def sample_round(_):
+        def sample_round(C):
             r = it.astype(indptr.dtype)
             u = jnp.arange(n, dtype=jnp.int32)
             idx = jnp.minimum(indptr[:-1] + r, jnp.maximum(indices.shape[0] - 1, 0))
             v = indices[idx]
-            do = r < degrees
-            Cn, h = _hook(C, u, v, do)
-            return dict(state, C=_compress(Cn), H=h)
+            return _hook(C, u, v, r < degrees)
 
-        def final_round(_):
-            comp = C  # compressed from the previous round
-            skip = (comp[src] == state["c_skip"]) & (comp[dst] == state["c_skip"])
-            Cn, h = _hook(C, src, dst, msk & ~skip)
-            return dict(state, C=_compress(Cn), H=h)
+        def final_round(C):
+            skip = (C[src] == state["c_skip"]) & (C[dst] == state["c_skip"])
+            return _hook(C, src, dst, msk & ~skip)
 
-        return jax.lax.cond(it < k_rounds, sample_round, final_round, None)
+        return dict(
+            state, C=jax.lax.cond(it < k_rounds, sample_round, final_round, C)
+        )
 
     return kernel
+
+
+def _post(ctx, state, it):
+    hooked = jnp.sum((state["C"] != state["C_prev"]).astype(jnp.int32))
+    return dict(state, C=_compress(state["C"]), H=hooked)
 
 
 def afforest_algorithm(*, k_rounds: int = 2, sample_size: int = 1024,
                        max_iters: int = 200) -> BlockAlgorithm:
     def before(host, state, it):
+        state = dict(state, C_prev=state["C"])  # iteration-start snapshot
         if it == k_rounds:  # I_B: detect the giant component once
             C = np.asarray(jax.device_get(state["C"]))
             n = C.shape[0]
@@ -102,14 +111,18 @@ def afforest_algorithm(*, k_rounds: int = 2, sample_size: int = 1024,
         name="afforest",
         mode=Mode.BULK,
         kernel_sparse=_make_kernel(k_rounds),
+        post=_post,
         init_state=_init,
         before=before,
         after=after,
         max_iterations=max_iters,
         finalize=lambda store, state: np.asarray(state["C"]),
         metadata=dict(
-            combine=dict(C="min", H="add", c_skip="max"),
+            combine=dict(C="min", C_prev="min", H="add", c_skip="max"),
             params=dict(k_rounds=k_rounds),
+            # sampling rounds hook via the resident CSR only — the
+            # streaming executor runs one representative wave for them
+            edge_free_iterations=k_rounds,
         ),
     )
 

@@ -1,10 +1,21 @@
 """HITS (hubs & authorities) — paper Fig. 1 lists it under single-block
 bulk-synchronous execution next to PageRank.
 
-Per iteration: a ← Aᵀh, h ← A·a, both L2-normalized; converges to the
-principal singular vectors.  Same segmented-COO scatter structure as
-PageRank's sparse path; the dense tile path reuses ``spmv_tiles``-style
-contractions (hybrid mode supported through the same scheduler).
+a ← Aᵀh, h ← A·a, both L2-normalized; converges to the principal
+singular vectors.  The update is phase-split across engine iterations
+(even: authority scatter, odd: hub scatter — the same parity trick as
+Shiloach–Vishkin's hook/link), with the normalization in ``post``:
+
+* **kernel** (K_H): one masked segmented-COO scatter-add into the
+  ``acc`` scratch attribute — a pure edge-decomposable reduction, which
+  is what lets the streaming executor fold per-wave partials with the
+  declared ``add`` combine and reproduce the in-core result.
+* **post**: L2-normalize ``acc`` into ``auth`` (even) / ``hub`` (odd),
+  accumulate the L1 delta, reset ``acc`` — runs once per iteration on
+  the combined state.
+
+``delta`` therefore carries the full |Δa|+|Δh| of one mathematical
+HITS iteration only after the odd phase; ``after`` checks it there.
 """
 from __future__ import annotations
 
@@ -20,37 +31,67 @@ __all__ = ["hits_algorithm", "hits"]
 def _init(store):
     n = store.n
     v = jnp.full((n,), 1.0 / np.sqrt(n), jnp.float32)
-    return dict(hub=v, auth=v, delta=jnp.asarray(jnp.inf, jnp.float32))
+    return dict(
+        hub=v,
+        auth=v,
+        acc=jnp.zeros((n,), jnp.float32),
+        delta_a=jnp.asarray(0.0, jnp.float32),
+        delta=jnp.asarray(jnp.inf, jnp.float32),
+    )
 
 
 def _kernel_sparse(ctx, state, it):
     src, dst, msk = ctx.src, ctx.dst, ctx.sparse_edge_mask
     hub, auth = state["hub"], state["auth"]
-    # authority update: a[v] += h[u] over edges u→v
-    a_new = jnp.zeros_like(auth).at[dst].add(jnp.where(msk, hub[src], 0.0))
-    a_new = a_new / jnp.maximum(jnp.linalg.norm(a_new), 1e-12)
-    # hub update: h[u] += a_new[v]
-    h_new = jnp.zeros_like(hub).at[src].add(jnp.where(msk, a_new[dst], 0.0))
-    h_new = h_new / jnp.maximum(jnp.linalg.norm(h_new), 1e-12)
-    delta = jnp.sum(jnp.abs(a_new - auth)) + jnp.sum(jnp.abs(h_new - hub))
-    return dict(hub=h_new, auth=a_new, delta=delta)
+    acc = jax.lax.cond(
+        it % 2 == 0,
+        # authority phase: a[v] += h[u] over edges u→v
+        lambda a: a.at[dst].add(jnp.where(msk, hub[src], 0.0)),
+        # hub phase: h[u] += a[v] (auth already updated last iteration)
+        lambda a: a.at[src].add(jnp.where(msk, auth[dst], 0.0)),
+        state["acc"],
+    )
+    return dict(state, acc=acc)
+
+
+def _post(ctx, state, it):
+    def auth_phase(s):
+        a_new = s["acc"] / jnp.maximum(jnp.linalg.norm(s["acc"]), 1e-12)
+        return dict(
+            s, auth=a_new,
+            delta_a=jnp.sum(jnp.abs(a_new - s["auth"])),
+            acc=jnp.zeros_like(s["acc"]),
+        )
+
+    def hub_phase(s):
+        h_new = s["acc"] / jnp.maximum(jnp.linalg.norm(s["acc"]), 1e-12)
+        return dict(
+            s, hub=h_new,
+            delta=s["delta_a"] + jnp.sum(jnp.abs(h_new - s["hub"])),
+            acc=jnp.zeros_like(s["acc"]),
+        )
+
+    return jax.lax.cond(it % 2 == 0, auth_phase, hub_phase, state)
 
 
 def hits_algorithm(*, tol: float = 1e-8, max_iters: int = 100) -> BlockAlgorithm:
     def after(host, state, it):
+        if it % 2 == 0:
+            return state, True  # always finish the iteration's hub phase
         return state, bool(jax.device_get(state["delta"]) > tol)
 
     return BlockAlgorithm(
         name="hits",
         mode=Mode.BULK,
         kernel_sparse=_kernel_sparse,
+        post=_post,
         init_state=_init,
         after=after,
-        max_iterations=max_iters,
+        max_iterations=2 * max_iters,
         finalize=lambda store, state: dict(
             hub=np.asarray(state["hub"]), auth=np.asarray(state["auth"])
         ),
-        metadata=dict(combine=dict(hub="add", auth="add", delta="max")),
+        metadata=dict(combine=dict(acc="add")),
     )
 
 

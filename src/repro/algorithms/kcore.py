@@ -5,7 +5,12 @@ vertices whose alive-degree drops below k leave the subgraph, which
 re-activates their neighbors' blocks.
 
 Activation-as-masking (DESIGN §2): the alive mask plays the block-queue
-role; I_A stops when an iteration peels nobody.
+role; I_A stops when an iteration peels nobody.  The kernel is a pure
+alive-degree scatter-add into the ``deg`` scratch attribute (exactly
+add-decomposable across streamed waves); the ``deg >= k`` threshold,
+the peel counter, and the scratch reset run once per iteration in
+``post`` — splitting them would otherwise let a vertex whose degree is
+spread over several waves be peeled spuriously.
 """
 from __future__ import annotations
 
@@ -22,21 +27,29 @@ def _init(store):
     n = store.n
     return dict(
         alive=jnp.ones((n,), bool),
+        deg=jnp.zeros((n,), jnp.int32),
         peeled=jnp.asarray(1, jnp.int32),
     )
 
 
-def _make_kernel(k: int):
-    def kernel(ctx, state, it):
-        src, dst, msk = ctx.src, ctx.dst, ctx.sparse_edge_mask
-        alive = state["alive"]
-        contrib = (msk & alive[src] & alive[dst]).astype(jnp.int32)
-        deg = jnp.zeros(alive.shape[0], jnp.int32).at[dst].add(contrib)
-        new_alive = alive & (deg >= k)
-        peeled = jnp.sum((alive & ~new_alive).astype(jnp.int32))
-        return dict(alive=new_alive, peeled=peeled)
+def _kernel(ctx, state, it):
+    src, dst, msk = ctx.src, ctx.dst, ctx.sparse_edge_mask
+    alive = state["alive"]
+    contrib = (msk & alive[src] & alive[dst]).astype(jnp.int32)
+    return dict(state, deg=state["deg"].at[dst].add(contrib))
 
-    return kernel
+
+def _make_post(k: int):
+    def post(ctx, state, it):
+        alive = state["alive"]
+        new_alive = alive & (state["deg"] >= k)
+        return dict(
+            alive=new_alive,
+            deg=jnp.zeros_like(state["deg"]),
+            peeled=jnp.sum((alive & ~new_alive).astype(jnp.int32)),
+        )
+
+    return post
 
 
 def kcore_algorithm(k: int, *, max_iters: int = 10_000) -> BlockAlgorithm:
@@ -46,12 +59,13 @@ def kcore_algorithm(k: int, *, max_iters: int = 10_000) -> BlockAlgorithm:
     return BlockAlgorithm(
         name=f"kcore_{k}",
         mode=Mode.ACTIVATION,
-        kernel_sparse=_make_kernel(k),
+        kernel_sparse=_kernel,
+        post=_make_post(k),
         init_state=_init,
         after=after,
         max_iterations=max_iters,
         finalize=lambda store, state: np.asarray(state["alive"]),
-        metadata=dict(combine=dict(alive="min", peeled="add")),
+        metadata=dict(combine=dict(deg="add", alive="min", peeled="add")),
     )
 
 

@@ -91,7 +91,8 @@ def pagerank_algorithm(*, damping: float = 0.85, tol: float = 1e-4,
         after=after,
         max_iterations=max_iters,
         finalize=lambda store, state: np.asarray(state["rank"]),
-        metadata=dict(combine="add", params=dict(damping=damping)),
+        metadata=dict(combine="add", params=dict(damping=damping),
+                      workspace_kernel="spmv_tiles"),
     )
 
 

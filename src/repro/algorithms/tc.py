@@ -178,7 +178,7 @@ def tc_algorithm() -> BlockAlgorithm:
         init_state=lambda store: dict(nt=jnp.asarray(0, jnp.int32)),
         max_iterations=1,
         finalize=lambda store, state: int(jax.device_get(state["nt"])),
-        metadata=dict(combine="add"),
+        metadata=dict(combine="add", workspace_kernel="tc_tiles"),
     )
 
 

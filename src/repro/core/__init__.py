@@ -45,6 +45,8 @@ from .functors import BlockAlgorithm, Mode, default_estimate
 from .scheduler import Schedule, build_schedule, lpt_assign
 from .context import Context, HostCtx, build_context, build_host_ctx
 from .engine import Plan, compile_plan, RunResult, Engine, run
+from .membudget import MemoryBudget, task_footprints, build_waves
+from .stream import StreamingPlan, compile_streaming_plan
 
 __all__ = [
     "Graph", "from_edges", "read_edge_list", "load_binary", "save_binary",
@@ -55,5 +57,7 @@ __all__ = [
     "Schedule", "build_schedule", "lpt_assign",
     "Context", "HostCtx", "build_context", "build_host_ctx",
     "Plan", "compile_plan", "RunResult",
+    "MemoryBudget", "task_footprints", "build_waves",
+    "StreamingPlan", "compile_streaming_plan",
     "Engine", "run",
 ]

@@ -125,6 +125,41 @@ class BlockStore:
         self.tile_col_start = col_start
 
     # ------------------------------------------------------------------
+    def edge_segments(self, block_ids: np.ndarray) -> list[tuple[int, int]]:
+        """Coalesced ``[start, end)`` edge ranges covering ``block_ids``.
+
+        Blocks are contiguous in the segmented COO, so a wave whose
+        blocks are consecutive ids collapses to a single slice — the
+        "one copy per block-list" staging property of the paper.  Input
+        order is ignored; ranges come back sorted and merged.
+        """
+        ids = np.unique(np.asarray(block_ids, dtype=np.int64))
+        out: list[tuple[int, int]] = []
+        for b in ids:
+            s, e = int(self.block_ptr[b]), int(self.block_ptr[b + 1])
+            if s == e:
+                continue
+            if out and out[-1][1] == s:
+                out[-1] = (out[-1][0], e)
+            else:
+                out.append((s, e))
+        return out
+
+    def tile_subset(
+        self, block_ids: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(tiles, row_start, col_start) for ``block_ids`` out of the
+        materialized tile set — the per-wave dense staging unit.  All
+        requested blocks must already be materialized."""
+        ids = np.asarray(block_ids, dtype=np.int32)
+        pos_of = {int(b): i for i, b in enumerate(self.tile_block_ids)}
+        try:
+            pos = np.asarray([pos_of[int(b)] for b in ids], dtype=np.int64)
+        except KeyError as e:  # pragma: no cover — scheduler bug guard
+            raise ValueError(f"block {e} has no materialized tile") from e
+        return self.tiles[pos], self.tile_row_start[pos], self.tile_col_start[pos]
+
+    # ------------------------------------------------------------------
     def device_arrays(self) -> dict:
         """jnp views of the store for jitted kernels (lazy import keeps the
         host-side path numpy-only)."""

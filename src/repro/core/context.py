@@ -38,7 +38,8 @@ if TYPE_CHECKING:  # pragma: no cover — import cycle guard, typing only
     from .blocks import BlockStore
     from .scheduler import Schedule
 
-__all__ = ["Context", "HostCtx", "build_context", "build_host_ctx", "with_extras"]
+__all__ = ["Context", "HostCtx", "build_context", "build_host_ctx",
+           "with_extras", "with_arrays"]
 
 
 # Device-array fields, in flatten order.  ``tiles``/``tile_*`` are None
@@ -204,6 +205,24 @@ def build_host_ctx(store: "BlockStore", schedule: "Schedule", *,
         p=store.p,
         tile_dim=schedule.tile_dim,
     )
+
+
+def with_arrays(ctx: Context, **arrays: Any) -> Context:
+    """Return a copy of ``ctx`` with the named device-array fields (and
+    optionally ``extras``) swapped out.
+
+    This is how the streaming executor turns the *resident* context
+    (vertex-level arrays, full-graph scalars) into a per-wave context:
+    the segmented-COO slab, routing masks, tile set, and wave extras are
+    replaced while everything resident — ``indptr``, ``degrees``,
+    ``row_block_ptr``, static scalars — is shared by reference, so two
+    waves with equal slab shapes produce identical treedefs and hit the
+    same compiled step.
+    """
+    unknown = set(arrays) - set(_ARRAY_FIELDS) - {"extras"}
+    if unknown:
+        raise TypeError(f"unknown Context array fields: {sorted(unknown)}")
+    return replace(ctx, **arrays)
 
 
 def with_extras(ctx: Context, extras: dict[str, Any]) -> Context:

@@ -35,7 +35,10 @@ from __future__ import annotations
 import time
 import warnings
 from dataclasses import dataclass
-from typing import Any
+from typing import TYPE_CHECKING, Any
+
+if TYPE_CHECKING:  # pragma: no cover — import cycle guard, typing only
+    from .stream import StreamingPlan
 
 import jax
 import jax.numpy as jnp
@@ -96,15 +99,22 @@ def _alg_cache_key(alg: BlockAlgorithm, backend: str) -> tuple:
     return (alg.name, repr(sorted(params.items())) if params else None, backend)
 
 
+def _shared_entry(cache: dict, key: tuple, factory, *, share: bool = True):
+    """The one share-gated cache lookup used for every compiled-step
+    flavour (in-core step here; wave/post steps in stream.py) — keep
+    keying/invalidation changes in a single place."""
+    if not share:
+        return factory()
+    entry = cache.get(key)
+    if entry is None:
+        entry = cache[key] = factory()
+    return entry
+
+
 def _compiled_step_for(alg: BlockAlgorithm, backend: str, *,
                        share: bool = True) -> _CompiledStep:
-    if not share:
-        return _CompiledStep(alg)
-    key = _alg_cache_key(alg, backend)
-    entry = _STEP_CACHE.get(key)
-    if entry is None:
-        entry = _STEP_CACHE[key] = _CompiledStep(alg)
-    return entry
+    return _shared_entry(_STEP_CACHE, _alg_cache_key(alg, backend),
+                         lambda: _CompiledStep(alg), share=share)
 
 
 # ----------------------------------------------------------------------
@@ -261,7 +271,8 @@ def compile_plan(
     dense_density: float = 0.005,
     share: bool = True,
     use_pallas: bool = False,
-) -> Plan:
+    memory_budget: "int | str | None" = None,
+) -> "Plan | StreamingPlan":
     """Build + compile: schedule, prepare, typed contexts, jitted step.
 
     ``backend`` selects kernel implementations per the registry
@@ -271,9 +282,27 @@ def compile_plan(
     ``backend="pallas"`` (an explicit ``backend`` wins).  ``share=False``
     opts out of the process-wide compiled-step cache (use it for ad-hoc
     algorithms that reuse a registered name with different kernels).
+
+    ``memory_budget`` (bytes, or a string like ``"64MB"``) switches to
+    the out-of-core streaming executor: the result is a
+    :class:`~repro.core.stream.StreamingPlan` whose ``run`` stages
+    budget-sized, double-buffered waves of tasks instead of shipping
+    the whole segmented COO and tile set to the device up front.  Same
+    ``run()`` contract; ``schedule_stats["streaming"]`` reports waves,
+    bytes staged per wave, and overlap efficiency.
     """
     if backend is None:
         backend = "pallas" if use_pallas else "xla"
+    if memory_budget is not None:
+        from .stream import StreamingPlan
+
+        return StreamingPlan(
+            alg, store, schedule,
+            memory_budget=memory_budget,
+            backend=backend, num_devices=num_devices, mode=mode,
+            tile_dim=tile_dim, dense_frac=dense_frac,
+            dense_density=dense_density, share=share,
+        )
     return Plan(
         alg, store, schedule,
         backend=backend, num_devices=num_devices, mode=mode,

@@ -108,27 +108,41 @@ def from_edges(
 
 
 def read_edge_list(path: str, *, symmetrize: bool = True, comments: str = "#%") -> Graph:
-    """PIGO-style ASCII edge-list reader (whitespace separated ``u v`` lines)."""
-    rows: list[np.ndarray] = []
-    with open(path, "rb") as f:
-        data = f.read()
-    text = data.decode("utf-8", errors="ignore")
-    lines = [
-        ln for ln in text.splitlines() if ln.strip() and ln.lstrip()[0] not in comments
-    ]
-    arr = np.array(
-        [tuple(map(int, ln.split()[:2])) for ln in lines], dtype=np.int64
-    ).reshape(-1, 2)
+    """PIGO-style ASCII edge-list reader (whitespace separated ``u v`` lines).
+
+    Vectorized: ``np.loadtxt`` parses the whole file in one pass (blank
+    lines skipped, any of the ``comments`` characters starts a comment,
+    trailing columns such as edge weights ignored).  Falls back to a
+    line-by-line parse only for ragged files loadtxt rejects.
+    """
     name = os.path.splitext(os.path.basename(path))[0]
+    try:
+        arr = np.loadtxt(path, dtype=np.int64, comments=list(comments),
+                         usecols=(0, 1), ndmin=2)
+    except (ValueError, IndexError):
+        with open(path, "rb") as f:
+            text = f.read().decode("utf-8", errors="ignore")
+        rows = [
+            tuple(map(int, ln.split()[:2]))
+            for ln in text.splitlines()
+            if ln.strip() and ln.lstrip()[0] not in comments
+        ]
+        arr = np.asarray(rows, dtype=np.int64).reshape(-1, 2)
     return from_edges(arr[:, 0], arr[:, 1], symmetrize=symmetrize, name=name)
 
 
 def save_binary(g: Graph, path: str) -> None:
-    """Custom binary cache (paper §4.2): one mmap-able npz."""
+    """Custom binary cache (paper §4.2): one mmap-able npz.
+
+    Written atomically: savez always appends ``.npz`` to a name without
+    it, so write to a deterministic ``<path>.tmp.npz`` and always
+    ``os.replace`` onto the destination (no stale temp files, no
+    missed rename).
+    """
     tmp = path + ".tmp"
     np.savez(tmp, indptr=g.indptr, indices=g.indices, n=np.int64(g.n),
              directed=np.int8(g.directed))
-    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+    os.replace(tmp + ".npz", path)
 
 
 def load_binary(path: str, name: str = "graph") -> Graph:

@@ -1,0 +1,257 @@
+"""Device-memory footprint model + budget-sized wave packing (paper §4.3/§4.4).
+
+PGAbB's headline claim is that a task only ever needs the blocks of ONE
+block-list resident on the throughput device, so graphs that fit host
+DRAM but not accelerator memory still run.  This module is the pricing
+half of that subsystem: it puts a byte cost on every schedule task and
+packs the LPT-ordered tasks into *waves* whose staged working set fits
+an explicit ``memory_budget``.  The execution half (double-buffered
+staging, partial-result combination) lives in :mod:`repro.core.stream`.
+
+Footprint model
+---------------
+A task's streamed working set prices three components:
+
+* **COO slice** — the segmented-COO slab entries of every block in the
+  task's block-list: ``src``/``dst``/``edge_block`` (int32) plus the two
+  edge routing masks (bool) → :data:`COO_EDGE_BYTES` per edge.
+* **Dense tiles** — for MXU-path tasks, one ``tile_dim × tile_dim``
+  float32 bitmap per distinct block, plus the two int64 tile-origin
+  scalars (:func:`tile_bytes`).  Tiles shared by several tasks of one
+  wave are staged once; the per-task price is therefore an upper bound
+  and the wave builder re-prices the union.
+* **Kernel workspace** — per-kernel scratch estimates from the backend
+  registry (:func:`repro.kernels.registry.workspace_bytes`), e.g. the
+  gathered ``xs``/``ys`` slices of ``spmv_tiles``.
+
+Vertex-level attribute arrays (state pytree, ``degrees``, ``indptr``,
+``row_block_ptr``) and — for now — the global CSR ``indices`` stay
+*resident* across waves; :func:`resident_bytes` prices them so callers
+can see the full device picture.  Streaming the CSR row slices as well
+is an open item (see ROADMAP).
+
+Wave packing pads every wave's edge slab to one of a few fixed bucket
+shapes (:func:`bucket_size`, a power-of-two ladder) so a single jitted
+step serves all waves without retracing.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+import numpy as np
+
+from .blocks import BlockStore
+from .scheduler import Schedule
+
+__all__ = [
+    "MemoryBudget", "parse_bytes", "COO_EDGE_BYTES", "TILE_HEADER_BYTES",
+    "bucket_size", "task_edge_counts", "task_footprints", "tile_bytes",
+    "resident_bytes", "tree_array_bytes", "Wave", "build_waves",
+]
+
+# src + dst + edge_block (int32) + sparse/dense edge masks (bool).
+COO_EDGE_BYTES = 4 + 4 + 4 + 1 + 1
+# per-tile origin scalars: tile_row_start + tile_col_start (int64).
+TILE_HEADER_BYTES = 8 + 8
+
+_UNITS = {"b": 1, "kb": 10**3, "mb": 10**6, "gb": 10**9,
+          "kib": 2**10, "mib": 2**20, "gib": 2**30}
+
+
+def parse_bytes(budget: int | float | str) -> int:
+    """``8_000_000``, ``"64MB"``, ``"512KiB"`` → bytes (int)."""
+    if isinstance(budget, (int, float, np.integer, np.floating)):
+        return int(budget)
+    m = re.fullmatch(r"\s*([0-9.]+)\s*([kKmMgG]i?[bB]|[bB])?\s*", str(budget))
+    if not m:
+        raise ValueError(f"cannot parse memory budget {budget!r}")
+    scale = _UNITS[(m.group(2) or "b").lower()]
+    return int(float(m.group(1)) * scale)
+
+
+@dataclass(frozen=True)
+class MemoryBudget:
+    """An explicit device-memory budget for streamed task working sets."""
+
+    total_bytes: int
+
+    def __post_init__(self) -> None:
+        if self.total_bytes <= 0:
+            raise ValueError("memory budget must be positive")
+
+    @classmethod
+    def of(cls, budget: "int | str | MemoryBudget") -> "MemoryBudget":
+        if isinstance(budget, MemoryBudget):
+            return budget
+        return cls(parse_bytes(budget))
+
+
+def bucket_size(k: int, *, minimum: int = 8) -> int:
+    """Smallest power-of-two ≥ ``k`` — the fixed bucket ladder that keeps
+    the number of distinct wave-slab shapes (and therefore jit retraces)
+    logarithmic in the largest wave."""
+    k = max(int(k), minimum)
+    return 1 << int(np.ceil(np.log2(k)))
+
+
+def tile_bytes(tile_dim: int) -> int:
+    """Staged bytes for one dense bitmap tile."""
+    return tile_dim * tile_dim * 4 + TILE_HEADER_BYTES
+
+
+def task_edge_counts(store: BlockStore, schedule: Schedule) -> np.ndarray:
+    """(t,) edges across every block of each task's block-list."""
+    bls = schedule.blocklists
+    seg = np.diff(store.block_ptr)
+    return seg[bls].sum(axis=1).astype(np.int64)
+
+
+def task_footprints(store: BlockStore, schedule: Schedule, *,
+                    workspace_kernel: str | None = None) -> np.ndarray:
+    """(t,) bytes: the streamed working set of each task, per the model.
+
+    COO slab + (dense tasks) bitmap tiles per distinct block + kernel
+    workspace.  ``workspace_kernel`` names the registry kernel whose
+    workspace estimator prices the dense path (algorithms declare it in
+    ``metadata["workspace_kernel"]``); when unknown, the *maximum* over
+    all registered estimators is charged — conservative by design.
+    This is the scheduler-facing *estimate*; the wave builder verifies
+    the assembled slabs against the budget and splits waves whose
+    actual bytes (e.g. pattern-mode ``prepare`` items) exceed it.
+    """
+    from ..kernels.registry import (
+        max_workspace_bytes, registered_workspaces, workspace_bytes,
+    )
+
+    if (workspace_kernel is not None
+            and workspace_kernel not in registered_workspaces()):
+        raise ValueError(
+            f"workspace_kernel {workspace_kernel!r} has no registered "
+            f"estimator (known: {sorted(registered_workspaces())}); a "
+            f"typo here would silently under-price dense tasks"
+        )
+    edges = task_edge_counts(store, schedule)
+    out = edges * COO_EDGE_BYTES
+    if schedule.dense_task_mask.any():
+        per_tile = tile_bytes(schedule.tile_dim)
+        for t in np.nonzero(schedule.dense_task_mask)[0]:
+            blocks = np.unique(schedule.blocklists[t])
+            nd = int(blocks.size)
+            out[t] += nd * per_tile
+            if workspace_kernel is not None:
+                out[t] += workspace_bytes(workspace_kernel, nd=nd,
+                                          tile_dim=schedule.tile_dim)
+            else:
+                out[t] += max_workspace_bytes(nd=nd,
+                                              tile_dim=schedule.tile_dim)
+    return out.astype(np.int64)
+
+
+def tree_array_bytes(tree) -> int:
+    """Total bytes of the array leaves of a pytree (host or device);
+    static leaves (ints, strings, ...) cost nothing."""
+    import jax
+
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "nbytes"):
+            total += int(leaf.nbytes)
+    return total
+
+
+
+
+def resident_bytes(store: BlockStore, state=None) -> int:
+    """Bytes that stay on device across every wave: vertex-level arrays,
+    the conformal row map, the CSR adjacency (not yet streamed — see
+    module docstring), and optionally the state pytree."""
+    total = (
+        store.indptr.nbytes
+        + store.indices.nbytes
+        + store.degrees.nbytes
+        + store.row_block_ptr.nbytes
+        + store.layout.cuts.nbytes
+    )
+    if state is not None:
+        total += tree_array_bytes(state)
+    return int(total)
+
+
+# ----------------------------------------------------------------------
+@dataclass
+class Wave:
+    """One budget-sized unit of streamed work.
+
+    ``task_ids`` are indices into the schedule's task list, sorted by
+    leading block id so the COO gather coalesces into few contiguous
+    segments.  ``est_bytes`` is the model estimate used for packing;
+    the staged slab's actual (bucket-padded) bytes are measured by the
+    stream binder and recorded in ``schedule_stats``.
+    """
+
+    task_ids: np.ndarray
+    est_bytes: int
+
+
+def build_waves(store: BlockStore, schedule: Schedule,
+                budget: MemoryBudget,
+                footprints: np.ndarray | None = None) -> list[Wave]:
+    """Greedily pack LPT-ordered tasks into waves under ``budget``.
+
+    Walking tasks heaviest-first (the schedule's LPT order) keeps each
+    wave's load balanced the same way device packing does; a wave closes
+    when the next task would push its estimate past the budget.  Inside
+    a wave, tasks are re-sorted by leading block id so their segmented
+    COO slices coalesce.  A single task whose model footprint exceeds
+    the budget is unrunnable — raise rather than silently oversubscribe.
+    """
+    if footprints is None:
+        footprints = task_footprints(store, schedule)
+    waves: list[Wave] = []
+    cur: list[int] = []
+    cur_bytes = 0
+    for t in schedule.order:
+        b = int(footprints[t])
+        if b > budget.total_bytes:
+            raise ValueError(
+                f"task {int(t)} needs {b} bytes > budget "
+                f"{budget.total_bytes}; raise memory_budget or shrink "
+                f"tile_dim/blocks (p)"
+            )
+        if cur and cur_bytes + b > budget.total_bytes:
+            waves.append(_close_wave(cur, cur_bytes, schedule))
+            cur, cur_bytes = [], 0
+        cur.append(int(t))
+        cur_bytes += b
+    if cur:
+        waves.append(_close_wave(cur, cur_bytes, schedule))
+    return waves
+
+
+def _close_wave(task_ids: list[int], est_bytes: int,
+                schedule: Schedule) -> Wave:
+    ids = np.asarray(task_ids, dtype=np.int64)
+    lead = schedule.blocklists[ids, 0]
+    return Wave(task_ids=ids[np.argsort(lead, kind="stable")],
+                est_bytes=int(est_bytes))
+
+
+def split_wave(wave: Wave, schedule: Schedule,
+               footprints: np.ndarray) -> tuple[Wave, Wave]:
+    """Split a wave whose *assembled* slab overflowed the budget (the
+    model under-priced algorithm-specific ``prepare`` outputs, or
+    bucket padding pushed it over)."""
+    ids = wave.task_ids
+    if ids.size < 2:
+        raise ValueError(
+            "a single task's staged bytes (bucket-padded slab + prepare "
+            "extras) exceed the memory budget even though its model "
+            "footprint fits; raise memory_budget"
+        )
+    half = ids.size // 2
+    a, b = ids[:half], ids[half:]
+    return (
+        Wave(task_ids=a, est_bytes=int(footprints[a].sum())),
+        Wave(task_ids=b, est_bytes=int(footprints[b].sum())),
+    )

@@ -46,6 +46,7 @@ class Layout:
     p: int                     # grid dimension (p × p blocks)
     block_ids: np.ndarray      # (p, p) int32
     block_edge_counts: np.ndarray  # (p, p) int64
+    grid_pos: np.ndarray | None = None  # (p², 2) int32 inverse: id → (i, j)
 
     @property
     def num_blocks(self) -> int:
@@ -55,7 +56,10 @@ class Layout:
         return int(np.searchsorted(self.cuts, v, side="right") - 1)
 
     def grid_of(self, block_id: int) -> tuple[int, int]:
-        pos = np.argwhere(self.block_ids == block_id)
+        if self.grid_pos is not None:  # O(1): make_layout precomputes
+            i, j = self.grid_pos[block_id]
+            return int(i), int(j)
+        pos = np.argwhere(self.block_ids == block_id)  # legacy Layouts only
         return int(pos[0, 0]), int(pos[0, 1])
 
     def rows(self, i: int) -> tuple[int, int]:
@@ -165,4 +169,10 @@ def make_layout(g: Graph, p: int, *, order: str = "row_major") -> Layout:
         block_ids[1::2] = block_ids[1::2, ::-1]
     else:
         raise ValueError(f"unknown block order {order!r}")
-    return Layout(cuts=cuts, p=p, block_ids=block_ids, block_edge_counts=counts)
+    # invert block_ids once: grid_pos[id] = (i, j) — grid_of is then O(1)
+    # instead of an O(p²) argwhere per call
+    grid_pos = np.zeros((p * p, 2), dtype=np.int32)
+    ii, jj = np.meshgrid(np.arange(p), np.arange(p), indexing="ij")
+    grid_pos[block_ids.ravel()] = np.stack([ii.ravel(), jj.ravel()], axis=1)
+    return Layout(cuts=cuts, p=p, block_ids=block_ids,
+                  block_edge_counts=counts, grid_pos=grid_pos)

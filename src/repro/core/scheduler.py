@@ -52,6 +52,37 @@ class Schedule:
     def num_tasks(self) -> int:
         return int(self.blocklists.shape[0])
 
+    def restrict(self, task_ids: np.ndarray) -> "Schedule":
+        """A sub-schedule over ``task_ids`` (wave-aware packing support).
+
+        The streaming executor (:mod:`repro.core.stream`) binds one
+        sub-schedule per wave so algorithm ``prepare`` hooks see exactly
+        the wave's tasks — pattern-mode work items, dense-tile index
+        maps, … are then wave-local by construction.  ``dense_block_ids``
+        is recomputed from the restricted tasks; weights/assignment are
+        sliced; ``order`` re-ranks within the subset.
+        """
+        ids = np.asarray(task_ids, dtype=np.int64)
+        w = self.weights[ids]
+        mask = self.dense_task_mask[ids]
+        bls = self.blocklists[ids]
+        dense_block_ids = (
+            np.unique(bls[mask].ravel()).astype(np.int32)
+            if mask.any() else np.zeros(0, np.int32)
+        )
+        return Schedule(
+            blocklists=bls,
+            weights=w,
+            order=np.argsort(-w, kind="stable"),
+            dense_task_mask=mask,
+            dense_block_ids=dense_block_ids,
+            tile_dim=self.tile_dim,
+            device_assignment=self.device_assignment[ids],
+            num_devices=self.num_devices,
+            stats=dict(self.stats, restricted_from=self.num_tasks,
+                       num_tasks=int(ids.size)),
+        )
+
     def makespan_ratio(self) -> float:
         """LPT makespan / ideal (mean) load — straggler headroom metric."""
         loads = np.zeros(self.num_devices)

@@ -1,0 +1,629 @@
+"""Out-of-core streaming executor: memory-budgeted, double-buffered waves.
+
+This subsystem makes any :class:`~repro.core.engine.Plan`-compatible
+algorithm runnable under an explicit device-memory budget — the paper's
+headline capability ("graphs that fit host DRAM but not device memory",
+§4.3/§4.4, the block-list bound on device copies).  Four parts:
+
+1. **Footprint model** (:mod:`repro.core.membudget`) prices each
+   schedule task's COO slice, dense tiles, and kernel workspace in
+   bytes.
+2. **Wave builder** packs the LPT-ordered tasks into budget-sized
+   *waves*; every wave's edge slab is padded to one of a few fixed
+   bucket shapes (power-of-two ladder) so a single jitted step serves
+   all waves without retracing.  Within a wave, tasks are sorted by
+   leading block id so the segmented-COO gather coalesces into few
+   contiguous segments — staging approaches a single slice copy.
+3. **Double-buffered staging loop**: wave ``k``'s compute is dispatched
+   asynchronously (JAX async dispatch — the analog of the paper's four
+   CUDA streams), then wave ``k+1``'s host slab is ``jax.device_put``
+   while the device works; the previous slab's buffers are released as
+   their references drop.  The first executed iteration runs
+   synchronously to calibrate stage/compute times; every later
+   iteration overlaps, and ``schedule_stats`` reports the measured
+   overlap efficiency.
+4. **Partial-result combination**: each wave's kernels run against the
+   *iteration-start* state and its per-leaf updates are folded with the
+   algorithm's declared ``metadata["combine"]`` op (``add``/``min``/
+   ``max`` — the same semantics as
+   :func:`repro.core.distributed.combine_fn`), so streamed results
+   match the in-core bulk-synchronous step: exactly for integer/bool
+   attributes, and up to float summation order for real ones.  Leaves a
+   kernel passes through untouched are detected at trace time and
+   carried over unchanged, so no combine kind is needed for them.
+   ``post`` (and the host hooks) run once per iteration on the combined
+   state, against a *resident* context that holds only vertex-level
+   arrays.
+
+The device working set is: resident vertex-level arrays (state pytree,
+``indptr``/``degrees``/``row_block_ptr``/``cuts``, and — not yet
+streamed — the CSR ``indices``; see ROADMAP) plus at most two staged
+wave slabs (current + prefetch), each ≤ the budget.
+
+Entry point: ``compile_plan(alg, store, memory_budget=...)`` returns a
+:class:`StreamingPlan` instead of a :class:`~repro.core.engine.Plan`.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, replace as dc_replace
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .blocks import BlockStore
+from .context import Context, build_host_ctx, with_arrays
+from .functors import BlockAlgorithm
+from .membudget import (
+    MemoryBudget, Wave, bucket_size, build_waves, resident_bytes,
+    split_wave, task_footprints, tree_array_bytes,
+)
+from .scheduler import Schedule, build_schedule
+from .engine import RunResult, _alg_cache_key, _shared_entry
+
+__all__ = ["StreamingPlan", "compile_streaming_plan"]
+
+_COMBINE_KINDS = ("add", "min", "max")
+
+
+def _combine_spec(alg: BlockAlgorithm):
+    """metadata['combine'] → leaf-name → kind (or None when undeclared)."""
+    c = alg.metadata.get("combine")
+    if isinstance(c, str):
+        return lambda key: c
+    if isinstance(c, dict):
+        return lambda key: c.get(key)
+    return lambda key: None
+
+
+def _combine_leaf(kind: str | None, key: str, acc, s0, new):
+    if kind == "add":
+        return acc + (new - s0)
+    if kind == "min":
+        return jnp.minimum(acc, new)
+    if kind == "max":
+        return jnp.maximum(acc, new)
+    raise ValueError(
+        f"state leaf {key!r} is modified by the kernels but declares no "
+        f"combine kind in metadata['combine'] (one of {_COMBINE_KINDS}); "
+        f"streaming cannot fold its per-wave partial results"
+    )
+
+
+class _StreamStep:
+    """The jitted per-wave step: kernels from iteration-start state,
+    partials folded into the running accumulator via the combine spec.
+
+    Pass-through detection happens at trace time: a kernel that returns
+    ``dict(state, acc=...)`` leaves the other values as the *same*
+    tracer objects, which is exactly the contract "this wave did not
+    touch that attribute"."""
+
+    def __init__(self, alg: BlockAlgorithm) -> None:
+        self.traces = 0
+        spec = _combine_spec(alg)
+
+        def step(ctx: Context, state0, acc, it, run_dense: bool):
+            self.traces += 1
+            if not isinstance(state0, dict):
+                raise TypeError(
+                    f"{alg.name}: streaming requires a dict state pytree"
+                )
+            new = state0
+            if alg.kernel_sparse is not None:
+                new = alg.kernel_sparse(ctx, new, it)
+            if alg.kernel_dense is not None and run_dense:
+                new = alg.kernel_dense(ctx, new, it)
+            added = set(new) - set(state0)
+            if added:  # the in-core step would forward these to post;
+                # per-wave there is no baseline to combine them against
+                raise ValueError(
+                    f"{alg.name}: kernels added state leaves "
+                    f"{sorted(added)}; streaming requires kernels to "
+                    f"write only leaves present in init_state (declare "
+                    f"scratch attributes there)"
+                )
+            out = {}
+            for key in state0:
+                s0, nw = state0[key], new[key]
+                out[key] = (
+                    acc[key] if nw is s0
+                    else _combine_leaf(spec(key), key, acc[key], s0, nw)
+                )
+            return out
+
+        self._jit = jax.jit(step, static_argnums=(4,))
+
+    def __call__(self, ctx, state0, acc, it, run_dense: bool):
+        return self._jit(ctx, state0, acc, it, run_dense)
+
+
+class _PostStep:
+    """``post`` + trace counter, jitted once per algorithm identity."""
+
+    def __init__(self, alg: BlockAlgorithm) -> None:
+        self.traces = 0
+
+        def step(ctx: Context, state, it):
+            self.traces += 1
+            return alg.post(ctx, state, it)
+
+        self._jit = jax.jit(step)
+
+    def __call__(self, ctx, state, it):
+        return self._jit(ctx, state, it)
+
+
+_STREAM_STEP_CACHE: dict[tuple, _StreamStep] = {}
+_POST_STEP_CACHE: dict[tuple, _PostStep] = {}
+
+
+def _stream_step_for(alg: BlockAlgorithm, backend: str, *,
+                     share: bool = True) -> _StreamStep:
+    return _shared_entry(_STREAM_STEP_CACHE, _alg_cache_key(alg, backend),
+                         lambda: _StreamStep(alg), share=share)
+
+
+def _post_step_for(alg: BlockAlgorithm, backend: str, *,
+                   share: bool = True) -> _PostStep | None:
+    if alg.post is None:
+        return None
+    return _shared_entry(_POST_STEP_CACHE, _alg_cache_key(alg, backend),
+                         lambda: _PostStep(alg), share=share)
+
+
+# ----------------------------------------------------------------------
+@dataclass
+class _WaveSlab:
+    """Host-side staged form of one wave: padded numpy arrays ready for
+    a single ``jax.device_put`` per iteration."""
+
+    wave: Wave
+    src: np.ndarray
+    dst: np.ndarray
+    edge_block: np.ndarray
+    sparse_mask: np.ndarray
+    dense_mask: np.ndarray
+    tiles: np.ndarray | None
+    tile_row_start: np.ndarray | None
+    tile_col_start: np.ndarray | None
+    extras: Any                    # host pytree, or None once hoisted resident
+    run_dense: bool
+    staged_bytes: int
+    workspace_bytes: int           # kernel scratch estimate (not staged)
+    edges: int
+    segments: int                  # coalesced COO slices gathered
+
+
+def _is_array_leaf(leaf: Any) -> bool:
+    return isinstance(leaf, (np.ndarray, jax.Array))
+
+
+def _to_host(tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda l: np.asarray(l) if _is_array_leaf(l) else l, tree
+    )
+
+
+def _put_arrays(tree: Any) -> Any:
+    """device_put only the array leaves; static leaves stay untouched."""
+    return jax.tree_util.tree_map(
+        lambda l: jax.device_put(l) if _is_array_leaf(l) else l, tree
+    )
+
+
+def _trees_equal(a: Any, b: Any) -> bool:
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    if ta != tb or len(la) != len(lb):
+        return False
+    for x, y in zip(la, lb):
+        if _is_array_leaf(x) != _is_array_leaf(y):
+            return False
+        if _is_array_leaf(x):
+            if not np.array_equal(np.asarray(x), np.asarray(y)):
+                return False
+        elif x != y:
+            return False
+    return True
+
+
+def _block_tree(tree: Any) -> None:
+    for leaf in jax.tree_util.tree_leaves(tree):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+# ----------------------------------------------------------------------
+class StreamingPlan:
+    """A compiled plan whose execution streams budget-sized waves.
+
+    Produced by ``compile_plan(alg, store, memory_budget=...)``.  Same
+    ``run()`` contract as :class:`~repro.core.engine.Plan` (hooks, post,
+    iteration control, RunResult), but the per-iteration step is the
+    double-buffered wave loop described in the module docstring, and
+    ``schedule_stats`` additionally carries a ``"streaming"`` dict:
+    wave count, bytes staged per wave (each ≤ budget), resident bytes,
+    and overlap efficiency.
+    """
+
+    def __init__(self, alg: BlockAlgorithm, store: BlockStore,
+                 schedule: Schedule | None = None, *,
+                 memory_budget: int | str | MemoryBudget,
+                 backend: str = "xla", num_devices: int = 1,
+                 mode: str = "hybrid", tile_dim: int = 512,
+                 dense_frac: float = 0.5, dense_density: float = 0.005,
+                 share: bool = True) -> None:
+        from ..kernels.registry import resolve_backend
+
+        self.alg = alg
+        self.store = store
+        self.backend = resolve_backend(backend)
+        self.budget = MemoryBudget.of(memory_budget)
+        self.schedule = schedule or build_schedule(
+            alg, store, num_devices=num_devices, mode=mode,
+            tile_dim=tile_dim, dense_frac=dense_frac,
+            dense_density=dense_density,
+        )
+        self.host = build_host_ctx(store, self.schedule, backend=self.backend)
+
+        self._footprints = task_footprints(
+            store, self.schedule,
+            workspace_kernel=alg.metadata.get("workspace_kernel"),
+        )
+        self._slabs = self._build_slabs(
+            build_waves(store, self.schedule, self.budget, self._footprints)
+        )
+        self._resident = self._build_resident_context()
+        self._step = _stream_step_for(alg, self.backend, share=share)
+        self._post = _post_step_for(alg, self.backend, share=share)
+        self._calibration: dict | None = None
+        self._bytes_staged = 0          # actual H2D traffic, all passes
+        self._edge_free = int(alg.metadata.get("edge_free_iterations", 0))
+        self._edge_free_bufs: dict | None = None
+        self.schedule.stats["waves"] = len(self._slabs)
+
+    # -- build side ----------------------------------------------------
+    def _build_slabs(self, waves: list[Wave]) -> list[_WaveSlab]:
+        """Assemble host slabs; split any wave whose *actual* staged
+        bytes overflow the budget (model under-priced prepare extras).
+
+        Wave-invariant extras are hoisted resident *before* the budget
+        check — they are staged once, not per wave, so counting them
+        per wave would spuriously reject (or over-split) workable
+        budgets."""
+        slabs = [self._assemble(w) for w in waves]
+        self._decide_hoist(slabs)
+        out: list[_WaveSlab] = []
+        pending = slabs
+        while pending:
+            slab = pending.pop(0)
+            if (slab.staged_bytes + slab.workspace_bytes
+                    > self.budget.total_bytes):
+                # staged arrays + kernel scratch are the wave's real
+                # device footprint; split_wave raises for size-1 waves —
+                # the ≤ budget invariant is never silently violated
+                a, b = split_wave(slab.wave, self.schedule, self._footprints)
+                halves = [self._assemble(a), self._assemble(b)]
+                for h in halves:
+                    self._strip_hoisted(h)
+                pending[:0] = halves
+                continue
+            out.append(slab)
+        return out
+
+    def _assemble(self, wave: Wave) -> _WaveSlab:
+        store, sched = self.store, self.schedule
+        wsched = sched.restrict(wave.task_ids)
+        blocks = np.unique(wsched.blocklists)
+        segments = store.edge_segments(blocks)
+        idx = (
+            np.concatenate([np.arange(s, e, dtype=np.int64)
+                            for s, e in segments])
+            if segments else np.zeros(0, np.int64)
+        )
+        ne = int(idx.size)
+        eb = bucket_size(ne)
+        src = np.zeros(eb, np.int32)
+        dst = np.zeros(eb, np.int32)
+        edge_block = np.zeros(eb, np.int32)
+        sparse_mask = np.zeros(eb, bool)
+        dense_mask = np.zeros(eb, bool)
+        if ne:
+            src[:ne] = store.src[idx]
+            dst[:ne] = store.dst[idx]
+            edge_block[:ne] = store.edge_block[idx]
+            dense_blocks = np.zeros(store.layout.num_blocks, bool)
+            if wsched.dense_block_ids.size:
+                dense_blocks[wsched.dense_block_ids] = True
+            edense = dense_blocks[edge_block[:ne]]
+            sparse_mask[:ne] = ~edense
+            dense_mask[:ne] = edense
+
+        # -- dense tiles (already materialized by build_schedule) ------
+        tiles = trs = tcs = None
+        run_dense = (
+            self.alg.kernel_dense is not None
+            and bool(wsched.dense_task_mask.any())
+        )
+        wstore = store
+        if run_dense:
+            sub, sub_rs, sub_cs = store.tile_subset(wsched.dense_block_ids)
+            nd = sub.shape[0]
+            tb = bucket_size(nd, minimum=1)
+            t = sched.tile_dim
+            tiles = np.zeros((tb, t, t), np.float32)
+            tiles[:nd] = sub
+            trs = np.zeros(tb, np.int64)
+            trs[:nd] = sub_rs
+            tcs = np.zeros(tb, np.int64)
+            tcs[:nd] = sub_cs
+            wstore = dc_replace(
+                store, tile_dim=t,
+                tile_block_ids=wsched.dense_block_ids.astype(np.int32),
+                tiles=sub, tile_row_start=sub_rs, tile_col_start=sub_cs,
+            )
+        elif self.alg.prepare is not None:
+            # prepare must not see tiles the wave does not stage
+            wstore = dc_replace(
+                store, tile_dim=0,
+                tile_block_ids=np.zeros(0, np.int32),
+                tiles=np.zeros((0, 0, 0), np.float32),
+                tile_row_start=np.zeros(0, np.int64),
+                tile_col_start=np.zeros(0, np.int64),
+            )
+
+        extras = (
+            _to_host(self.alg.prepare(wstore, wsched))
+            if self.alg.prepare is not None else {}
+        )
+
+        staged = (
+            src.nbytes + dst.nbytes + edge_block.nbytes
+            + sparse_mask.nbytes + dense_mask.nbytes
+            + tree_array_bytes(extras)
+        )
+        ws = 0
+        if tiles is not None:
+            staged += tiles.nbytes + trs.nbytes + tcs.nbytes
+            from ..kernels.registry import max_workspace_bytes, workspace_bytes
+
+            wk = self.alg.metadata.get("workspace_kernel")
+            hints = dict(nd=int(tiles.shape[0]), tile_dim=sched.tile_dim)
+            ws = (workspace_bytes(wk, **hints) if wk is not None
+                  else max_workspace_bytes(**hints))
+        return _WaveSlab(
+            wave=wave, src=src, dst=dst, edge_block=edge_block,
+            sparse_mask=sparse_mask, dense_mask=dense_mask,
+            tiles=tiles, tile_row_start=trs, tile_col_start=tcs,
+            extras=extras, run_dense=run_dense,
+            staged_bytes=int(staged), workspace_bytes=int(ws),
+            edges=ne, segments=len(segments),
+        )
+
+    def _decide_hoist(self, slabs: list[_WaveSlab]) -> None:
+        """Wave-invariant ``prepare`` outputs (vertex-level attribute
+        arrays like PageRank's ``inv_deg``) are staged once as resident
+        instead of once per wave per iteration."""
+        self._resident_extras: dict = {}
+        self._hoisted = False
+        if not slabs:
+            return
+        first = slabs[0].extras
+        if all(_trees_equal(s.extras, first) for s in slabs[1:]):
+            self._resident_extras = first
+            self._hoisted = True
+            for s in slabs:
+                self._strip_hoisted(s)
+
+    def _strip_hoisted(self, slab: _WaveSlab) -> None:
+        """Drop a slab's extras (and their byte cost) when they match
+        the hoisted resident tree — also applied to slabs rebuilt by a
+        budget split after the hoist decision."""
+        if (self._hoisted and slab.extras is not None
+                and _trees_equal(slab.extras, self._resident_extras)):
+            slab.staged_bytes -= tree_array_bytes(slab.extras)
+            slab.extras = None
+
+    def _build_resident_context(self) -> Context:
+        """Vertex-level arrays only — the per-wave slab fields start
+        empty and are swapped in by :func:`with_arrays` each wave."""
+        store = self.store
+        return Context(
+            src=jnp.zeros(0, jnp.int32),
+            dst=jnp.zeros(0, jnp.int32),
+            edge_block=jnp.zeros(0, jnp.int32),
+            indptr=jnp.asarray(store.indptr),
+            indices=jnp.asarray(store.indices),
+            degrees=jnp.asarray(store.degrees),
+            row_block_ptr=jnp.asarray(store.row_block_ptr),
+            cuts=jnp.asarray(store.layout.cuts),
+            sparse_edge_mask=jnp.zeros(0, bool),
+            dense_edge_mask=jnp.zeros(0, bool),
+            extras=_put_arrays(dict(self._resident_extras)),
+            n=store.n,
+            m=store.m,
+            p=store.p,
+            tile_dim=self.schedule.tile_dim,
+            backend=self.backend,
+        )
+
+    # -- execute side --------------------------------------------------
+    @property
+    def num_waves(self) -> int:
+        return len(self._slabs)
+
+    @property
+    def compile_count(self) -> int:
+        return self._step.traces
+
+    def _stage(self, w: int) -> dict:
+        """One host→device copy of wave ``w``'s preassembled slab."""
+        slab = self._slabs[w]
+        self._bytes_staged += slab.staged_bytes
+        arrays = dict(
+            src=slab.src, dst=slab.dst, edge_block=slab.edge_block,
+            sparse_edge_mask=slab.sparse_mask, dense_edge_mask=slab.dense_mask,
+        )
+        if slab.tiles is not None:
+            arrays.update(tiles=slab.tiles, tile_row_start=slab.tile_row_start,
+                          tile_col_start=slab.tile_col_start)
+        bufs = jax.device_put(arrays)
+        if slab.extras is not None:
+            bufs["extras"] = _put_arrays(slab.extras)
+        return bufs
+
+    def _wave_context(self, bufs: dict) -> Context:
+        arrays = {k: v for k, v in bufs.items() if k != "extras"}
+        extras = bufs.get("extras")
+        if extras is not None:
+            return with_arrays(self._resident, extras=extras, **arrays)
+        return with_arrays(self._resident, **arrays)
+
+    def _run_waves(self, state0, it: int):
+        """One iteration's kernel work: stage + step every wave, folding
+        partials; calibration (synchronous, timed) on the first executed
+        iteration, double-buffered overlap afterwards."""
+        acc = state0
+        nw = len(self._slabs)
+        if nw == 0:
+            return acc, 0.0
+        iarr = jnp.int32(it)
+        if it < self._edge_free:
+            # the algorithm declared these iterations edge-free
+            # (kernels never read slab fields — e.g. Afforest's
+            # neighbor-sampling rounds): one representative wave,
+            # staged once and cached across the edge-free phase, gives
+            # the identical combined result — W-1 redundant full-vertex
+            # passes and all repeat stagings saved
+            if self._edge_free_bufs is None:
+                self._edge_free_bufs = self._stage(0)
+            acc = self._step(self._wave_context(self._edge_free_bufs),
+                             state0, acc, iarr, self._slabs[0].run_dense)
+            return acc, 0.0
+        self._edge_free_bufs = None     # release once edge work begins
+        if self._calibration is None:
+            # warm-up pass: trace/compile every distinct wave shape with
+            # the result discarded, so the timed pass below measures
+            # steady-state compute — not compilation (which would
+            # otherwise saturate overlap_efficiency at 1.0)
+            warm = state0
+            for w in range(nw):
+                warm = self._step(self._wave_context(self._stage(w)),
+                                  state0, warm, iarr, self._slabs[w].run_dense)
+            _block_tree(warm)
+            stage_s = compute_s = 0.0
+            for w in range(nw):
+                t0 = time.perf_counter()
+                bufs = self._stage(w)
+                _block_tree(bufs)
+                stage_s += time.perf_counter() - t0
+                t0 = time.perf_counter()
+                acc = self._step(self._wave_context(bufs), state0, acc, iarr,
+                                 self._slabs[w].run_dense)
+                _block_tree(acc)
+                compute_s += time.perf_counter() - t0
+            self._calibration = dict(stage_s=stage_s, compute_s=compute_s)
+            return acc, 0.0
+        t0 = time.perf_counter()
+        bufs = self._stage(0)
+        for w in range(nw):
+            ctx = self._wave_context(bufs)
+            # async dispatch: the step for wave w starts on device...
+            acc = self._step(ctx, state0, acc, iarr, self._slabs[w].run_dense)
+            # ...while wave w+1's slab crosses host→device.  Dropping
+            # `bufs` here releases the previous slab's buffers as soon
+            # as the step consumes them (two slabs max in flight).
+            bufs = self._stage(w + 1) if w + 1 < nw else None
+        _block_tree(acc)
+        return acc, time.perf_counter() - t0
+
+    def run(self, store: BlockStore | None = None,
+            state: Any | None = None) -> RunResult:
+        """Execute the streamed iteration loop (same contract as
+        :meth:`repro.core.engine.Plan.run`)."""
+        if store is not None and store is not self.store:
+            raise TypeError(
+                "StreamingPlan is bound to the store it was compiled "
+                "against; compile a new plan for a different graph"
+            )
+        alg = self.alg
+        if state is None:
+            assert alg.init_state is not None, f"{alg.name}: init_state required"
+            state = alg.init_state(self.store)
+        t0 = time.perf_counter()
+        it = 0
+        cont = True
+        overlapped_wall = 0.0
+        overlapped_iters = 0
+        staged_before = self._bytes_staged
+        while cont and it < alg.max_iterations:
+            if alg.before is not None:
+                state = alg.before(self.host, state, it)
+            state, wall = self._run_waves(state, it)
+            if wall > 0.0:
+                overlapped_wall += wall
+                overlapped_iters += 1
+            if self._post is not None:
+                state = self._post(self._resident, state, jnp.int32(it))
+            if alg.after is not None:
+                state, cont = alg.after(self.host, state, it)
+            it += 1
+        state = jax.tree.map(
+            lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
+            state,
+        )
+        dt = time.perf_counter() - t0
+        result = alg.finalize(self.store, state) if alg.finalize else state
+        return RunResult(
+            result=result,
+            state=state,
+            iterations=it,
+            seconds=dt,
+            schedule_stats=dict(
+                self.schedule.stats,
+                streaming=self._streaming_stats(
+                    state, overlapped_wall, overlapped_iters,
+                    staged_delta=self._bytes_staged - staged_before,
+                ),
+            ),
+        )
+
+    def _streaming_stats(self, state, overlapped_wall: float,
+                         overlapped_iters: int, *,
+                         staged_delta: int) -> dict:
+        bytes_per_wave = [s.staged_bytes for s in self._slabs]
+        calib = self._calibration or dict(stage_s=0.0, compute_s=0.0)
+        eff = 0.0
+        denom = min(calib["stage_s"], calib["compute_s"])
+        if overlapped_iters and denom > 0:
+            serial = calib["stage_s"] + calib["compute_s"]
+            mean_wall = overlapped_wall / overlapped_iters
+            eff = max(0.0, min(1.0, (serial - mean_wall) / denom))
+        return dict(
+            num_waves=len(self._slabs),
+            budget_bytes=self.budget.total_bytes,
+            bytes_per_wave=bytes_per_wave,
+            # actual H2D traffic this run, counting the calibration
+            # warm-up pass and edge-free single-wave iterations honestly
+            bytes_staged_total=int(staged_delta),
+            resident_bytes=(
+                resident_bytes(self.store, state)
+                + tree_array_bytes(self._resident_extras)
+                + tree_array_bytes(state)     # the accumulator copy
+            ),
+            edge_buckets=sorted({s.src.shape[0] for s in self._slabs}),
+            coalesced_segments=[s.segments for s in self._slabs],
+            overlap_efficiency=eff,
+            calibration=dict(calib),
+            overlapped_iterations=overlapped_iters,
+        )
+
+
+def compile_streaming_plan(alg: BlockAlgorithm, store: BlockStore,
+                           schedule: Schedule | None = None,
+                           **kw) -> StreamingPlan:
+    """Explicit spelling of ``compile_plan(..., memory_budget=...)``."""
+    return StreamingPlan(alg, store, schedule, **kw)

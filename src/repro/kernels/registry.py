@@ -29,7 +29,8 @@ from typing import Callable
 
 __all__ = [
     "BACKENDS", "register_kernel", "get_kernel", "resolve_backend",
-    "pallas_available", "registered",
+    "pallas_available", "registered", "register_workspace", "workspace_bytes",
+    "max_workspace_bytes", "registered_workspaces",
 ]
 
 BACKENDS = ("reference", "xla", "pallas")
@@ -99,6 +100,64 @@ def get_kernel(name: str, backend: str) -> Callable:
 def registered(name: str) -> dict[str, Callable]:
     """All registered implementations of ``name``, keyed by backend."""
     return {b: fn for (n, b), fn in _REGISTRY.items() if n == name}
+
+
+# ----------------------------------------------------------------------
+# Per-kernel workspace estimators: the memory-budget footprint model
+# (repro.core.membudget) asks the registry how much device scratch a
+# kernel needs on top of its staged inputs — e.g. spmv's gathered
+# xs/ys slices.  Estimators take keyword shape hints and return bytes;
+# unknown kernels price as 0 so the model degrades gracefully.
+_WORKSPACE: dict[str, Callable[..., int]] = {}
+
+
+def register_workspace(name: str) -> Callable[[Callable], Callable]:
+    """Decorator: register a workspace-bytes estimator for kernel ``name``."""
+
+    def deco(fn: Callable[..., int]) -> Callable:
+        _WORKSPACE[name] = fn
+        return fn
+
+    return deco
+
+
+def registered_workspaces() -> tuple[str, ...]:
+    """Names with a workspace estimator (declaration-typo guard)."""
+    return tuple(_WORKSPACE)
+
+
+def workspace_bytes(name: str, **shape_hints) -> int:
+    """Estimated scratch bytes for ``name`` given shape hints (0 if none)."""
+    fn = _WORKSPACE.get(name)
+    return int(fn(**shape_hints)) if fn is not None else 0
+
+
+def max_workspace_bytes(**shape_hints) -> int:
+    """Worst case over every registered estimator — what the footprint
+    model charges when an algorithm does not name its dense kernel."""
+    return max(
+        (int(fn(**shape_hints)) for fn in _WORKSPACE.values()), default=0
+    )
+
+
+# ``nd`` means "tiles staged in the batch" for every estimator below.
+@register_workspace("spmv_tiles")
+def _spmv_workspace(nd: int, tile_dim: int) -> int:
+    # gathered xs + produced ys, one (nd, T) float32 slab each
+    return 2 * nd * tile_dim * 4
+
+
+@register_workspace("frontier_tiles")
+def _frontier_workspace(nd: int, tile_dim: int) -> int:
+    # gathered frontier columns (bool) + candidate mins (int32)
+    return nd * tile_dim * (1 + 4)
+
+
+@register_workspace("tc_tiles")
+def _tc_workspace(nd: int, tile_dim: int) -> int:
+    # the gathered tile operands of the masked matmul (one per staged
+    # tile: each triple reads its 3 tiles, nd counts all of them)
+    return nd * tile_dim * tile_dim * 4
 
 
 # ----------------------------------------------------------------------

@@ -36,6 +36,47 @@ def test_binary_roundtrip(tmp_path):
     assert np.array_equal(g2.indices, g.indices)
 
 
+@pytest.mark.parametrize("fname", ["graph.bin", "cache.npz"])
+def test_binary_roundtrip_atomic_any_suffix(tmp_path, fname):
+    """Regression: save_binary used a conditional rename that could miss
+    (savez always appends .npz to the temp name) and leave stale temp
+    files behind.  Any destination suffix must work, atomically."""
+    g = rmat(6, 4, seed=3)
+    path = str(tmp_path / fname)
+    save_binary(g, path)
+    g2 = load_binary(path)
+    assert g2.n == g.n and np.array_equal(g2.indices, g.indices)
+    assert np.array_equal(g2.indptr, g.indptr)
+    assert g2.directed == g.directed
+    # no temp litter: exactly the destination file remains
+    assert sorted(p.name for p in tmp_path.iterdir()) == [fname]
+    save_binary(g, path)  # overwrite path is exercised too
+    assert sorted(p.name for p in tmp_path.iterdir()) == [fname]
+
+
+def test_read_edge_list_comments_and_blanks(tmp_path):
+    from repro.core import read_edge_list
+
+    text = (
+        "# a comment line\n"
+        "% another comment style\n"
+        "\n"
+        "0 1\n"
+        "1 2 0.5\n"         # trailing weight column ignored
+        "   \n"
+        "2 3\n"
+        "# trailing comment\n"
+        "3 0\n"
+    )
+    path = tmp_path / "edges.txt"
+    path.write_text(text)
+    g = read_edge_list(str(path))
+    assert g.n == 4
+    assert g.m == 8  # 4 undirected edges, symmetrized
+    assert set(g.neighbors(0).tolist()) == {1, 3}
+    assert set(g.neighbors(2).tolist()) == {1, 3}
+
+
 def test_degree_order_ascending():
     g = rmat(7, 6, seed=1)
     go, perm = degree_order(g, ascending=True)
@@ -62,6 +103,18 @@ def test_partition_1d_balance():
     assert loads.sum() == g.m
     # bottleneck within 2x of ideal for a graph with max degree << m/p
     assert loads.max() <= 2 * (g.m // 4 + int(g.degrees.max()))
+
+
+@pytest.mark.parametrize("order", ["row_major", "snake"])
+def test_grid_of_matches_block_ids(order):
+    """grid_of must invert block_ids exactly (now via the precomputed
+    O(1) inverse map rather than an O(p²) argwhere per call)."""
+    g = rmat(7, 6, seed=2)
+    layout = make_layout(g, 5, order=order)
+    assert layout.grid_pos is not None
+    for i in range(layout.p):
+        for j in range(layout.p):
+            assert layout.grid_of(int(layout.block_ids[i, j])) == (i, j)
 
 
 def test_layout_conformal_counts():

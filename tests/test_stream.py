@@ -1,0 +1,276 @@
+"""Out-of-core streaming executor: footprint model, wave packing, and
+streamed-vs-in-core equivalence for every algorithm.
+
+Equivalence contract (stream.py module docstring): streamed runs fold
+per-wave partials with the algorithm's declared combine op from the
+iteration-start state, so results are *bit-identical* to in-core for
+integer/bool attributes (SV, CC, BFS, k-core, TC) and equal up to float
+summation order for real ones (PageRank, HITS).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    rmat, build_block_store, build_schedule, compile_plan,
+    MemoryBudget, StreamingPlan, task_footprints, build_waves,
+)
+from repro.core.membudget import (
+    COO_EDGE_BYTES, bucket_size, parse_bytes, tile_bytes,
+)
+from repro.algorithms import (
+    pagerank_algorithm, sv_algorithm, afforest_algorithm, bfs_algorithm,
+    kcore_algorithm, hits_algorithm, tc_algorithm,
+)
+from repro.algorithms.tc import orient_dag
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return rmat(8, 8, seed=3)
+
+
+@pytest.fixture(scope="module")
+def dag(graph):
+    return orient_dag(graph)
+
+
+# All seven algorithms.  Budgets are sized to force several waves on
+# rmat(8, 8) while leaving room for one task (hybrid tasks must fit
+# their dense tiles, hence the smaller tile_dim).
+ALGORITHMS = [
+    ("pagerank", pagerank_algorithm,
+     dict(mode="hybrid", dense_density=0.001, tile_dim=128), "90KB"),
+    ("sv", sv_algorithm, dict(mode="sparse_only"), "16KB"),
+    ("afforest", afforest_algorithm, dict(mode="sparse_only"), "16KB"),
+    ("bfs", lambda: bfs_algorithm(0),
+     dict(mode="hybrid", dense_density=0.001, tile_dim=128), "90KB"),
+    ("kcore3", lambda: kcore_algorithm(3), dict(mode="sparse_only"), "16KB"),
+    ("hits", hits_algorithm, dict(mode="sparse_only"), "16KB"),
+    ("tc", tc_algorithm,
+     dict(mode="hybrid", dense_density=0.001, tile_dim=128), "600KB"),
+]
+
+
+def _assert_equivalent(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    if a.dtype.kind in "fc":
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-7)
+    else:
+        np.testing.assert_array_equal(a, b)
+
+
+@pytest.mark.parametrize("name,alg_f,kw,budget",
+                         ALGORITHMS, ids=[a[0] for a in ALGORITHMS])
+def test_streamed_matches_incore(name, alg_f, kw, budget, graph, dag):
+    g = dag if name == "tc" else graph
+    incore = compile_plan(alg_f(), build_block_store(g, 4), share=False, **kw)
+    streamed = compile_plan(alg_f(), build_block_store(g, 4), share=False,
+                            memory_budget=budget, **kw)
+    assert isinstance(streamed, StreamingPlan)
+    r_in, r_st = incore.run(), streamed.run()
+
+    st = r_st.schedule_stats["streaming"]
+    if name != "tc":  # tc's task count varies; the others must split ≥4×
+        assert st["num_waves"] >= 4
+    assert r_st.iterations == r_in.iterations
+
+    ra, rb = r_in.result, r_st.result
+    if isinstance(ra, dict):
+        assert ra.keys() == rb.keys()
+        for k in ra:
+            _assert_equivalent(ra[k], rb[k])
+    else:
+        _assert_equivalent(np.asarray(ra), np.asarray(rb))
+
+    # acceptance: stats report wave count, per-wave staged bytes ≤ budget,
+    # and overlap efficiency
+    assert st["num_waves"] == len(st["bytes_per_wave"])
+    assert all(b <= st["budget_bytes"] for b in st["bytes_per_wave"])
+    assert 0.0 <= st["overlap_efficiency"] <= 1.0
+    assert st["bytes_staged_total"] >= sum(st["bytes_per_wave"])
+    assert st["resident_bytes"] > 0
+
+
+def test_streamed_tc_forces_multiple_waves(dag):
+    """TC counterpart of the ≥4-wave requirement (pattern mode)."""
+    plan = compile_plan(tc_algorithm(), build_block_store(dag, 4),
+                        mode="sparse_only", share=False,
+                        memory_budget="24KB")
+    res = plan.run()
+    st = res.schedule_stats["streaming"]
+    assert st["num_waves"] >= 4
+    want = compile_plan(tc_algorithm(), build_block_store(dag, 4),
+                        mode="sparse_only", share=False).run().result
+    assert res.result == want
+
+
+# ------------------------------------------------------------ membudget
+def test_parse_bytes():
+    assert parse_bytes(12345) == 12345
+    assert parse_bytes("64KB") == 64_000
+    assert parse_bytes("2MiB") == 2 * 2**20
+    assert parse_bytes("1.5kb") == 1500
+    with pytest.raises(ValueError):
+        parse_bytes("sixty four")
+    with pytest.raises(ValueError):
+        MemoryBudget(0)
+
+
+def test_bucket_size_ladder():
+    assert bucket_size(1) == 8          # floor
+    assert bucket_size(8) == 8
+    assert bucket_size(9) == 16
+    assert bucket_size(1000) == 1024
+    assert bucket_size(1025) == 2048
+
+
+def test_footprint_model_prices_coo_and_tiles(graph):
+    store = build_block_store(graph, 4)
+    alg = pagerank_algorithm()
+    sparse_sched = build_schedule(alg, store, mode="sparse_only")
+    fp = task_footprints(store, sparse_sched)
+    assert fp.shape == (sparse_sched.num_tasks,)
+    # sparse single-block tasks price exactly edges × COO bytes
+    seg = np.diff(store.block_ptr)
+    want = seg[sparse_sched.blocklists[:, 0]] * COO_EDGE_BYTES
+    np.testing.assert_array_equal(fp, want)
+
+    hybrid_sched = build_schedule(alg, store, mode="hybrid",
+                                  dense_density=0.001, tile_dim=128)
+    fp_h = task_footprints(store, hybrid_sched)
+    dense = hybrid_sched.dense_task_mask
+    assert dense.any()
+    # dense tasks additionally price their bitmap tiles (+ workspace)
+    assert (fp_h[dense] >= want[dense] + tile_bytes(128)).all()
+    np.testing.assert_array_equal(fp_h[~dense], want[~dense])
+
+
+def test_wave_packing_respects_budget_and_covers_all_tasks(graph):
+    store = build_block_store(graph, 4)
+    sched = build_schedule(pagerank_algorithm(), store, mode="sparse_only")
+    fp = task_footprints(store, sched)
+    budget = MemoryBudget(int(fp.max()) * 2)
+    waves = build_waves(store, sched, budget, fp)
+    assert len(waves) >= 2
+    # no wave's model estimate exceeds the budget
+    for w in waves:
+        assert fp[w.task_ids].sum() <= budget.total_bytes
+        assert w.est_bytes == fp[w.task_ids].sum()
+    # union of waves == all tasks, disjointly
+    all_ids = np.concatenate([w.task_ids for w in waves])
+    assert len(all_ids) == len(set(all_ids.tolist()))
+    assert set(all_ids.tolist()) == set(range(sched.num_tasks))
+
+
+def test_wave_tasks_sorted_for_coalesced_staging(graph):
+    store = build_block_store(graph, 4)
+    sched = build_schedule(pagerank_algorithm(), store, mode="sparse_only")
+    fp = task_footprints(store, sched)
+    waves = build_waves(store, sched, MemoryBudget(int(fp.max()) * 3), fp)
+    for w in waves:
+        lead = sched.blocklists[w.task_ids, 0]
+        assert np.all(np.diff(lead) >= 0)
+
+
+def test_oversized_task_raises(graph):
+    store = build_block_store(graph, 4)
+    with pytest.raises(ValueError, match="budget"):
+        compile_plan(pagerank_algorithm(), store, mode="sparse_only",
+                     share=False, memory_budget=64)
+
+
+def test_padded_single_task_overflow_raises_not_oversubscribes(graph):
+    """Regression: a budget that fits the raw footprint but not the
+    bucket-padded slab must raise, never silently stage over budget."""
+    store = build_block_store(graph, 4)
+    sched = build_schedule(pagerank_algorithm(), store, mode="sparse_only")
+    fp = task_footprints(store, sched)
+    budget = int(fp.max()) + 1  # below the padded slab of the biggest task
+    try:
+        plan = compile_plan(pagerank_algorithm(), store, mode="sparse_only",
+                            share=False, memory_budget=budget)
+    except ValueError:
+        return  # honest refusal is the expected outcome...
+    st = plan.run().schedule_stats["streaming"]  # ...or every wave fits
+    assert all(b <= st["budget_bytes"] for b in st["bytes_per_wave"])
+
+
+def test_hoisted_extras_do_not_count_against_budget(graph):
+    """Regression: wave-invariant prepare extras are staged once
+    (resident), so a budget that fits the padded slabs but not
+    slab+extras must still work — not over-split or raise."""
+    from repro.core.membudget import COO_EDGE_BYTES
+
+    store = build_block_store(graph, 4)
+    sched = build_schedule(pagerank_algorithm(), store, mode="sparse_only")
+    seg = np.diff(store.block_ptr)[sched.blocklists[:, 0]]
+    max_padded_slab = int(max(bucket_size(int(e)) for e in seg)) * COO_EDGE_BYTES
+    budget = max_padded_slab + 200  # < slab + inv_deg/dangling extras
+    plan = compile_plan(pagerank_algorithm(), store, mode="sparse_only",
+                        share=False, memory_budget=budget)
+    res = plan.run()
+    st = res.schedule_stats["streaming"]
+    assert all(b <= st["budget_bytes"] for b in st["bytes_per_wave"])
+    assert abs(float(np.asarray(res.result).sum()) - 1.0) < 1e-3
+
+
+def test_edge_free_iterations_stage_one_wave(graph):
+    """Afforest's sampling rounds declare edge_free_iterations: only one
+    representative wave is staged per sampling round, and the staged
+    byte accounting reflects the warm-up + calibration passes."""
+    plan = compile_plan(afforest_algorithm(), build_block_store(graph, 4),
+                        mode="sparse_only", share=False, memory_budget="16KB")
+    res = plan.run()
+    st = res.schedule_stats["streaming"]
+    bpw = st["bytes_per_wave"]
+    k_rounds = 2  # afforest default
+    n_final = res.iterations - k_rounds
+    assert n_final >= 1
+    # sampling: wave 0 staged once, cached across rounds; first final
+    # iteration: warm-up + timed calibration pass (2× all waves);
+    # remaining finals: 1× all waves
+    expected = bpw[0] + (n_final + 1) * sum(bpw)
+    assert st["bytes_staged_total"] == expected
+    want = compile_plan(afforest_algorithm(), build_block_store(graph, 4),
+                        mode="sparse_only", share=False).run().result
+    np.testing.assert_array_equal(np.asarray(res.result), np.asarray(want))
+
+
+def test_streaming_plan_is_rebound_safely(graph):
+    plan = compile_plan(pagerank_algorithm(), build_block_store(graph, 4),
+                        mode="sparse_only", share=False, memory_budget="64KB")
+    other = build_block_store(graph, 4)
+    with pytest.raises(TypeError, match="bound to the store"):
+        plan.run(other)
+
+
+def test_wave_slabs_stay_bucketed(graph):
+    """All waves of one plan share a handful of padded slab shapes, so
+    the jitted step does not retrace per wave."""
+    plan = compile_plan(pagerank_algorithm(), build_block_store(graph, 4),
+                        mode="sparse_only", share=False, memory_budget="16KB")
+    res = plan.run()
+    st = res.schedule_stats["streaming"]
+    assert st["num_waves"] >= 4
+    assert len(st["edge_buckets"]) <= 3     # power-of-two ladder
+    for b in st["edge_buckets"]:
+        assert b == bucket_size(b)
+    # one trace per (slab shape × run_dense) — far fewer than waves
+    assert plan.compile_count <= len(st["edge_buckets"]) + 1
+
+
+def test_schedule_restrict_subsets(graph):
+    store = build_block_store(graph, 4)
+    sched = build_schedule(pagerank_algorithm(), store, mode="hybrid",
+                           dense_density=0.001, tile_dim=128)
+    ids = np.asarray([0, 3, 5])
+    sub = sched.restrict(ids)
+    assert sub.num_tasks == 3
+    np.testing.assert_array_equal(sub.blocklists, sched.blocklists[ids])
+    np.testing.assert_array_equal(sub.weights, sched.weights[ids])
+    np.testing.assert_array_equal(sub.dense_task_mask,
+                                  sched.dense_task_mask[ids])
+    # dense blocks recomputed from the restricted tasks only
+    want = (np.unique(sched.blocklists[ids][sched.dense_task_mask[ids]])
+            if sched.dense_task_mask[ids].any() else np.zeros(0))
+    np.testing.assert_array_equal(sub.dense_block_ids, want)
