@@ -1,11 +1,17 @@
 # Tier-1 verify — the exact command CI runs (see ROADMAP.md).
-.PHONY: test lint bench examples
+.PHONY: test lint bench examples docs-test
 
 test:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
 
 lint:
 	ruff check src tests benchmarks examples
+
+# every ">>> " block in README.md and docs/ is executed — the quickstart
+# cannot rot
+docs-test:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -q \
+		--doctest-glob='*.md' README.md docs
 
 bench:
 	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m benchmarks.run --scale small

@@ -6,10 +6,13 @@ Two measurements on this container:
 
 * the original tile sweep — hybrid TC completes with bounded resident
   tile bytes while unbounded dense-only would need the full n² matrix;
-* the streaming executor — ``--memory-budget`` runs PageRank under an
-  explicit budget through ``compile_plan(..., memory_budget=...)`` and
-  reports wave count, bytes staged per wave, and the measured
-  copy/compute overlap efficiency from ``schedule_stats["streaming"]``.
+* the streaming executor — ``--memory-budget`` runs PageRank (csr=none:
+  COO waves only) and TC (csr=slice: per-wave conformal CSR staging)
+  under an explicit budget through ``compile_plan(..., memory_budget=...)``
+  with budget-aware partitioning (``choose_p``) and tail-wave
+  rebalancing enabled, and reports wave count, bytes staged per wave
+  (CSR broken out), and the measured copy/compute overlap efficiency
+  from ``schedule_stats["streaming"]``.
 
 CLI: ``python -m benchmarks.oversub [--memory-budget 256KB]``.
 """
@@ -19,7 +22,7 @@ import argparse
 
 import numpy as np
 
-from repro.core import build_block_store, compile_plan
+from repro.core import build_block_store, choose_p, compile_plan
 from repro.algorithms import pagerank_algorithm, tc_algorithm
 from repro.algorithms.tc import orient_dag
 from repro.data import benchmark_suite
@@ -53,34 +56,56 @@ def run(scale: str = "small", repeats: int = 3, backend: str = "xla",
 
 def run_streaming(g, *, repeats: int = 3, backend: str = "xla",
                   memory_budget: str | None = None) -> list[str]:
-    """PageRank under an explicit device-memory budget (streamed waves)."""
+    """PageRank + TC under an explicit device-memory budget.
+
+    PageRank (csr=none) streams pure COO waves; TC (csr=slice) also
+    stages each wave's conformal CSR row slices, so ``max_csr_bytes``
+    shows the adjacency itself staying under the budget.  Both use the
+    budget-aware partition grain and opt in to tail-wave rebalancing.
+    """
     budgets = [memory_budget] if memory_budget else ["256KB", "64KB"]
     rows = []
-    store = build_block_store(g, 8)
+    dag = orient_dag(g)
     for budget in budgets:
-        try:
-            plan = compile_plan(pagerank_algorithm(), store,
-                                mode="sparse_only", backend=backend,
-                                memory_budget=budget)
-        except ValueError as e:
-            rows.append(csv_row(f"oversub/stream/pr/{budget}", 0.0,
-                                f"error={e}"))
-            continue
-        last: dict = {}
+        jobs = [
+            ("pr", pagerank_algorithm(),
+             build_block_store(g, max(choose_p(g, budget), 4))),
+            # TC tasks are triples (3 blocks) with per-item prepare
+            # extras on top — give the grain chooser extra headroom
+            ("tc", tc_algorithm(),
+             build_block_store(dag, max(choose_p(dag, budget, safety=12), 4))),
+        ]
+        for name, alg, store in jobs:
+            try:
+                plan = compile_plan(alg, store,
+                                    mode="sparse_only", backend=backend,
+                                    memory_budget=budget,
+                                    rebalance_threshold=1.5)
+            except ValueError as e:
+                rows.append(csv_row(f"oversub/stream/{name}/{budget}", 0.0,
+                                    f"error={e}"))
+                continue
+            last: dict = {}
 
-        def timed(plan=plan, last=last):
-            last["res"] = plan.run()
+            def timed(plan=plan, last=last):
+                last["res"] = plan.run()
 
-        t = time_median(timed, repeats=repeats)
-        st = last["res"].schedule_stats["streaming"]
-        rows.append(csv_row(
-            f"oversub/stream/pr/{budget}", t,
-            f"waves={st['num_waves']};budget_bytes={st['budget_bytes']};"
-            f"max_wave_bytes={max(st['bytes_per_wave'], default=0)};"
-            f"bytes_staged_total={st['bytes_staged_total']};"
-            f"resident_bytes={st['resident_bytes']};"
-            f"overlap_efficiency={st['overlap_efficiency']:.2f}",
-        ))
+            t = time_median(timed, repeats=repeats)
+            st = last["res"].schedule_stats["streaming"]
+            skew = st["rebalance_skew"]
+            rows.append(csv_row(
+                f"oversub/stream/{name}/{budget}", t,
+                f"waves={st['num_waves']};budget_bytes={st['budget_bytes']};"
+                f"max_wave_bytes={max(st['bytes_per_wave'], default=0)};"
+                f"max_csr_bytes={max(st['csr_bytes_per_wave'], default=0)};"
+                f"full_csr_bytes={store.indices.nbytes};"
+                f"csr_mode={st['csr_mode']};"
+                f"bytes_staged_total={st['bytes_staged_total']};"
+                f"resident_bytes={st['resident_bytes']};"
+                f"rebalanced={st['rebalanced']};"
+                f"rebalance_skew={skew if skew is None else round(skew, 2)};"
+                f"overlap_efficiency={st['overlap_efficiency']:.2f}",
+            ))
     return rows
 
 

@@ -1,7 +1,9 @@
 """Quickstart: the paper algorithms through the compiled-Plan API.
 
 Build once (`compile_plan`), execute many times (`plan.run`), reuse the
-same compiled plan across graphs with the same padded shapes.
+same compiled plan across graphs with the same padded shapes — and add
+`memory_budget=` to stream the same computation out-of-core when the
+edge set must not live on the device whole.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -55,3 +57,14 @@ print(f"bfs: reached {reached}/{g.n}, max depth "
 # the one-shot wrappers still exist for quick calls
 nt = triangle_count(g, p=4)
 print(f"triangles: {nt}")
+
+# out-of-core: the same compile_plan call under a device-memory budget
+# streams double-buffered waves whose staged bytes each fit the budget
+# (see docs/architecture.md for the accounting model)
+splan = compile_plan(pagerank_algorithm(), store, memory_budget="512KB")
+sres = splan.run()
+st = sres.schedule_stats["streaming"]
+print(f"streamed pagerank: sum={sres.result.sum():.4f} "
+      f"waves={st['num_waves']} "
+      f"max_wave_bytes={max(st['bytes_per_wave'])} (≤ {st['budget_bytes']}) "
+      f"overlap={st['overlap_efficiency']:.2f}")

@@ -160,7 +160,7 @@ def bfs_algorithm(source: int = 0, *, max_iters: int = 10_000,
             dist=np.asarray(state["dist"]),
         ),
         metadata=dict(combine=dict(parent="min", dist="min"),
-                      workspace_kernel="frontier_tiles"),
+                      workspace_kernel="frontier_tiles", csr="none"),
     )
 
 

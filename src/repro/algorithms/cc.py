@@ -120,9 +120,13 @@ def afforest_algorithm(*, k_rounds: int = 2, sample_size: int = 1024,
         metadata=dict(
             combine=dict(C="min", C_prev="min", H="add", c_skip="max"),
             params=dict(k_rounds=k_rounds),
-            # sampling rounds hook via the resident CSR only — the
-            # streaming executor runs one representative wave for them
+            # sampling rounds read only each vertex's first k_rounds
+            # neighbors — the streaming executor runs one representative
+            # wave for them against the first-k prefix CSR; the
+            # finalization rounds are pure COO scatters, so nothing
+            # edge-proportional need stay device-resident
             edge_free_iterations=k_rounds,
+            csr="none",
         ),
     )
 

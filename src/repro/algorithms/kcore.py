@@ -65,7 +65,8 @@ def kcore_algorithm(k: int, *, max_iters: int = 10_000) -> BlockAlgorithm:
         after=after,
         max_iterations=max_iters,
         finalize=lambda store, state: np.asarray(state["alive"]),
-        metadata=dict(combine=dict(deg="add", alive="min", peeled="add")),
+        metadata=dict(combine=dict(deg="add", alive="min", peeled="add"),
+                      csr="none"),
     )
 
 

@@ -92,7 +92,7 @@ def pagerank_algorithm(*, damping: float = 0.85, tol: float = 1e-4,
         max_iterations=max_iters,
         finalize=lambda store, state: np.asarray(state["rank"]),
         metadata=dict(combine="add", params=dict(damping=damping),
-                      workspace_kernel="spmv_tiles"),
+                      workspace_kernel="spmv_tiles", csr="none"),
     )
 
 

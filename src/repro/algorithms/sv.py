@@ -93,7 +93,7 @@ def sv_algorithm(*, max_iters: int = 200) -> BlockAlgorithm:
         after=after,
         max_iterations=max_iters,
         finalize=lambda store, state: np.asarray(state["C"]),
-        metadata=dict(combine=dict(C="min", H="add")),
+        metadata=dict(combine=dict(C="min", H="add"), csr="none"),
     )
 
 

@@ -93,7 +93,10 @@ def _prepare(store, sched):
         sg_all.append(sg); lg_all.append(lg); sb_all.append(sb); lb_all.append(lb)
 
     buckets = []
+    scratch = 0
     if sg_all:
+        from ..kernels.registry import workspace_bytes
+
         sg = np.concatenate(sg_all); lg = np.concatenate(lg_all)
         sb = np.concatenate(sb_all); lb = np.concatenate(lb_all)
         if sg.size:
@@ -112,7 +115,11 @@ def _prepare(store, sched):
                         lb=jnp.asarray(lb[sel]),
                     )
                 )
-    extras = {"tc_buckets": buckets}
+                scratch += workspace_bytes("csr_bucket_search",
+                                           items=int(sel.sum()), depth=dp)
+    # device scratch of the membership test, declared so the streaming
+    # executor prices it against the budget (stripped before staging)
+    extras = {"tc_buckets": buckets, "__workspace_bytes__": scratch}
 
     # ---- dense triples: tile index per block ---------------------------
     if dense_mask.any():
@@ -178,7 +185,12 @@ def tc_algorithm() -> BlockAlgorithm:
         init_state=lambda store: dict(nt=jnp.asarray(0, jnp.int32)),
         max_iterations=1,
         finalize=lambda store, state: int(jax.device_get(state["nt"])),
-        metadata=dict(combine="add", workspace_kernel="tc_tiles"),
+        # csr="slice": the membership test reads ctx.indices, with every
+        # position computed by _prepare from the (per-wave rebased)
+        # row_block_ptr — so each streamed wave stages only the conformal
+        # CSR row ranges its triples touch
+        metadata=dict(combine="add", workspace_kernel="tc_tiles",
+                      csr="slice"),
     )
 
 

@@ -38,26 +38,35 @@ from .graph import (
     grid_road,
     star_skew,
     degree_order,
+    csr_prefix,
 )
-from .partition import Layout, partition_1d, partition_symmetric_2d, make_layout
+from .partition import (
+    Layout, partition_1d, partition_symmetric_2d, make_layout, choose_p,
+)
 from .blocks import BlockStore, build_block_store
 from .functors import BlockAlgorithm, Mode, default_estimate
 from .scheduler import Schedule, build_schedule, lpt_assign
 from .context import Context, HostCtx, build_context, build_host_ctx
 from .engine import Plan, compile_plan, RunResult, Engine, run
-from .membudget import MemoryBudget, task_footprints, build_waves
+from .membudget import (
+    MemoryBudget, task_footprints, task_csr_edge_counts, build_waves,
+    repack_waves,
+)
 from .stream import StreamingPlan, compile_streaming_plan
 
 __all__ = [
     "Graph", "from_edges", "read_edge_list", "load_binary", "save_binary",
     "rmat", "erdos_renyi", "grid_road", "star_skew", "degree_order",
+    "csr_prefix",
     "Layout", "partition_1d", "partition_symmetric_2d", "make_layout",
+    "choose_p",
     "BlockStore", "build_block_store",
     "BlockAlgorithm", "Mode", "default_estimate",
     "Schedule", "build_schedule", "lpt_assign",
     "Context", "HostCtx", "build_context", "build_host_ctx",
     "Plan", "compile_plan", "RunResult",
-    "MemoryBudget", "task_footprints", "build_waves",
+    "MemoryBudget", "task_footprints", "task_csr_edge_counts",
+    "build_waves", "repack_waves",
     "StreamingPlan", "compile_streaming_plan",
     "Engine", "run",
 ]

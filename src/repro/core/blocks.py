@@ -145,6 +145,65 @@ class BlockStore:
                 out.append((s, e))
         return out
 
+    def csr_slices(
+        self, block_ids: np.ndarray
+    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, list[tuple[int, int]]]:
+        """Conformal CSR row slices covering ``block_ids`` — the per-wave
+        CSR staging unit of the streaming executor.
+
+        Because the partition is conformal, the adjacency a block (i, j)
+        contributes is, for every row ``u`` in stripe ``i``, the
+        contiguous slice ``indices[row_block_ptr[u, j] :
+        row_block_ptr[u, j+1]]``.  This method concatenates exactly
+        those slices (rows ascending, stripes ascending within a row)
+        and returns
+
+        * ``indices_slice`` — the staged adjacency (int32), holding only
+          the selected blocks' entries;
+        * ``row_block_ptr`` — rebased ``(n, p+1)`` map: for a selected
+          ``(u, k)``, ``indices_slice[rbp[u, k] : rbp[u, k+1]]`` equals
+          the same slice of the global CSR.  Unselected ``(u, k)``
+          entries collapse to zero-length slices;
+        * ``indptr`` — rebased ``(n+1,)``: start of each row's *staged*
+          adjacency (``diff`` gives staged — not global — degrees);
+        * ``segments`` — the coalesced ``[start, end)`` *global* index
+          ranges gathered, for staging diagnostics (few segments when
+          the selected blocks are contiguous).
+        """
+        p = self.p
+        n = self.n
+        rbp = self.row_block_ptr
+        ids = np.unique(np.asarray(block_ids, dtype=np.int64))
+        touched = np.zeros((p, p), dtype=bool)
+        if ids.size:
+            gi, gj = np.divmod(ids, p)
+            touched[gi, gj] = True
+        stripe_of_row = np.repeat(np.arange(p), np.diff(self.layout.cuts))
+        touched_row = touched[stripe_of_row]            # (n, p)
+        seg_len = rbp[:, 1:] - rbp[:, :-1]              # (n, p)
+        lens = np.where(touched_row, seg_len, 0).ravel()
+        csum = np.concatenate([[0], np.cumsum(lens)])   # (n*p + 1,)
+        new_rbp = np.empty_like(rbp)
+        new_rbp[:, :p] = csum[:-1].reshape(n, p)
+        new_rbp[:, p] = csum[p::p] if n else 0
+        new_indptr = np.concatenate([new_rbp[:, 0], csum[-1:]])
+        mask = lens > 0
+        starts_g = rbp[:, :-1].ravel()[mask]
+        ends_g = starts_g + lens[mask]
+        if starts_g.size:
+            brk = np.flatnonzero(starts_g[1:] != ends_g[:-1]) + 1
+            seg_s = starts_g[np.concatenate([[0], brk])]
+            seg_e = ends_g[np.concatenate([brk - 1, [starts_g.size - 1]])]
+            idx = np.concatenate(
+                [np.arange(s, e, dtype=np.int64) for s, e in zip(seg_s, seg_e)]
+            )
+            sliced = self.indices[idx]
+            segments = list(zip(seg_s.tolist(), seg_e.tolist()))
+        else:
+            sliced = np.zeros(0, np.int32)
+            segments = []
+        return sliced.astype(np.int32), new_rbp, new_indptr, segments
+
     def tile_subset(
         self, block_ids: np.ndarray
     ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:

@@ -171,6 +171,9 @@ class Plan:
         extras = (
             self.alg.prepare(store, sched) if self.alg.prepare is not None else {}
         )
+        # reserved declaration for the streaming executor's footprint
+        # model — not a kernel input (see stream._assemble)
+        extras.pop("__workspace_bytes__", None)
         binding = _Binding(
             store=store,
             schedule=sched,
@@ -272,6 +275,7 @@ def compile_plan(
     share: bool = True,
     use_pallas: bool = False,
     memory_budget: "int | str | None" = None,
+    rebalance_threshold: "float | None" = None,
 ) -> "Plan | StreamingPlan":
     """Build + compile: schedule, prepare, typed contexts, jitted step.
 
@@ -286,13 +290,25 @@ def compile_plan(
     ``memory_budget`` (bytes, or a string like ``"64MB"``) switches to
     the out-of-core streaming executor: the result is a
     :class:`~repro.core.stream.StreamingPlan` whose ``run`` stages
-    budget-sized, double-buffered waves of tasks instead of shipping
-    the whole segmented COO and tile set to the device up front.  Same
-    ``run()`` contract; ``schedule_stats["streaming"]`` reports waves,
-    bytes staged per wave, and overlap efficiency.
+    budget-sized, double-buffered waves of tasks — COO slab, dense
+    tiles, and (for ``metadata["csr"] == "slice"`` algorithms) the
+    conformal CSR row slices — instead of shipping the whole edge set
+    to the device up front.  The schedule is then built budget-aware
+    (dense cut-offs sized so waves fit).  Same ``run()`` contract;
+    ``schedule_stats["streaming"]`` reports waves, bytes staged per
+    wave (CSR broken out), and overlap efficiency.
+    ``rebalance_threshold`` (streaming only) opts in to tail-wave
+    rebalancing: when measured per-wave compute skew exceeds it, the
+    wave queue is re-packed against the observed task times.
     """
     if backend is None:
         backend = "pallas" if use_pallas else "xla"
+    if rebalance_threshold is not None and memory_budget is None:
+        raise ValueError(
+            "rebalance_threshold only applies to the streaming executor; "
+            "pass memory_budget=... as well (the in-core Plan has no waves "
+            "to rebalance)"
+        )
     if memory_budget is not None:
         from .stream import StreamingPlan
 
@@ -302,6 +318,7 @@ def compile_plan(
             backend=backend, num_devices=num_devices, mode=mode,
             tile_dim=tile_dim, dense_frac=dense_frac,
             dense_density=dense_density, share=share,
+            rebalance_threshold=rebalance_threshold,
         )
     return Plan(
         alg, store, schedule,

@@ -31,6 +31,26 @@ Iteration contract (enforced by :meth:`repro.core.engine.Plan.run`):
 loop continues while it returns ``True``, bounded by
 ``max_iterations``.  When ``after`` is *absent*, the loop runs exactly
 ``max_iterations`` iterations (default 1) — it is NOT cut short at one.
+
+``metadata`` keys the framework reads (full contract in
+``docs/writing-algorithms.md``):
+
+``params``
+    trace-affecting factory parameters — the compiled-step cache keys
+    on ``(name, params, backend)``.
+``combine``
+    per-leaf fold kind (``add``/``min``/``max``) for streamed per-wave
+    partials; required for any leaf the kernels modify when running
+    under ``memory_budget``.
+``csr``
+    ``"slice"`` (wave-staged conformal CSR row slices) | ``"none"``
+    (kernels never read ``ctx.indices``) | ``"resident"`` (default:
+    full CSR stays on device — unbounded by the budget).
+``workspace_kernel``
+    registry kernel naming the dense path's scratch estimator.
+``edge_free_iterations``
+    first ``k`` iterations read at most each vertex's first ``k``
+    neighbors — streamed against the prefix CSR.
 """
 from __future__ import annotations
 

@@ -20,15 +20,25 @@ A task's streamed working set prices three components:
   scalars (:func:`tile_bytes`).  Tiles shared by several tasks of one
   wave are staged once; the per-task price is therefore an upper bound
   and the wave builder re-prices the union.
+* **CSR row slices** — when the algorithm declares
+  ``metadata["csr"] == "slice"``, each task additionally prices the
+  conformal CSR row ranges of its blocks
+  (:data:`CSR_INDEX_BYTES` per edge, deduplicated per distinct block;
+  routed through the registry's ``"csr_slice"`` workspace estimator).
+  The executor stages exactly those slices per wave
+  (:meth:`repro.core.blocks.BlockStore.csr_slices`), so *no*
+  edge-proportional array stays device-resident.
 * **Kernel workspace** — per-kernel scratch estimates from the backend
   registry (:func:`repro.kernels.registry.workspace_bytes`), e.g. the
   gathered ``xs``/``ys`` slices of ``spmv_tiles``.
 
 Vertex-level attribute arrays (state pytree, ``degrees``, ``indptr``,
-``row_block_ptr``) and — for now — the global CSR ``indices`` stay
-*resident* across waves; :func:`resident_bytes` prices them so callers
-can see the full device picture.  Streaming the CSR row slices as well
-is an open item (see ROADMAP).
+``row_block_ptr``) stay *resident* across waves; :func:`resident_bytes`
+prices them so callers can see the full device picture.  The global CSR
+``indices`` is resident only for algorithms that declare
+``metadata["csr"] == "resident"`` (the compatibility default for custom
+algorithms; every shipped algorithm declares ``"slice"`` or ``"none"``
+— see :mod:`repro.core.stream`).
 
 Wave packing pads every wave's edge slab to one of a few fixed bucket
 shapes (:func:`bucket_size`, a power-of-two ladder) so a single jitted
@@ -45,13 +55,18 @@ from .blocks import BlockStore
 from .scheduler import Schedule
 
 __all__ = [
-    "MemoryBudget", "parse_bytes", "COO_EDGE_BYTES", "TILE_HEADER_BYTES",
-    "bucket_size", "task_edge_counts", "task_footprints", "tile_bytes",
+    "MemoryBudget", "parse_bytes", "COO_EDGE_BYTES", "CSR_INDEX_BYTES",
+    "TILE_HEADER_BYTES", "bucket_size", "task_edge_counts",
+    "task_csr_edge_counts", "task_footprints", "tile_bytes",
+    "dense_extra_bytes", "single_task_bytes",
     "resident_bytes", "tree_array_bytes", "Wave", "build_waves",
+    "repack_waves",
 ]
 
 # src + dst + edge_block (int32) + sparse/dense edge masks (bool).
 COO_EDGE_BYTES = 4 + 4 + 4 + 1 + 1
+# one staged CSR adjacency entry (int32) — see BlockStore.csr_slices.
+CSR_INDEX_BYTES = 4
 # per-tile origin scalars: tile_row_start + tile_col_start (int64).
 TILE_HEADER_BYTES = 8 + 8
 
@@ -107,22 +122,40 @@ def task_edge_counts(store: BlockStore, schedule: Schedule) -> np.ndarray:
     return seg[bls].sum(axis=1).astype(np.int64)
 
 
+def task_csr_edge_counts(store: BlockStore, schedule: Schedule) -> np.ndarray:
+    """(t,) CSR entries each task's conformal row slices stage.
+
+    A block's conformal CSR content has exactly as many entries as the
+    block has edges, so this is the per-task edge count with duplicate
+    blocks inside one block-list (pattern mode) counted once.
+    """
+    bls = np.sort(schedule.blocklists, axis=1)
+    seg = np.diff(store.block_ptr)
+    first = np.ones(bls.shape, dtype=bool)
+    if bls.shape[1] > 1:
+        first[:, 1:] = bls[:, 1:] != bls[:, :-1]
+    return (seg[bls] * first).sum(axis=1).astype(np.int64)
+
+
 def task_footprints(store: BlockStore, schedule: Schedule, *,
-                    workspace_kernel: str | None = None) -> np.ndarray:
+                    workspace_kernel: str | None = None,
+                    stage_csr: bool = False) -> np.ndarray:
     """(t,) bytes: the streamed working set of each task, per the model.
 
     COO slab + (dense tasks) bitmap tiles per distinct block + kernel
-    workspace.  ``workspace_kernel`` names the registry kernel whose
+    workspace + (``stage_csr=True``) the task's conformal CSR row
+    slices.  ``workspace_kernel`` names the registry kernel whose
     workspace estimator prices the dense path (algorithms declare it in
     ``metadata["workspace_kernel"]``); when unknown, the *maximum* over
     all registered estimators is charged — conservative by design.
+    ``stage_csr`` mirrors the algorithm's ``metadata["csr"] == "slice"``
+    declaration: per-wave sliced ``indices`` are staged device memory
+    and must be priced like the COO slab.
     This is the scheduler-facing *estimate*; the wave builder verifies
     the assembled slabs against the budget and splits waves whose
     actual bytes (e.g. pattern-mode ``prepare`` items) exceed it.
     """
-    from ..kernels.registry import (
-        max_workspace_bytes, registered_workspaces, workspace_bytes,
-    )
+    from ..kernels.registry import registered_workspaces, workspace_bytes
 
     if (workspace_kernel is not None
             and workspace_kernel not in registered_workspaces()):
@@ -133,19 +166,56 @@ def task_footprints(store: BlockStore, schedule: Schedule, *,
         )
     edges = task_edge_counts(store, schedule)
     out = edges * COO_EDGE_BYTES
+    if stage_csr:
+        # one registry call fetches the per-edge rate; the estimator is
+        # linear, so the per-task bytes vectorize
+        per_edge = workspace_bytes("csr_slice", csr_edges=1)
+        out = out + task_csr_edge_counts(store, schedule) * per_edge
     if schedule.dense_task_mask.any():
-        per_tile = tile_bytes(schedule.tile_dim)
         for t in np.nonzero(schedule.dense_task_mask)[0]:
-            blocks = np.unique(schedule.blocklists[t])
-            nd = int(blocks.size)
-            out[t] += nd * per_tile
-            if workspace_kernel is not None:
-                out[t] += workspace_bytes(workspace_kernel, nd=nd,
-                                          tile_dim=schedule.tile_dim)
-            else:
-                out[t] += max_workspace_bytes(nd=nd,
-                                              tile_dim=schedule.tile_dim)
+            nd = int(np.unique(schedule.blocklists[t]).size)
+            out[t] += dense_extra_bytes(nd, schedule.tile_dim,
+                                        workspace_kernel)
     return out.astype(np.int64)
+
+
+def dense_extra_bytes(nd: int, tile_dim: int,
+                      workspace_kernel: str | None = None) -> int:
+    """Dense-path surcharge for one task: ``nd`` staged bitmap tiles
+    plus the kernel workspace estimate (worst case over the registry
+    when the algorithm names no kernel)."""
+    from ..kernels.registry import max_workspace_bytes, workspace_bytes
+
+    extra = nd * tile_bytes(tile_dim)
+    extra += (workspace_bytes(workspace_kernel, nd=nd, tile_dim=tile_dim)
+              if workspace_kernel is not None
+              else max_workspace_bytes(nd=nd, tile_dim=tile_dim))
+    return int(extra)
+
+
+def single_task_bytes(store: BlockStore, blocklist, *, tile_dim: int = 0,
+                      workspace_kernel: str | None = None,
+                      stage_csr: bool = False, dense: bool = False) -> int:
+    """Model bytes for one task's staged working set — the canonical
+    single-task pricing shared by :func:`task_footprints` (vectorized
+    over a schedule) and the scheduler's budget demotion check.
+
+    COO prices the raw block-list (duplicates and all, matching
+    :func:`task_edge_counts`); CSR slices and tiles stage each distinct
+    block once."""
+    from ..kernels.registry import workspace_bytes
+
+    bl = np.atleast_1d(np.asarray(blocklist, dtype=np.int64))
+    seg = np.diff(store.block_ptr)
+    blocks = np.unique(bl)
+    total = int(seg[bl].sum()) * COO_EDGE_BYTES
+    if stage_csr:
+        total += int(seg[blocks].sum()) * workspace_bytes("csr_slice",
+                                                          csr_edges=1)
+    if dense:
+        total += dense_extra_bytes(int(blocks.size), tile_dim,
+                                   workspace_kernel)
+    return total
 
 
 def tree_array_bytes(tree) -> int:
@@ -162,17 +232,22 @@ def tree_array_bytes(tree) -> int:
 
 
 
-def resident_bytes(store: BlockStore, state=None) -> int:
+def resident_bytes(store: BlockStore, state=None, *,
+                   include_csr: bool = True) -> int:
     """Bytes that stay on device across every wave: vertex-level arrays,
-    the conformal row map, the CSR adjacency (not yet streamed — see
-    module docstring), and optionally the state pytree."""
+    the conformal row map, optionally the state pytree, and — only for
+    ``metadata["csr"] == "resident"`` algorithms (``include_csr``) — the
+    global CSR adjacency.  ``"slice"``/``"none"`` algorithms keep no
+    edge-proportional array resident (the sliced ``indices`` are priced
+    per wave instead)."""
     total = (
         store.indptr.nbytes
-        + store.indices.nbytes
         + store.degrees.nbytes
         + store.row_block_ptr.nbytes
         + store.layout.cuts.nbytes
     )
+    if include_csr:
+        total += store.indices.nbytes
     if state is not None:
         total += tree_array_bytes(state)
     return int(total)
@@ -235,6 +310,52 @@ def _close_wave(task_ids: list[int], est_bytes: int,
     lead = schedule.blocklists[ids, 0]
     return Wave(task_ids=ids[np.argsort(lead, kind="stable")],
                 est_bytes=int(est_bytes))
+
+
+def repack_waves(schedule: Schedule, budget: MemoryBudget,
+                 footprints: np.ndarray, task_times: np.ndarray, *,
+                 slack: float = 0.2) -> list[Wave]:
+    """Re-pack every task into waves against *observed* per-task times.
+
+    The paper's dynamic work queue, adapted to wave granularity: once
+    the streaming executor has measured real per-wave compute times
+    (and attributed them to tasks), the static LPT-by-estimate packing
+    is replaced by LPT over the measured times.  A wave closes when the
+    next task would push its byte estimate past the budget *or* its
+    time load past the balanced target (total time over the bytes-only
+    wave-count floor, stretched by ``slack``) — so one dominated tail
+    wave gets its heavy tasks spread instead of serialized.
+    """
+    t = np.asarray(task_times, dtype=np.float64)
+    order = np.argsort(-t, kind="stable")
+    # bytes-only greedy pass fixes the wave-count floor the time target
+    # balances against (fewer waves than this cannot fit the budget)
+    floor_waves, acc = 1, 0
+    for i in order:
+        b = int(footprints[i])
+        if acc and acc + b > budget.total_bytes:
+            floor_waves += 1
+            acc = 0
+        acc += b
+    total_t = float(t.sum())
+    target = (
+        (total_t / floor_waves) * (1.0 + slack) if total_t > 0 else np.inf
+    )
+    waves: list[Wave] = []
+    cur: list[int] = []
+    cur_bytes, cur_t = 0, 0.0
+    for i in order:
+        b = int(footprints[i])
+        if cur and (cur_bytes + b > budget.total_bytes
+                    or cur_t + float(t[i]) > target):
+            waves.append(_close_wave(cur, cur_bytes, schedule))
+            cur, cur_bytes, cur_t = [], 0, 0.0
+        cur.append(int(i))
+        cur_bytes += b
+        cur_t += float(t[i])
+    if cur:
+        waves.append(_close_wave(cur, cur_bytes, schedule))
+    return waves
 
 
 def split_wave(wave: Wave, schedule: Schedule,

@@ -29,7 +29,8 @@ import numpy as np
 
 from .graph import Graph
 
-__all__ = ["Layout", "partition_1d", "partition_symmetric_2d", "make_layout"]
+__all__ = ["Layout", "partition_1d", "partition_symmetric_2d", "make_layout",
+           "choose_p"]
 
 
 @dataclass(frozen=True)
@@ -65,10 +66,20 @@ class Layout:
     def rows(self, i: int) -> tuple[int, int]:
         return int(self.cuts[i]), int(self.cuts[i + 1])
 
+    def max_stripe_edges(self, g: Graph) -> int:
+        """Heaviest row stripe's edge count — an upper bound on any
+        single block (and therefore any single-block task footprint)."""
+        return _heaviest_stripe(_edge_prefix(g), self.cuts)
+
 
 def _edge_prefix(g: Graph) -> np.ndarray:
     """Prefix sum of degrees: edges with source < v."""
     return g.indptr.astype(np.int64)
+
+
+def _heaviest_stripe(pre: np.ndarray, cuts: np.ndarray) -> int:
+    """Max edges in any row stripe of ``cuts`` given the edge prefix."""
+    return int(np.max(pre[cuts[1:]] - pre[cuts[:-1]]))
 
 
 def partition_1d(g: Graph, parts: int) -> np.ndarray:
@@ -151,6 +162,36 @@ def partition_symmetric_2d(g: Graph, p: int, *, refine_iters: int = 8) -> np.nda
         if not moved:
             break
     return cuts.astype(np.int64)
+
+
+def choose_p(g: Graph, memory_budget, *, safety: int = 2,
+             p_max: int = 256) -> int:
+    """Budget-aware partitioner grain: the smallest power-of-two ``p``
+    whose heaviest row stripe fits ``1/safety`` of the memory budget.
+
+    A single-block task can never stage more edges than its row stripe
+    holds, so bounding the stripe bounds every task footprint the wave
+    packer will see — the partition is made budget-aware up front
+    instead of relying on ``build_waves`` to reject oversized tasks
+    after the fact.  ``safety`` leaves headroom for bucket padding,
+    per-edge routing masks, CSR slices and kernel workspace.
+    """
+    from .membudget import COO_EDGE_BYTES, CSR_INDEX_BYTES, MemoryBudget
+
+    per_edge = COO_EDGE_BYTES + CSR_INDEX_BYTES
+    cap = MemoryBudget.of(memory_budget).total_bytes // (safety * per_edge)
+    pre = _edge_prefix(g)
+    p = 1
+    while True:
+        # probe with the cuts the layout will actually use
+        cuts = partition_symmetric_2d(g, p) if p > 1 else np.array([0, g.n])
+        heaviest = _heaviest_stripe(pre, cuts)
+        if heaviest <= cap or p >= p_max:
+            # p_max is returned even unverified — a hub row can make the
+            # cap unreachable by any contiguous partition; build_waves
+            # still rejects genuinely oversized tasks downstream
+            return p
+        p *= 2
 
 
 def make_layout(g: Graph, p: int, *, order: str = "row_major") -> Layout:

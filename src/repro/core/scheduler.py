@@ -91,6 +91,31 @@ class Schedule:
         return float(loads.max() / max(ideal, 1e-12))
 
 
+def _demote_over_budget(alg: BlockAlgorithm, store: BlockStore,
+                        bls: np.ndarray, fits: np.ndarray,
+                        tile_dim: int, budget_bytes: int) -> int:
+    """Clear ``fits`` for tasks whose dense-path staged working set
+    cannot fit the budget; they run on the sparse path instead.
+
+    Priced by :func:`repro.core.membudget.single_task_bytes` — the same
+    model :func:`~repro.core.membudget.task_footprints` applies, so a
+    task this check keeps is one the wave builder accepts.  Returns the
+    number of demoted tasks (for ``stats``)."""
+    from .membudget import single_task_bytes
+
+    wk = alg.metadata.get("workspace_kernel")
+    stage_csr = alg.metadata.get("csr") == "slice"
+    demoted = 0
+    for i in np.nonzero(fits)[0]:
+        cost = single_task_bytes(store, bls[i], tile_dim=tile_dim,
+                                 workspace_kernel=wk, stage_csr=stage_csr,
+                                 dense=True)
+        if cost > budget_bytes:
+            fits[i] = False
+            demoted += 1
+    return demoted
+
+
 def lpt_assign(weights: np.ndarray, num_devices: int) -> np.ndarray:
     """Longest-Processing-Time-first greedy packing → device id per task."""
     order = np.argsort(-weights, kind="stable")
@@ -103,6 +128,30 @@ def lpt_assign(weights: np.ndarray, num_devices: int) -> np.ndarray:
     return assign
 
 
+def _budget_tile_dim(alg: BlockAlgorithm, tile_dim: int,
+                     budget_bytes: int) -> int:
+    """Budget-aware tile cut-off: halve ``tile_dim`` until one staged
+    bitmap tile plus its kernel workspace fits the budget.
+
+    Tile working sets dominate wave bytes at large ``tile_dim``, so a
+    planner that keeps the requested size would emit dense waves the
+    wave builder must immediately split (or reject).  Blocks wider than
+    the shrunken tile simply stay on the sparse path."""
+    from ..kernels.registry import max_workspace_bytes, workspace_bytes
+    from .membudget import tile_bytes
+
+    wk = alg.metadata.get("workspace_kernel")
+
+    def cost(td: int) -> int:
+        ws = (workspace_bytes(wk, nd=1, tile_dim=td) if wk is not None
+              else max_workspace_bytes(nd=1, tile_dim=td))
+        return tile_bytes(td) + ws
+
+    while tile_dim > 64 and cost(tile_dim) > budget_bytes:
+        tile_dim //= 2
+    return tile_dim
+
+
 def build_schedule(
     alg: BlockAlgorithm,
     store: BlockStore,
@@ -112,8 +161,27 @@ def build_schedule(
     dense_density: float = 0.005,
     tile_dim: int = 512,
     mode: str = "hybrid",          # "hybrid" | "sparse_only" | "dense_only"
+    memory_budget=None,            # int | str | MemoryBudget | None
 ) -> Schedule:
-    """Compose block-lists, estimate, sort, split paths, pack devices."""
+    """Compose block-lists, estimate, sort, split paths, pack devices.
+
+    With ``memory_budget`` set (the streaming executor forwards its
+    budget here), the planner becomes budget-aware instead of leaving
+    the budget to the wave packer alone: ``tile_dim`` shrinks until a
+    single staged tile fits (:func:`_budget_tile_dim`), and a task is
+    only routed to the dense path if its full staged working set — COO
+    slab, bitmap tiles, kernel workspace, CSR slices when the algorithm
+    declares ``metadata["csr"] == "slice"`` — fits the budget, so the
+    planner stops producing dense waves that must immediately be split.
+    """
+    budget_bytes = None
+    if memory_budget is not None:
+        from .membudget import MemoryBudget
+
+        budget_bytes = MemoryBudget.of(memory_budget).total_bytes
+        if mode != "sparse_only" and alg.kernel_dense is not None:
+            tile_dim = _budget_tile_dim(alg, tile_dim, budget_bytes)
+
     bls = alg.compose_blocklists(store)
     t = bls.shape[0]
     weights = np.asarray(
@@ -123,6 +191,7 @@ def build_schedule(
 
     # ---- dense/sparse path split -------------------------------------
     dense_task_mask = np.zeros(t, dtype=bool)
+    dense_demoted = 0
     if mode != "sparse_only" and alg.kernel_dense is not None and t:
         # a task is MXU-eligible iff every block in its block-list fits a
         # tile and the *first* (edge) block clears the density cut-off
@@ -133,6 +202,10 @@ def build_schedule(
             )
             dens_ok = store.block_density(int(bls[i][0])) >= dense_density
             fits[i] = ranges_ok and (dens_ok or mode == "dense_only")
+        if budget_bytes is not None and alg.kernel_sparse is not None:
+            dense_demoted = _demote_over_budget(
+                alg, store, bls, fits, tile_dim, budget_bytes
+            )
         if mode == "dense_only":
             dense_task_mask = fits
         else:
@@ -174,4 +247,10 @@ def build_schedule(
         makespan_ratio=sched.makespan_ratio(),
         mode=mode,
     )
+    if budget_bytes is not None:
+        sched.stats.update(
+            budget_bytes=budget_bytes,
+            tile_dim=tile_dim,            # post-shrink effective value
+            dense_budget_demoted=dense_demoted,
+        )
     return sched

@@ -6,8 +6,12 @@ headline capability ("graphs that fit host DRAM but not device memory",
 §4.3/§4.4, the block-list bound on device copies).  Four parts:
 
 1. **Footprint model** (:mod:`repro.core.membudget`) prices each
-   schedule task's COO slice, dense tiles, and kernel workspace in
-   bytes.
+   schedule task's COO slice, dense tiles, conformal CSR row slices
+   (for ``metadata["csr"] == "slice"`` algorithms), and kernel
+   workspace in bytes.  The schedule itself is built budget-aware
+   (:func:`repro.core.scheduler.build_schedule` receives the budget):
+   ``tile_dim`` shrinks until a staged tile fits and tasks whose dense
+   working set cannot fit are routed to the sparse path up front.
 2. **Wave builder** packs the LPT-ordered tasks into budget-sized
    *waves*; every wave's edge slab is padded to one of a few fixed
    bucket shapes (power-of-two ladder) so a single jitted step serves
@@ -34,11 +38,49 @@ headline capability ("graphs that fit host DRAM but not device memory",
    ``post`` (and the host hooks) run once per iteration on the combined
    state, against a *resident* context that holds only vertex-level
    arrays.
+5. **Tail-wave rebalancing** (opt-in via ``rebalance_threshold``): the
+   calibration pass times every wave's compute; when the skew
+   (max/mean) exceeds the threshold, the remaining iterations' waves
+   are re-packed LPT against the *observed* per-task times
+   (:func:`repro.core.membudget.repack_waves`) — the paper's dynamic
+   work queue at wave granularity, for skewed graphs where one wave's
+   compute dominates.
+
+CSR streaming — ``metadata["csr"]``
+-----------------------------------
+What happens to the CSR adjacency (``ctx.indices``) is declared by the
+algorithm:
+
+``"slice"``
+    Each wave stages only the conformal CSR row ranges its tasks touch
+    (:meth:`repro.core.blocks.BlockStore.csr_slices`): ``ctx.indices``
+    holds the sliced adjacency, and the *wave store* handed to
+    ``prepare`` carries the rebased ``row_block_ptr``/``indptr`` so
+    host-computed positions (e.g. TC's bucket items) index the slice.
+    Slice lengths are rebase-invariant; global vertex attributes remain
+    on ``wstore.graph``.  Kernels must size by ``ctx.indices.shape[0]``,
+    never ``ctx.m``.
+``"none"``
+    The kernels never read the adjacency (pure COO scatter/gather
+    algorithms); ``ctx.indices`` is a minimal placeholder and nothing
+    edge-proportional is staged or resident.
+``"resident"`` (default for custom algorithms)
+    The full ``indices`` stays device-resident, as before this
+    distinction existed — safe for kernels that index it with global
+    positions, but the device footprint is then *not* bounded by the
+    budget (``resident_bytes`` reports it honestly).
+
+Algorithms declaring ``edge_free_iterations`` (Afforest's neighbor
+sampling) additionally get a *prefix CSR* (:func:`repro.core.graph.csr_prefix`)
+— the first ``k`` neighbors of every row, ``n·k`` entries — swapped in
+as ``ctx.indptr``/``ctx.indices`` during those iterations, so even
+adjacency-sampling rounds stay vertex-proportional on device.
 
 The device working set is: resident vertex-level arrays (state pytree,
-``indptr``/``degrees``/``row_block_ptr``/``cuts``, and — not yet
-streamed — the CSR ``indices``; see ROADMAP) plus at most two staged
-wave slabs (current + prefetch), each ≤ the budget.
+``indptr``/``degrees``/``row_block_ptr``/``cuts``) plus at most two
+staged wave slabs (current + prefetch), each ≤ the budget — with
+``"slice"``/``"none"`` algorithms, *every* edge-proportional device
+allocation is bounded by ``memory_budget``.
 
 Entry point: ``compile_plan(alg, store, memory_budget=...)`` returns a
 :class:`StreamingPlan` instead of a :class:`~repro.core.engine.Plan`.
@@ -56,9 +98,10 @@ import numpy as np
 from .blocks import BlockStore
 from .context import Context, build_host_ctx, with_arrays
 from .functors import BlockAlgorithm
+from .graph import csr_prefix
 from .membudget import (
-    MemoryBudget, Wave, bucket_size, build_waves, resident_bytes,
-    split_wave, task_footprints, tree_array_bytes,
+    MemoryBudget, Wave, bucket_size, build_waves, repack_waves,
+    resident_bytes, split_wave, task_footprints, tree_array_bytes,
 )
 from .scheduler import Schedule, build_schedule
 from .engine import RunResult, _alg_cache_key, _shared_entry
@@ -66,6 +109,7 @@ from .engine import RunResult, _alg_cache_key, _shared_entry
 __all__ = ["StreamingPlan", "compile_streaming_plan"]
 
 _COMBINE_KINDS = ("add", "min", "max")
+_CSR_MODES = ("resident", "slice", "none")
 
 
 def _combine_spec(alg: BlockAlgorithm):
@@ -189,12 +233,15 @@ class _WaveSlab:
     tiles: np.ndarray | None
     tile_row_start: np.ndarray | None
     tile_col_start: np.ndarray | None
+    csr: np.ndarray | None         # bucket-padded conformal CSR slice
     extras: Any                    # host pytree, or None once hoisted resident
     run_dense: bool
     staged_bytes: int
     workspace_bytes: int           # kernel scratch estimate (not staged)
     edges: int
     segments: int                  # coalesced COO slices gathered
+    csr_entries: int               # unpadded CSR slice length
+    csr_segments: int              # coalesced CSR row-range gathers
 
 
 def _is_array_leaf(leaf: Any) -> bool:
@@ -255,6 +302,7 @@ class StreamingPlan:
                  backend: str = "xla", num_devices: int = 1,
                  mode: str = "hybrid", tile_dim: int = 512,
                  dense_frac: float = 0.5, dense_density: float = 0.005,
+                 rebalance_threshold: float | None = None,
                  share: bool = True) -> None:
         from ..kernels.registry import resolve_backend
 
@@ -262,16 +310,24 @@ class StreamingPlan:
         self.store = store
         self.backend = resolve_backend(backend)
         self.budget = MemoryBudget.of(memory_budget)
+        self._csr_mode = str(alg.metadata.get("csr", "resident"))
+        if self._csr_mode not in _CSR_MODES:
+            raise ValueError(
+                f"{alg.name}: metadata['csr'] must be one of {_CSR_MODES}, "
+                f"got {self._csr_mode!r}"
+            )
+        self.rebalance_threshold = rebalance_threshold
         self.schedule = schedule or build_schedule(
             alg, store, num_devices=num_devices, mode=mode,
             tile_dim=tile_dim, dense_frac=dense_frac,
-            dense_density=dense_density,
+            dense_density=dense_density, memory_budget=self.budget,
         )
         self.host = build_host_ctx(store, self.schedule, backend=self.backend)
 
         self._footprints = task_footprints(
             store, self.schedule,
             workspace_kernel=alg.metadata.get("workspace_kernel"),
+            stage_csr=self._csr_mode == "slice",
         )
         self._slabs = self._build_slabs(
             build_waves(store, self.schedule, self.budget, self._footprints)
@@ -283,6 +339,15 @@ class StreamingPlan:
         self._bytes_staged = 0          # actual H2D traffic, all passes
         self._edge_free = int(alg.metadata.get("edge_free_iterations", 0))
         self._edge_free_bufs: dict | None = None
+        # first-k-neighbors CSR for the edge-free sampling phase: the
+        # only adjacency those iterations see (vertex-proportional)
+        self._prefix_host = (
+            csr_prefix(store.indptr, store.indices, self._edge_free)
+            if self._edge_free > 0 else None
+        )
+        self._prefix_dev: dict | None = None
+        self._rebalanced = False
+        self._last_skew: float | None = None
         self.schedule.stats["waves"] = len(self._slabs)
 
     # -- build side ----------------------------------------------------
@@ -296,8 +361,20 @@ class StreamingPlan:
         budgets."""
         slabs = [self._assemble(w) for w in waves]
         self._decide_hoist(slabs)
+        return self._fit_slabs(slabs)
+
+    def _rebuild_slabs(self, waves: list[Wave]) -> list[_WaveSlab]:
+        """Re-assemble after a re-pack, keeping the original hoist
+        decision (the resident context already carries the hoisted
+        extras)."""
+        slabs = [self._assemble(w) for w in waves]
+        for s in slabs:
+            self._strip_hoisted(s)
+        return self._fit_slabs(slabs)
+
+    def _fit_slabs(self, slabs: list[_WaveSlab]) -> list[_WaveSlab]:
         out: list[_WaveSlab] = []
-        pending = slabs
+        pending = list(slabs)
         while pending:
             slab = pending.pop(0)
             if (slab.staged_bytes + slab.workspace_bytes
@@ -375,32 +452,56 @@ class StreamingPlan:
                 tile_col_start=np.zeros(0, np.int64),
             )
 
+        # -- conformal CSR row slices (metadata["csr"] == "slice") -----
+        csr = None
+        csr_entries = csr_segments = 0
+        if self._csr_mode == "slice":
+            sl_idx, rbp_r, indptr_r, csr_segs = store.csr_slices(blocks)
+            csr_entries = int(sl_idx.size)
+            csr_segments = len(csr_segs)
+            cb = bucket_size(csr_entries)
+            csr = np.zeros(cb, np.int32)
+            csr[:csr_entries] = sl_idx
+            if self.alg.prepare is not None:
+                # prepare sees the wave-local CSR view: positions it
+                # computes from row_block_ptr index the staged slice
+                wstore = dc_replace(
+                    wstore, indices=sl_idx, row_block_ptr=rbp_r,
+                    indptr=indptr_r,
+                )
+
         extras = (
             _to_host(self.alg.prepare(wstore, wsched))
             if self.alg.prepare is not None else {}
         )
+        # prepare may declare additional device scratch (e.g. TC's
+        # bucketed membership-test gather) under the reserved key; it
+        # is a budget input, not a kernel input
+        ws = int(extras.pop("__workspace_bytes__", 0))
 
         staged = (
             src.nbytes + dst.nbytes + edge_block.nbytes
             + sparse_mask.nbytes + dense_mask.nbytes
             + tree_array_bytes(extras)
         )
-        ws = 0
+        if csr is not None:
+            staged += csr.nbytes
         if tiles is not None:
             staged += tiles.nbytes + trs.nbytes + tcs.nbytes
             from ..kernels.registry import max_workspace_bytes, workspace_bytes
 
             wk = self.alg.metadata.get("workspace_kernel")
             hints = dict(nd=int(tiles.shape[0]), tile_dim=sched.tile_dim)
-            ws = (workspace_bytes(wk, **hints) if wk is not None
-                  else max_workspace_bytes(**hints))
+            ws += (workspace_bytes(wk, **hints) if wk is not None
+                   else max_workspace_bytes(**hints))
         return _WaveSlab(
             wave=wave, src=src, dst=dst, edge_block=edge_block,
             sparse_mask=sparse_mask, dense_mask=dense_mask,
             tiles=tiles, tile_row_start=trs, tile_col_start=tcs,
-            extras=extras, run_dense=run_dense,
+            csr=csr, extras=extras, run_dense=run_dense,
             staged_bytes=int(staged), workspace_bytes=int(ws),
             edges=ne, segments=len(segments),
+            csr_entries=csr_entries, csr_segments=csr_segments,
         )
 
     def _decide_hoist(self, slabs: list[_WaveSlab]) -> None:
@@ -429,14 +530,24 @@ class StreamingPlan:
 
     def _build_resident_context(self) -> Context:
         """Vertex-level arrays only — the per-wave slab fields start
-        empty and are swapped in by :func:`with_arrays` each wave."""
+        empty and are swapped in by :func:`with_arrays` each wave.
+
+        ``indices`` is the full CSR only in ``"resident"`` csr mode; in
+        ``"slice"`` mode each wave swaps in its staged slice, and in
+        ``"none"`` mode kernels never read it, so a minimal placeholder
+        keeps both traced branches of conditional kernels indexable
+        without holding ``m``-proportional memory."""
         store = self.store
+        indices = (
+            jnp.asarray(store.indices) if self._csr_mode == "resident"
+            else jnp.zeros(bucket_size(0), jnp.int32)
+        )
         return Context(
             src=jnp.zeros(0, jnp.int32),
             dst=jnp.zeros(0, jnp.int32),
             edge_block=jnp.zeros(0, jnp.int32),
             indptr=jnp.asarray(store.indptr),
-            indices=jnp.asarray(store.indices),
+            indices=indices,
             degrees=jnp.asarray(store.degrees),
             row_block_ptr=jnp.asarray(store.row_block_ptr),
             cuts=jnp.asarray(store.layout.cuts),
@@ -455,6 +566,47 @@ class StreamingPlan:
     def num_waves(self) -> int:
         return len(self._slabs)
 
+    def rebalance(self, wave_compute_s) -> bool:
+        """Re-pack the wave queue against observed per-wave compute times.
+
+        The paper's dynamic work queue at wave granularity: when the
+        measured compute skew (max/mean over ``wave_compute_s``, one
+        entry per current wave) exceeds ``rebalance_threshold``, each
+        wave's time is attributed to its tasks proportionally to their
+        schedule weights and the whole queue is re-packed LPT against
+        those observed times (:func:`repro.core.membudget.repack_waves`)
+        — still under the byte budget.  Later iterations run the
+        re-packed waves; per-wave partial folding makes any task
+        partition produce the identical combined state, so results are
+        unchanged.  Called automatically after the calibration pass
+        when ``rebalance_threshold`` is set; returns True when a
+        re-pack happened.  At most one re-pack per plan.
+        """
+        times = np.asarray(wave_compute_s, dtype=np.float64)
+        if (self._rebalanced or times.size != len(self._slabs)
+                or len(self._slabs) < 2):
+            return False
+        mean = float(times.mean())
+        if mean <= 0.0:
+            return False
+        self._last_skew = float(times.max() / mean)
+        thr = self.rebalance_threshold
+        if thr is None or self._last_skew <= thr:
+            return False
+        task_t = np.zeros(self.schedule.num_tasks, dtype=np.float64)
+        for t_w, slab in zip(times, self._slabs):
+            ids = slab.wave.task_ids
+            wts = self.schedule.weights[ids].astype(np.float64)
+            tot = float(wts.sum())
+            task_t[ids] = (t_w * wts / tot) if tot > 0 else t_w / ids.size
+        new_waves = repack_waves(self.schedule, self.budget,
+                                 self._footprints, task_t)
+        self._slabs = self._rebuild_slabs(new_waves)
+        self._edge_free_bufs = None     # stale slab-0 reference
+        self._rebalanced = True
+        self.schedule.stats["waves"] = len(self._slabs)
+        return True
+
     @property
     def compile_count(self) -> int:
         return self._step.traces
@@ -470,6 +622,8 @@ class StreamingPlan:
         if slab.tiles is not None:
             arrays.update(tiles=slab.tiles, tile_row_start=slab.tile_row_start,
                           tile_col_start=slab.tile_col_start)
+        if slab.csr is not None:
+            arrays["indices"] = slab.csr
         bufs = jax.device_put(arrays)
         if slab.extras is not None:
             bufs["extras"] = _put_arrays(slab.extras)
@@ -493,17 +647,30 @@ class StreamingPlan:
         iarr = jnp.int32(it)
         if it < self._edge_free:
             # the algorithm declared these iterations edge-free
-            # (kernels never read slab fields — e.g. Afforest's
-            # neighbor-sampling rounds): one representative wave,
-            # staged once and cached across the edge-free phase, gives
-            # the identical combined result — W-1 redundant full-vertex
-            # passes and all repeat stagings saved
+            # (kernels read no slab fields and at most the prefix CSR —
+            # e.g. Afforest's neighbor-sampling rounds): one
+            # representative wave, staged once and cached across the
+            # edge-free phase, gives the identical combined result —
+            # W-1 redundant full-vertex passes and all repeat stagings
+            # saved
             if self._edge_free_bufs is None:
                 self._edge_free_bufs = self._stage(0)
-            acc = self._step(self._wave_context(self._edge_free_bufs),
-                             state0, acc, iarr, self._slabs[0].run_dense)
+            if self._prefix_dev is None and self._prefix_host is not None:
+                pptr, pidx = self._prefix_host
+                self._prefix_dev = jax.device_put(
+                    dict(indptr=pptr, indices=pidx)
+                )
+                self._bytes_staged += pptr.nbytes + pidx.nbytes
+            ctx = self._wave_context(self._edge_free_bufs)
+            if self._prefix_dev is not None:
+                # adjacency sampling reads the first-k-neighbors CSR,
+                # not the (unbounded) global one
+                ctx = with_arrays(ctx, **self._prefix_dev)
+            acc = self._step(ctx, state0, acc, iarr,
+                             self._slabs[0].run_dense)
             return acc, 0.0
         self._edge_free_bufs = None     # release once edge work begins
+        self._prefix_dev = None
         if self._calibration is None:
             # warm-up pass: trace/compile every distinct wave shape with
             # the result discarded, so the timed pass below measures
@@ -515,6 +682,7 @@ class StreamingPlan:
                                   state0, warm, iarr, self._slabs[w].run_dense)
             _block_tree(warm)
             stage_s = compute_s = 0.0
+            wave_s: list[float] = []
             for w in range(nw):
                 t0 = time.perf_counter()
                 bufs = self._stage(w)
@@ -524,8 +692,22 @@ class StreamingPlan:
                 acc = self._step(self._wave_context(bufs), state0, acc, iarr,
                                  self._slabs[w].run_dense)
                 _block_tree(acc)
-                compute_s += time.perf_counter() - t0
-            self._calibration = dict(stage_s=stage_s, compute_s=compute_s)
+                dt = time.perf_counter() - t0
+                compute_s += dt
+                wave_s.append(dt)
+            self._calibration = dict(stage_s=stage_s, compute_s=compute_s,
+                                     wave_compute_s=wave_s)
+            # a re-pack only pays off if another iteration will run it —
+            # on the final possible iteration it would rebuild (and
+            # report) slabs that never execute
+            if (self.rebalance_threshold is not None
+                    and it + 1 < self.alg.max_iterations
+                    and self.rebalance(wave_s)):
+                # the measured stage/compute baseline described the old
+                # packing — recalibrate on the next iteration so
+                # overlap_efficiency reflects the re-packed waves
+                # (at most once: rebalance() is one-shot per plan)
+                self._calibration = None
             return acc, 0.0
         t0 = time.perf_counter()
         bufs = self._stage(0)
@@ -602,23 +784,41 @@ class StreamingPlan:
             serial = calib["stage_s"] + calib["compute_s"]
             mean_wall = overlapped_wall / overlapped_iters
             eff = max(0.0, min(1.0, (serial - mean_wall) / denom))
+        prefix_bytes = 0
+        if self._prefix_host is not None:
+            pptr, pidx = self._prefix_host
+            prefix_bytes = pptr.nbytes + pidx.nbytes
         return dict(
             num_waves=len(self._slabs),
             budget_bytes=self.budget.total_bytes,
             bytes_per_wave=bytes_per_wave,
+            csr_mode=self._csr_mode,
+            # per-wave staged CSR slice bytes (bucket-padded, already
+            # included in bytes_per_wave) — all zeros unless "slice"
+            csr_bytes_per_wave=[
+                s.csr.nbytes if s.csr is not None else 0
+                for s in self._slabs
+            ],
+            csr_segments=[s.csr_segments for s in self._slabs],
             # actual H2D traffic this run, counting the calibration
             # warm-up pass and edge-free single-wave iterations honestly
             bytes_staged_total=int(staged_delta),
             resident_bytes=(
-                resident_bytes(self.store, state)
+                resident_bytes(self.store, state,
+                               include_csr=self._csr_mode == "resident")
                 + tree_array_bytes(self._resident_extras)
                 + tree_array_bytes(state)     # the accumulator copy
             ),
+            # first-k-neighbors CSR, device-held only during the
+            # edge-free sampling phase (vertex-proportional)
+            edge_free_prefix_bytes=int(prefix_bytes),
             edge_buckets=sorted({s.src.shape[0] for s in self._slabs}),
             coalesced_segments=[s.segments for s in self._slabs],
             overlap_efficiency=eff,
             calibration=dict(calib),
             overlapped_iterations=overlapped_iters,
+            rebalanced=self._rebalanced,
+            rebalance_skew=self._last_skew,
         )
 
 

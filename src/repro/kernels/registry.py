@@ -147,6 +147,25 @@ def _spmv_workspace(nd: int, tile_dim: int) -> int:
     return 2 * nd * tile_dim * 4
 
 
+# CSR estimators: what the sparse/CSR path stages or scratches per wave.
+# They take their own hints (``csr_edges``, ``items``/``depth``) and
+# swallow the dense hints so max_workspace_bytes stays callable with
+# (nd, tile_dim) alone.
+@register_workspace("csr_slice")
+def _csr_slice_workspace(csr_edges: int = 0, **_hints) -> int:
+    # the conformal CSR row slices staged as the wave's ctx.indices
+    # (int32 per adjacency entry) — see BlockStore.csr_slices
+    return int(csr_edges) * 4
+
+
+@register_workspace("csr_bucket_search")
+def _csr_bucket_search_workspace(items: int = 0, depth: int = 0,
+                                 **_hints) -> int:
+    # TC-style membership test over staged CSR slices: gathered values
+    # plus lo/hi binary-search bounds, one (items, depth) int32 each
+    return 3 * int(items) * int(depth) * 4
+
+
 @register_workspace("frontier_tiles")
 def _frontier_workspace(nd: int, tile_dim: int) -> int:
     # gathered frontier columns (bool) + candidate mins (int32)

@@ -11,11 +11,12 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    rmat, build_block_store, build_schedule, compile_plan,
-    MemoryBudget, StreamingPlan, task_footprints, build_waves,
+    rmat, build_block_store, build_schedule, compile_plan, choose_p,
+    csr_prefix, MemoryBudget, StreamingPlan, task_footprints, build_waves,
 )
 from repro.core.membudget import (
-    COO_EDGE_BYTES, bucket_size, parse_bytes, tile_bytes,
+    COO_EDGE_BYTES, CSR_INDEX_BYTES, bucket_size, parse_bytes,
+    repack_waves, task_csr_edge_counts, tile_bytes,
 )
 from repro.algorithms import (
     pagerank_algorithm, sv_algorithm, afforest_algorithm, bfs_algorithm,
@@ -92,10 +93,14 @@ def test_streamed_matches_incore(name, alg_f, kw, budget, graph, dag):
 
 
 def test_streamed_tc_forces_multiple_waves(dag):
-    """TC counterpart of the ≥4-wave requirement (pattern mode)."""
+    """TC counterpart of the ≥4-wave requirement (pattern mode).
+
+    The budget must absorb the heaviest triple's staged slab *plus* the
+    membership test's declared device scratch (``__workspace_bytes__``)
+    — 24KB used to pass only because that scratch went unpriced."""
     plan = compile_plan(tc_algorithm(), build_block_store(dag, 4),
                         mode="sparse_only", share=False,
-                        memory_budget="24KB")
+                        memory_budget="32KB")
     res = plan.run()
     st = res.schedule_stats["streaming"]
     assert st["num_waves"] >= 4
@@ -216,9 +221,11 @@ def test_hoisted_extras_do_not_count_against_budget(graph):
 
 def test_edge_free_iterations_stage_one_wave(graph):
     """Afforest's sampling rounds declare edge_free_iterations: only one
-    representative wave is staged per sampling round, and the staged
-    byte accounting reflects the warm-up + calibration passes."""
-    plan = compile_plan(afforest_algorithm(), build_block_store(graph, 4),
+    representative wave (plus the first-k-neighbors prefix CSR) is
+    staged for the whole sampling phase, and the staged byte accounting
+    reflects the warm-up + calibration passes."""
+    store = build_block_store(graph, 4)
+    plan = compile_plan(afforest_algorithm(), store,
                         mode="sparse_only", share=False, memory_budget="16KB")
     res = plan.run()
     st = res.schedule_stats["streaming"]
@@ -226,10 +233,12 @@ def test_edge_free_iterations_stage_one_wave(graph):
     k_rounds = 2  # afforest default
     n_final = res.iterations - k_rounds
     assert n_final >= 1
-    # sampling: wave 0 staged once, cached across rounds; first final
-    # iteration: warm-up + timed calibration pass (2× all waves);
-    # remaining finals: 1× all waves
-    expected = bpw[0] + (n_final + 1) * sum(bpw)
+    # sampling: wave 0 + the prefix CSR staged once, cached across
+    # rounds; first final iteration: warm-up + timed calibration pass
+    # (2× all waves); remaining finals: 1× all waves
+    prefix_bytes = (store.n + 1) * 8 + store.n * k_rounds * 4
+    assert st["edge_free_prefix_bytes"] == prefix_bytes
+    expected = prefix_bytes + bpw[0] + (n_final + 1) * sum(bpw)
     assert st["bytes_staged_total"] == expected
     want = compile_plan(afforest_algorithm(), build_block_store(graph, 4),
                         mode="sparse_only", share=False).run().result
@@ -257,6 +266,287 @@ def test_wave_slabs_stay_bucketed(graph):
         assert b == bucket_size(b)
     # one trace per (slab shape × run_dense) — far fewer than waves
     assert plan.compile_count <= len(st["edge_buckets"]) + 1
+
+
+# ------------------------------------------------------- CSR streaming
+def test_csr_slices_round_trip(graph):
+    """Rebased row_block_ptr round-trip: every selected (row, stripe)
+    slice of the staged adjacency equals the same slice of the global
+    CSR; unselected slices collapse to zero length."""
+    store = build_block_store(graph, 4)
+    p = store.p
+    blocks = np.asarray([0, 1, 5, 6, 10, 15])   # mixed stripes, with gaps
+    sliced, rbp, indptr, segments = store.csr_slices(blocks)
+    touched = np.zeros((p, p), bool)
+    gi, gj = np.divmod(blocks, p)
+    touched[gi, gj] = True
+    stripe_of = np.repeat(np.arange(p), np.diff(store.layout.cuts))
+    total = 0
+    for u in range(store.n):
+        for k in range(p):
+            g_lo, g_hi = store.row_block_ptr[u, k], store.row_block_ptr[u, k + 1]
+            lo, hi = rbp[u, k], rbp[u, k + 1]
+            if touched[stripe_of[u], k]:
+                np.testing.assert_array_equal(
+                    sliced[lo:hi], store.indices[g_lo:g_hi]
+                )
+                total += hi - lo
+            else:
+                assert lo == hi    # unselected → zero-length slice
+    assert total == sliced.size
+    # rebased indptr delimits each row's staged adjacency
+    assert indptr[0] == 0 and indptr[-1] == sliced.size
+    np.testing.assert_array_equal(indptr[:-1], rbp[:, 0])
+    np.testing.assert_array_equal(indptr[1:], rbp[:, p])
+    # coalesced global ranges cover exactly the staged entries
+    assert sum(e - s for s, e in segments) == sliced.size
+
+
+def test_csr_slices_all_blocks_is_identity(graph):
+    store = build_block_store(graph, 4)
+    sliced, rbp, indptr, _ = store.csr_slices(np.arange(16))
+    np.testing.assert_array_equal(sliced, store.indices)
+    np.testing.assert_array_equal(rbp, store.row_block_ptr - store.row_block_ptr[0, 0])
+    np.testing.assert_array_equal(indptr, store.indptr)
+
+
+def test_csr_prefix_first_k_neighbors(graph):
+    store = build_block_store(graph, 4)
+    k = 3
+    pptr, pidx = csr_prefix(store.indptr, store.indices, k)
+    assert pidx.shape == (store.n * k,)
+    np.testing.assert_array_equal(np.diff(pptr), k)
+    for u in (0, 1, store.n // 2, store.n - 1):
+        deg = int(store.degrees[u])
+        want = store.indices[store.indptr[u] : store.indptr[u] + min(deg, k)]
+        np.testing.assert_array_equal(pidx[u * k : u * k + min(deg, k)], want)
+
+
+def _csr_checksum_algorithm():
+    """Minimal csr='slice' algorithm: sums every staged adjacency entry.
+
+    ``prepare`` computes (start, len) items from the store's
+    ``row_block_ptr`` — rebased per wave by the executor — and the
+    kernel gathers from ``ctx.indices``; any rebasing error shifts the
+    gathered values and breaks the exact integer checksum against
+    ``store.indices.sum()``."""
+    import jax.numpy as jnp
+
+    from repro.core import BlockAlgorithm
+
+    def prepare(store, sched):
+        p = store.p
+        rbp = store.row_block_ptr
+        cuts = store.layout.cuts
+        starts, lens = [], []
+        for b in sched.blocklists[:, 0]:
+            i, j = divmod(int(b), p)
+            rows = np.arange(cuts[i], cuts[i + 1])
+            s = rbp[rows, j]
+            ln = rbp[rows, j + 1] - rbp[rows, j]
+            keep = ln > 0
+            starts.append(s[keep])
+            lens.append(ln[keep])
+        s = np.concatenate(starts) if starts else np.zeros(0, np.int64)
+        ln = np.concatenate(lens) if lens else np.zeros(0, np.int64)
+        dp = int(bucket_size(int(ln.max()) if ln.size else 1, minimum=1))
+        ni = int(bucket_size(s.size, minimum=1))
+        ps = np.zeros(ni, np.int64)
+        ps[: s.size] = s
+        pl = np.zeros(ni, np.int64)
+        pl[: ln.size] = ln
+        return dict(csr_starts=jnp.asarray(ps), csr_lens=jnp.asarray(pl),
+                    csr_dp=dp)
+
+    def kernel(ctx, state, it):
+        s = ctx.extras["csr_starts"]
+        ln = ctx.extras["csr_lens"]
+        dp = ctx.extras["csr_dp"]          # static → shapes stay bucketed
+        m = ctx.indices.shape[0]           # the *staged* slice length
+        pos = s[:, None] + jnp.arange(dp, dtype=s.dtype)[None, :]
+        vals = ctx.indices[jnp.minimum(pos, m - 1)]
+        msk = jnp.arange(dp)[None, :] < ln[:, None]
+        tot = jnp.sum(jnp.where(msk, vals, 0).astype(jnp.int32))
+        return dict(state, total=state["total"] + tot)
+
+    return BlockAlgorithm(
+        name="csr_checksum",
+        kernel_sparse=kernel,
+        prepare=prepare,
+        init_state=lambda store: dict(total=jnp.asarray(0, jnp.int32)),
+        finalize=lambda store, state: int(np.asarray(state["total"])),
+        metadata=dict(combine="add", csr="slice"),
+    )
+
+
+def test_streamed_csr_bounded_on_skewed_rmat():
+    """Acceptance: on a skewed R-MAT whose *full* CSR exceeds the
+    budget, a csr='slice' algorithm streams with every wave's total
+    staged bytes — and the per-wave sliced indices — ≤ the budget, and
+    the rebased positions still address exactly the right entries."""
+    g = rmat(10, 16, seed=5)
+    budget = "32KB"
+    store = build_block_store(g, 8)
+    assert store.indices.nbytes > parse_bytes(budget)
+    plan = compile_plan(_csr_checksum_algorithm(), store, share=False,
+                        memory_budget=budget)
+    res = plan.run()
+    st = res.schedule_stats["streaming"]
+    assert st["csr_mode"] == "slice"
+    assert st["num_waves"] >= 4
+    assert all(b <= st["budget_bytes"] for b in st["bytes_per_wave"])
+    assert max(st["csr_bytes_per_wave"]) > 0
+    assert all(c <= st["budget_bytes"] for c in st["csr_bytes_per_wave"])
+    # the CSR slices really are slices — no wave stages the whole CSR
+    assert max(st["csr_bytes_per_wave"]) < store.indices.nbytes
+    # nothing edge-proportional stays resident (vertex-level arrays +
+    # the scalar state only)
+    vertex_level = (store.indptr.nbytes + store.degrees.nbytes
+                    + store.row_block_ptr.nbytes + store.layout.cuts.nbytes)
+    assert st["resident_bytes"] < vertex_level + 1024
+    # exact integer checksum: every adjacency entry staged once, rebased
+    # positions correct
+    assert res.result == int(store.indices.sum())
+    # and the in-core path computes the same thing from the global CSR
+    want = compile_plan(_csr_checksum_algorithm(), store, share=False).run()
+    assert want.result == res.result
+
+
+def test_task_csr_edge_counts_dedups_blocks(graph):
+    """Pattern-mode block-lists with repeated blocks stage each block's
+    conformal rows once — the CSR pricing must not double-count."""
+    store = build_block_store(graph, 4)
+    sched = build_schedule(pagerank_algorithm(), store, mode="sparse_only")
+    seg = np.diff(store.block_ptr)
+    counts = task_csr_edge_counts(store, sched)
+    np.testing.assert_array_equal(counts, seg[sched.blocklists[:, 0]])
+    fp = task_footprints(store, sched, stage_csr=True)
+    np.testing.assert_array_equal(
+        fp, seg[sched.blocklists[:, 0]] * (COO_EDGE_BYTES + CSR_INDEX_BYTES)
+    )
+
+
+def test_prepare_declared_workspace_is_priced_not_staged(dag):
+    """TC's prepare declares its membership-test scratch under the
+    reserved __workspace_bytes__ key: the executor must count it
+    against the budget, strip it from the kernel-visible extras, and
+    the in-core plan must strip it too."""
+    store = build_block_store(dag, 4)
+    plan = compile_plan(tc_algorithm(), store, mode="sparse_only",
+                        share=False, memory_budget="32KB")
+    assert any(s.workspace_bytes > 0 for s in plan._slabs)
+    for s in plan._slabs:
+        assert s.workspace_bytes + s.staged_bytes <= plan.budget.total_bytes
+        if s.extras is not None:
+            assert "__workspace_bytes__" not in s.extras
+    incore = compile_plan(tc_algorithm(), store, mode="sparse_only",
+                          share=False)
+    assert "__workspace_bytes__" not in incore.context.extras
+
+
+def test_rebalance_threshold_requires_budget(graph):
+    store = build_block_store(graph, 4)
+    with pytest.raises(ValueError, match="memory_budget"):
+        compile_plan(pagerank_algorithm(), store, rebalance_threshold=1.5)
+
+
+# ------------------------------------------------- budget-aware schedule
+def test_budget_aware_schedule_shrinks_tiles_and_demotes(graph):
+    store = build_block_store(graph, 4)
+    # without a budget the hybrid schedule claims dense tasks at 128
+    free = build_schedule(pagerank_algorithm(), store, mode="hybrid",
+                          dense_density=0.001, tile_dim=128)
+    assert free.dense_task_mask.any()
+    # a budget far below one 128-tile forces the tile cut-off down
+    tight = build_schedule(pagerank_algorithm(), store, mode="hybrid",
+                           dense_density=0.001, tile_dim=128,
+                           memory_budget="20KB")
+    assert tight.tile_dim < 128
+    assert tight.stats["budget_bytes"] == 20_000
+    # with a budget below any dense working set every task is demoted
+    # to the sparse path — the planner never emits an unrunnable wave
+    tiny = build_schedule(pagerank_algorithm(), store, mode="hybrid",
+                          dense_density=0.001, tile_dim=128,
+                          memory_budget="18KB")
+    assert not tiny.dense_task_mask.any()
+
+
+def test_choose_p_bounds_stripe_edges(graph):
+    p = choose_p(graph, "16KB")
+    assert p > 1
+    store = build_block_store(graph, p)
+    heaviest = store.layout.max_stripe_edges(graph)
+    # the heaviest stripe fits half the budget — except that a single
+    # hub row is irreducible by any contiguous 1-D partition
+    cap = 16_000 // (2 * (COO_EDGE_BYTES + CSR_INDEX_BYTES))
+    assert heaviest <= max(cap, int(graph.degrees.max()))
+    # a generous budget needs no partitioning at all
+    assert choose_p(graph, "1GB") == 1
+
+
+# ------------------------------------------------------- rebalancing
+def test_rebalance_triggers_on_skew(graph):
+    store = build_block_store(graph, 4)
+    plan = compile_plan(pagerank_algorithm(), store, mode="sparse_only",
+                        share=False, memory_budget="16KB",
+                        rebalance_threshold=1.5)
+    nw = plan.num_waves
+    assert nw >= 4
+    before = [s.wave.task_ids.copy() for s in plan._slabs]
+    # forced skew: the last wave dominates → re-pack must trigger
+    times = [1.0] * (nw - 1) + [10.0 * nw]
+    assert plan.rebalance(times) is True
+    st_waves = plan._slabs
+    # all tasks still covered exactly once
+    all_ids = np.concatenate([s.wave.task_ids for s in st_waves])
+    assert sorted(all_ids.tolist()) == sorted(
+        np.concatenate(before).tolist()
+    )
+    # budget invariant survives the re-pack
+    assert all(
+        s.staged_bytes + s.workspace_bytes <= plan.budget.total_bytes
+        for s in st_waves
+    )
+    # the re-packed plan still computes the right answer
+    res = plan.run()
+    assert res.schedule_stats["streaming"]["rebalanced"] is True
+    want = compile_plan(pagerank_algorithm(), store, mode="sparse_only",
+                        share=False).run().result
+    np.testing.assert_allclose(np.asarray(res.result), np.asarray(want),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_rebalance_ignores_balanced_waves(graph):
+    store = build_block_store(graph, 4)
+    plan = compile_plan(pagerank_algorithm(), store, mode="sparse_only",
+                        share=False, memory_budget="16KB",
+                        rebalance_threshold=1.5)
+    nw = plan.num_waves
+    assert plan.rebalance([1.0] * nw) is False
+    assert plan._rebalanced is False
+    # disabled (default None): even huge skew is a no-op
+    off = compile_plan(pagerank_algorithm(), store, mode="sparse_only",
+                       share=False, memory_budget="16KB")
+    assert off.rebalance([1.0] * (off.num_waves - 1) + [100.0]) is False
+
+
+def test_repack_waves_balances_time_under_budget(graph):
+    store = build_block_store(graph, 4)
+    sched = build_schedule(pagerank_algorithm(), store, mode="sparse_only")
+    fp = task_footprints(store, sched)
+    budget = MemoryBudget(int(fp.max()) * 3)
+    t = np.ones(sched.num_tasks)
+    t[0] = 50.0                     # one dominating task
+    waves = repack_waves(sched, budget, fp, t)
+    # byte budget holds per wave
+    for w in waves:
+        assert fp[w.task_ids].sum() <= budget.total_bytes
+    # the dominating task is isolated from the rest of the queue
+    heavy = [w for w in waves if 0 in w.task_ids.tolist()]
+    assert len(heavy) == 1 and heavy[0].task_ids.size == 1
+    # coverage is a disjoint partition
+    all_ids = np.concatenate([w.task_ids for w in waves])
+    assert sorted(all_ids.tolist()) == list(range(sched.num_tasks))
 
 
 def test_schedule_restrict_subsets(graph):
