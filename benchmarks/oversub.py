@@ -2,7 +2,7 @@
 graphs whose dense representation exceeds accelerator memory because a
 task only ever needs the blocks of ONE block-list resident.
 
-Two measurements on this container:
+Three measurements on this container:
 
 * the original tile sweep — hybrid TC completes with bounded resident
   tile bytes while unbounded dense-only would need the full n² matrix;
@@ -12,26 +12,32 @@ Two measurements on this container:
   with budget-aware partitioning (``choose_p``) and tail-wave
   rebalancing enabled, and reports wave count, bytes staged per wave
   (CSR broken out), and the measured copy/compute overlap efficiency
-  from ``schedule_stats["streaming"]``.
+  from ``schedule_stats["streaming"]``;
+* mesh-cooperative streaming — ``--mesh-devices N`` forces an N-device
+  host-platform mesh (XLA_FLAGS, set before jax initializes — which is
+  why this module imports repro lazily) and runs the same budgeted
+  waves through ``shard_map``, reporting per-device staged bytes,
+  collective bytes, and overlap efficiency next to the single-device
+  streaming baseline at the same per-device budget.
 
-CLI: ``python -m benchmarks.oversub [--memory-budget 256KB]``.
+CLI: ``python -m benchmarks.oversub [--memory-budget 256KB]
+[--mesh-devices 8]``.
 """
 from __future__ import annotations
 
 import argparse
 
-import numpy as np
-
-from repro.core import build_block_store, choose_p, compile_plan
-from repro.algorithms import pagerank_algorithm, tc_algorithm
-from repro.algorithms.tc import orient_dag
-from repro.data import benchmark_suite
-
 from .common import csv_row, time_median
 
 
 def run(scale: str = "small", repeats: int = 3, backend: str = "xla",
-        memory_budget: str | None = None) -> list[str]:
+        memory_budget: str | None = None,
+        mesh_devices: int = 1) -> list[str]:
+    from repro.core import build_block_store, compile_plan
+    from repro.algorithms import tc_algorithm
+    from repro.algorithms.tc import orient_dag
+    from repro.data import benchmark_suite
+
     rows = []
     g = benchmark_suite(scale)["social"]
     dag = orient_dag(g)
@@ -51,6 +57,11 @@ def run(scale: str = "small", repeats: int = 3, backend: str = "xla",
         ))
     rows.extend(run_streaming(g, repeats=repeats, backend=backend,
                               memory_budget=memory_budget))
+    if mesh_devices > 1:
+        rows.extend(run_mesh_streaming(
+            g, repeats=repeats, backend=backend,
+            memory_budget=memory_budget, mesh_devices=mesh_devices,
+        ))
     return rows
 
 
@@ -63,6 +74,10 @@ def run_streaming(g, *, repeats: int = 3, backend: str = "xla",
     shows the adjacency itself staying under the budget.  Both use the
     budget-aware partition grain and opt in to tail-wave rebalancing.
     """
+    from repro.core import build_block_store, choose_p, compile_plan
+    from repro.algorithms import pagerank_algorithm, tc_algorithm
+    from repro.algorithms.tc import orient_dag
+
     budgets = [memory_budget] if memory_budget else ["256KB", "64KB"]
     rows = []
     dag = orient_dag(g)
@@ -109,6 +124,77 @@ def run_streaming(g, *, repeats: int = 3, backend: str = "xla",
     return rows
 
 
+def run_mesh_streaming(g, *, repeats: int = 3, backend: str = "xla",
+                       memory_budget: str | None = None,
+                       mesh_devices: int = 8) -> list[str]:
+    """Budgeted waves through ``shard_map`` vs the single-device
+    streaming baseline at the same *per-device* budget.
+
+    Per pair of rows: ``mesh1`` is the baseline (1 device stages and
+    computes every wave alone), ``meshN`` runs each wave cooperatively
+    over the N-device mesh — N× the wave capacity, per-device staged
+    bytes ≤ the budget, plus the collective payload the combine ops
+    (psum/pmin/pmax) moved.
+    """
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    from repro.core import build_block_store, choose_p, compile_plan
+    from repro.algorithms import pagerank_algorithm, tc_algorithm
+    from repro.algorithms.tc import orient_dag
+    from repro.kernels.registry import workspace_bytes
+
+    avail = len(jax.devices())
+    d = min(mesh_devices, avail)
+    mesh = Mesh(np.array(jax.devices()[:d]), ("blocks",))
+    budgets = [memory_budget] if memory_budget else ["64KB"]
+    rows = []
+    dag = orient_dag(g)
+    for budget in budgets:
+        jobs = [
+            ("pr", pagerank_algorithm,
+             build_block_store(g, max(choose_p(g, budget, devices=d), 4))),
+            ("tc", tc_algorithm,
+             build_block_store(
+                 dag, max(choose_p(dag, budget, safety=12, devices=d), 4))),
+        ]
+        for name, alg_f, store in jobs:
+            for label, use_mesh in ((f"mesh{d}", mesh), ("mesh1", None)):
+                try:
+                    plan = compile_plan(alg_f(), store, mode="sparse_only",
+                                        backend=backend, share=False,
+                                        memory_budget=budget, mesh=use_mesh)
+                except ValueError as e:
+                    rows.append(csv_row(
+                        f"oversub/mesh/{name}/{budget}/{label}", 0.0,
+                        f"error={e}"))
+                    continue
+                last: dict = {}
+
+                def timed(plan=plan, last=last):
+                    last["res"] = plan.run()
+
+                t = time_median(timed, repeats=repeats)
+                st = last["res"].schedule_stats["streaming"]
+                # worst-device scratch estimate at this wave spread (the
+                # registry's per-device pricing hint)
+                ws = workspace_bytes("csr_bucket_search", items=store.m,
+                                     depth=8, devices=st["mesh_devices"])
+                rows.append(csv_row(
+                    f"oversub/mesh/{name}/{budget}/{label}", t,
+                    f"devices={st['mesh_devices']};"
+                    f"waves={st['num_waves']};"
+                    f"budget_bytes={st['budget_bytes']};"
+                    f"max_per_device_bytes={max(st['per_device_bytes'], default=0)};"
+                    f"collective_bytes={st['collective_bytes']};"
+                    f"per_device_scratch_est={ws};"
+                    f"bytes_staged_total={st['bytes_staged_total']};"
+                    f"overlap_efficiency={st['overlap_efficiency']:.2f}",
+                ))
+    return rows
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--scale", default="small", choices=["small", "bench"])
@@ -120,6 +206,25 @@ if __name__ == "__main__":
         help="stream PageRank under this device-memory budget "
              "(bytes or e.g. 256KB) and report waves/bytes/overlap",
     )
+    ap.add_argument(
+        "--mesh-devices", type=int, default=1,
+        help="also run mesh-cooperative streaming over an N-device "
+             "host-platform mesh (forces XLA host devices before jax "
+             "initializes) and report per-device staged bytes, "
+             "collective bytes, and overlap vs the 1-device baseline",
+    )
     a = ap.parse_args()
+    if a.mesh_devices > 1:
+        # must happen before the first jax import (repro imports lazily
+        # for exactly this reason): XLA locks the device count at init
+        import os
+
+        flags = os.environ.get("XLA_FLAGS", "")
+        if "--xla_force_host_platform_device_count" not in flags:
+            os.environ["XLA_FLAGS"] = (
+                f"{flags} --xla_force_host_platform_device_count="
+                f"{a.mesh_devices}"
+            ).strip()
     print("\n".join(run(scale=a.scale, repeats=a.repeats, backend=a.backend,
-                        memory_budget=a.memory_budget)))
+                        memory_budget=a.memory_budget,
+                        mesh_devices=a.mesh_devices)))

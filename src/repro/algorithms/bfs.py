@@ -159,8 +159,12 @@ def bfs_algorithm(source: int = 0, *, max_iters: int = 10_000,
             parent=np.asarray(state["parent"]),
             dist=np.asarray(state["dist"]),
         ),
+        # mesh="shard": the level's parent min-scatter is judged on
+        # post-written `dist`, so any edge/tile partition over mesh
+        # devices pmin-folds to the identical (deterministic) parents
         metadata=dict(combine=dict(parent="min", dist="min"),
-                      workspace_kernel="frontier_tiles", csr="none"),
+                      workspace_kernel="frontier_tiles", csr="none",
+                      mesh="shard"),
     )
 
 

@@ -127,6 +127,11 @@ def afforest_algorithm(*, k_rounds: int = 2, sample_size: int = 1024,
             # edge-proportional need stay device-resident
             edge_free_iterations=k_rounds,
             csr="none",
+            # mesh="shard": finalization hooks judge roots on
+            # iteration-start C (pmin over any edge partition); the
+            # edge-free sampling rounds read no per-device data, so the
+            # mesh executor runs them replicated without collectives
+            mesh="shard",
         ),
     )
 

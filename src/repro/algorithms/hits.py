@@ -91,7 +91,9 @@ def hits_algorithm(*, tol: float = 1e-8, max_iters: int = 100) -> BlockAlgorithm
         finalize=lambda store, state: dict(
             hub=np.asarray(state["hub"]), auth=np.asarray(state["auth"])
         ),
-        metadata=dict(combine=dict(acc="add"), csr="none"),
+        # mesh="shard": both phases are pure scatter-adds into acc from
+        # iteration-start hub/auth — psum over any edge partition
+        metadata=dict(combine=dict(acc="add"), csr="none", mesh="shard"),
     )
 
 

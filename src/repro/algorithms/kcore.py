@@ -65,8 +65,11 @@ def kcore_algorithm(k: int, *, max_iters: int = 10_000) -> BlockAlgorithm:
         after=after,
         max_iterations=max_iters,
         finalize=lambda store, state: np.asarray(state["alive"]),
+        # mesh="shard": alive-neighbor degree counting is a scatter-add
+        # from iteration-start alive — psum over any edge partition;
+        # alive/peeled are post-written
         metadata=dict(combine=dict(deg="add", alive="min", peeled="add"),
-                      csr="none"),
+                      csr="none", mesh="shard"),
     )
 
 

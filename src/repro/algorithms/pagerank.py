@@ -91,8 +91,13 @@ def pagerank_algorithm(*, damping: float = 0.85, tol: float = 1e-4,
         after=after,
         max_iterations=max_iters,
         finalize=lambda store, state: np.asarray(state["rank"]),
+        # mesh="shard": the rank scatter decomposes over any edge
+        # partition judged from iteration-start rank; acc folds with
+        # psum (exact for the iteration's summation structure up to
+        # float order), everything else is post-written
         metadata=dict(combine="add", params=dict(damping=damping),
-                      workspace_kernel="spmv_tiles", csr="none"),
+                      workspace_kernel="spmv_tiles", csr="none",
+                      mesh="shard"),
     )
 
 

@@ -93,7 +93,11 @@ def sv_algorithm(*, max_iters: int = 200) -> BlockAlgorithm:
         after=after,
         max_iterations=max_iters,
         finalize=lambda store, state: np.asarray(state["C"]),
-        metadata=dict(combine=dict(C="min", H="add"), csr="none"),
+        # mesh="shard": hooks judge roots on iteration-start C, so the
+        # min-scatter pmin-folds over any edge partition; H psums the
+        # per-device hook counts (same fold streaming already uses)
+        metadata=dict(combine=dict(C="min", H="add"), csr="none",
+                      mesh="shard"),
     )
 
 

@@ -161,14 +161,74 @@ def _kernel_sparse(ctx, state, it):
     return dict(state, nt=nt)
 
 
+def _mesh_pack(extras_list):
+    """Pack per-device ``_prepare`` outputs for ``shard_map`` staging.
+
+    Per-device bucket ladders are data-dependent (a device only has the
+    dp values its items produced), so the structures cannot be stacked
+    directly.  Unify to the union ladder: a bucket absent on a device
+    contributes zero items, and item arrays pad to the per-bucket max
+    with neutral items (``lg = lb = 0`` — the membership test's mask and
+    lower-bound check both reject them, so padding counts nothing).
+    ``steps`` takes the per-bucket max so one unrolled binary search
+    serves every device.  Dense triples pad with ``-1`` rows, which
+    ``_kernel_dense`` masks out.  Array leaves come back with a leading
+    device axis, as the mesh executor's contract requires.
+    """
+    d = len(extras_list)
+    dps = sorted({int(b["dp"]) for e in extras_list for b in e["tc_buckets"]})
+    buckets = []
+    for dp in dps:
+        per_dev = [
+            next((b for b in e["tc_buckets"] if int(b["dp"]) == dp), None)
+            for e in extras_list
+        ]
+        steps = max(int(b["steps"]) for b in per_dev if b is not None)
+        cnt = max(
+            (int(np.asarray(b["sg"]).shape[0])
+             for b in per_dev if b is not None),
+            default=0,
+        ) or 1
+        arrs = {k: np.zeros((d, cnt), np.int64)
+                for k in ("sg", "lg", "sb", "lb")}
+        for i, b in enumerate(per_dev):
+            if b is None:
+                continue
+            for k in ("sg", "lg", "sb", "lb"):
+                v = np.asarray(b[k], dtype=np.int64)
+                arrs[k][i, : v.shape[0]] = v
+        buckets.append(dict(dp=dp, steps=steps, **arrs))
+    out = {"tc_buckets": buckets}
+    idxs = [e.get("tc_tiles_idx") for e in extras_list]
+    if any(x is not None for x in idxs):
+        tmax = max(
+            (int(np.asarray(x).shape[0]) for x in idxs if x is not None),
+            default=0,
+        ) or 1
+        stacked = np.full((d, tmax, 3), -1, np.int32)
+        for i, x in enumerate(idxs):
+            if x is None:
+                continue
+            v = np.asarray(x, dtype=np.int32)
+            stacked[i, : v.shape[0]] = v
+        out["tc_tiles_idx"] = stacked
+    else:
+        out["tc_tiles_idx"] = None
+    return out
+
+
 def _kernel_dense(ctx, state, it):
     idx = ctx.extras["tc_tiles_idx"]
     if idx is None:
         return state
     tiles = ctx.tiles
-    a_ij = tiles[idx[:, 0]]
-    a_ik = tiles[idx[:, 1]]
-    a_jk = tiles[idx[:, 2]]
+    # rows of -1 are mesh_pack padding (devices with fewer triples than
+    # the per-wave max): zero their A_ij mask so they count nothing
+    valid = (idx[:, 0] >= 0)
+    safe = jnp.maximum(idx, 0)
+    a_ij = tiles[safe[:, 0]] * valid[:, None, None].astype(tiles.dtype)
+    a_ik = tiles[safe[:, 1]]
+    a_jk = tiles[safe[:, 2]]
     cnt = get_kernel("tc_tiles", ctx.backend)(a_ik, a_jk, a_ij)
     return dict(state, nt=state["nt"] + cnt.astype(jnp.int32))
 
@@ -182,15 +242,19 @@ def tc_algorithm() -> BlockAlgorithm:
         kernel_sparse=_kernel_sparse,
         kernel_dense=_kernel_dense,
         prepare=_prepare,
+        mesh_pack=_mesh_pack,
         init_state=lambda store: dict(nt=jnp.asarray(0, jnp.int32)),
         max_iterations=1,
         finalize=lambda store, state: int(jax.device_get(state["nt"])),
         # csr="slice": the membership test reads ctx.indices, with every
-        # position computed by _prepare from the (per-wave rebased)
-        # row_block_ptr — so each streamed wave stages only the conformal
-        # CSR row ranges its triples touch
+        # position computed by _prepare from the (per-wave or per-device
+        # rebased) row_block_ptr — so each streamed wave stages only the
+        # conformal CSR row ranges its triples touch.  mesh="shard":
+        # triples partition cleanly over devices (each triple's count is
+        # independent and psums), with mesh_pack unifying the
+        # data-dependent bucket ladders across devices
         metadata=dict(combine="add", workspace_kernel="tc_tiles",
-                      csr="slice"),
+                      csr="slice", mesh="shard"),
     )
 
 

@@ -53,6 +53,9 @@ from .membudget import (
     repack_waves,
 )
 from .stream import StreamingPlan, compile_streaming_plan
+from .distributed import (
+    DistributedEngine, combine_fn, make_device_edge_partition,
+)
 
 __all__ = [
     "Graph", "from_edges", "read_edge_list", "load_binary", "save_binary",
@@ -68,5 +71,6 @@ __all__ = [
     "MemoryBudget", "task_footprints", "task_csr_edge_counts",
     "build_waves", "repack_waves",
     "StreamingPlan", "compile_streaming_plan",
+    "DistributedEngine", "combine_fn", "make_device_edge_partition",
     "Engine", "run",
 ]

@@ -15,10 +15,17 @@ the paper adopts for shared memory, generalized to a mesh: reads are
 free (replicated), writes are reduced.
 
 ``make_device_edge_partition`` turns an LPT schedule into the padded
-per-device COO slabs; ``shard_step`` wraps one engine step in
-``shard_map``.  On this CPU container the same code runs with a 1-device
-mesh in-process and with an 8-device host-platform mesh in the
-integration test (subprocess sets XLA_FLAGS).
+per-device COO (and, on request, conformal-CSR) slabs — it is shared by
+:class:`DistributedEngine` (whole-graph, resident) and by the
+mesh-cooperative streaming executor (:mod:`repro.core.stream`), which
+calls it once per *wave* with a wave-local assignment and bucket-ladder
+padding.  On this CPU container the same code runs with a 1-device mesh
+in-process and with an 8-device host-platform mesh in the integration
+tests (subprocess sets XLA_FLAGS).
+
+The full distributed execution model — what is replicated, what is
+sharded, which collective folds which attribute — is documented in
+``docs/distributed.md``.
 """
 from __future__ import annotations
 
@@ -48,35 +55,107 @@ def combine_fn(kind: str, axis: str) -> Callable:
 
 
 def make_device_edge_partition(
-    store: BlockStore, sched: Schedule
-) -> dict[str, np.ndarray]:
-    """Pad each device's assigned edges into a [D, E_max] slab.
+    store: BlockStore, sched: Schedule, *,
+    assignment: np.ndarray | None = None,
+    num_devices: int | None = None,
+    bucket: bool = False,
+    stage_csr: bool = False,
+) -> dict[str, Any]:
+    """Partition a schedule's tasks into padded per-device slabs.
 
-    Tasks (block-lists) were LPT-assigned; a device's edges are the union
-    of the *first* block of each of its tasks (bulk/activation modes use
-    single-block lists; pattern mode does its own partitioning).
+    A device's edge set is the union of **every** block of each of its
+    assigned tasks, deduplicated within the device (an earlier revision
+    took only the first block of each block-list, silently dropping the
+    other blocks of multi-block pattern-mode tasks).  Across devices a
+    block may be staged more than once when two tasks of different
+    devices share it — harmless for pattern-mode algorithms, whose
+    kernels drive work from ``prepare`` items rather than the raw slab,
+    and impossible for bulk/activation composition (one block per task).
     Padding uses src=dst=0 with valid=False.
+
+    Parameters
+    ----------
+    assignment
+        Per-task device ids; defaults to ``sched.device_assignment``
+        (the global LPT packing).  The streaming executor passes a
+        wave-local LPT assignment instead.
+    num_devices
+        Mesh size; defaults to ``sched.num_devices``.
+    bucket
+        Pad the slab width up the power-of-two bucket ladder
+        (:func:`repro.core.membudget.bucket_size`) so all waves of one
+        plan share a few slab shapes and the jitted mesh step does not
+        retrace per wave.
+    stage_csr
+        Additionally build each device's conformal CSR row slices
+        (:meth:`~repro.core.blocks.BlockStore.csr_slices` over the
+        device's blocks): the returned dict gains ``indices`` (a padded
+        ``[D, C]`` slab), ``csr_entries``/``csr_segments`` (per-device
+        true lengths / coalesced gather counts) and ``csr_maps`` — the
+        per-device rebased ``(row_block_ptr, indptr)`` pair an
+        algorithm's ``prepare`` needs to address its device's slice.
+
+    Returns ``dict(src, dst, edge_block, valid, blocks, edges, ...)``:
+    ``[D, E]`` int32/bool slabs plus per-device block-id arrays and true
+    edge counts.
     """
-    d = sched.num_devices
-    per_dev_edges: list[list[np.ndarray]] = [[] for _ in range(d)]
-    for tid in range(sched.num_tasks):
-        dev = int(sched.device_assignment[tid])
-        b = int(sched.blocklists[tid][0])
-        s, e = store.block_ptr[b], store.block_ptr[b + 1]
-        per_dev_edges[dev].append(np.arange(s, e, dtype=np.int64))
-    idx = [
-        np.concatenate(lst) if lst else np.zeros(0, np.int64) for lst in per_dev_edges
+    from .membudget import bucket_size
+
+    d = int(num_devices) if num_devices is not None else sched.num_devices
+    assign = (
+        np.asarray(assignment, dtype=np.int64)
+        if assignment is not None else sched.device_assignment
+    )
+    if assign.shape[0] != sched.num_tasks:
+        raise ValueError(
+            f"assignment covers {assign.shape[0]} tasks, schedule has "
+            f"{sched.num_tasks}"
+        )
+    blocks = [
+        np.unique(sched.blocklists[assign == i]).astype(np.int64)
+        if (assign == i).any() else np.zeros(0, np.int64)
+        for i in range(d)
     ]
+    idx = []
+    seg_counts = []
+    for bl in blocks:
+        segs = store.edge_segments(bl)
+        seg_counts.append(len(segs))
+        idx.append(
+            np.concatenate([np.arange(s, e, dtype=np.int64) for s, e in segs])
+            if segs else np.zeros(0, np.int64)
+        )
     emax = max((int(x.shape[0]) for x in idx), default=1) or 1
-    src = np.zeros((d, emax), dtype=np.int32)
-    dst = np.zeros((d, emax), dtype=np.int32)
-    valid = np.zeros((d, emax), dtype=bool)
+    eb = bucket_size(emax) if bucket else emax
+    src = np.zeros((d, eb), dtype=np.int32)
+    dst = np.zeros((d, eb), dtype=np.int32)
+    edge_block = np.zeros((d, eb), dtype=np.int32)
+    valid = np.zeros((d, eb), dtype=bool)
     for i, ix in enumerate(idx):
         k = ix.shape[0]
         src[i, :k] = store.src[ix]
         dst[i, :k] = store.dst[ix]
+        edge_block[i, :k] = store.edge_block[ix]
         valid[i, :k] = True
-    return dict(src=src, dst=dst, valid=valid)
+    out: dict[str, Any] = dict(
+        src=src, dst=dst, edge_block=edge_block, valid=valid,
+        blocks=blocks, edges=[int(x.shape[0]) for x in idx],
+        segments=seg_counts,
+    )
+    if stage_csr:
+        slices = [store.csr_slices(bl) for bl in blocks]
+        cmax = max((int(s[0].shape[0]) for s in slices), default=1) or 1
+        cb = bucket_size(cmax) if bucket else cmax
+        indices = np.zeros((d, cb), dtype=np.int32)
+        for i, (sl, _, _, _) in enumerate(slices):
+            indices[i, : sl.shape[0]] = sl
+        out.update(
+            indices=indices,
+            csr_entries=[int(s[0].shape[0]) for s in slices],
+            csr_segments=[len(s[3]) for s in slices],
+            csr_maps=[(s[1], s[2]) for s in slices],
+        )
+    return out
 
 
 class DistributedEngine:

@@ -276,6 +276,7 @@ def compile_plan(
     use_pallas: bool = False,
     memory_budget: "int | str | None" = None,
     rebalance_threshold: "float | None" = None,
+    mesh=None,
 ) -> "Plan | StreamingPlan":
     """Build + compile: schedule, prepare, typed contexts, jitted step.
 
@@ -300,6 +301,18 @@ def compile_plan(
     ``rebalance_threshold`` (streaming only) opts in to tail-wave
     rebalancing: when measured per-wave compute skew exceeds it, the
     wave queue is re-packed against the observed task times.
+
+    ``mesh`` (streaming only; a 1-D ``jax.sharding.Mesh``) composes the
+    waves with the distributed execution model of
+    :mod:`repro.core.distributed`: ``memory_budget`` becomes *per
+    device*, each wave's tasks are LPT-split over the mesh into padded
+    per-device COO/CSR/tile slabs, the double-buffered stager
+    ``device_put``\\ s wave k+1's sharded slabs while the mesh computes
+    wave k under ``shard_map``, and per-wave partials fold with the
+    algorithm's ``metadata["combine"]`` collectives (psum/pmin/pmax) —
+    bit-identical to in-core for integer/bool attributes.  Requires the
+    algorithm to declare ``metadata["mesh"] == "shard"``; see
+    ``docs/distributed.md``.
     """
     if backend is None:
         backend = "pallas" if use_pallas else "xla"
@@ -308,6 +321,12 @@ def compile_plan(
             "rebalance_threshold only applies to the streaming executor; "
             "pass memory_budget=... as well (the in-core Plan has no waves "
             "to rebalance)"
+        )
+    if mesh is not None and memory_budget is None:
+        raise ValueError(
+            "mesh= composes the *streaming* executor with a device mesh; "
+            "pass memory_budget=... as well (for whole-graph resident mesh "
+            "execution use repro.core.distributed.DistributedEngine)"
         )
     if memory_budget is not None:
         from .stream import StreamingPlan
@@ -319,6 +338,7 @@ def compile_plan(
             tile_dim=tile_dim, dense_frac=dense_frac,
             dense_density=dense_density, share=share,
             rebalance_threshold=rebalance_threshold,
+            mesh=mesh,
         )
     return Plan(
         alg, store, schedule,

@@ -51,6 +51,15 @@ loop continues while it returns ``True``, bounded by
 ``edge_free_iterations``
     first ``k`` iterations read at most each vertex's first ``k``
     neighbors — streamed against the prefix CSR.
+``mesh``
+    ``"shard"`` opts in to mesh-cooperative streaming
+    (``compile_plan(..., memory_budget=..., mesh=...)``): the kernels
+    must be decomposable over any partition of a wave's tasks judged
+    from iteration-start state (the same property per-wave folding
+    relies on), and ``prepare`` must be restrictable to a device-local
+    view of the wave.  Absent (the default), passing a mesh raises —
+    a custom algorithm must not silently run under collectives whose
+    semantics it never declared.  See ``docs/distributed.md``.
 """
 from __future__ import annotations
 
@@ -100,6 +109,16 @@ class BlockAlgorithm:
     # Context.extras (bucketed item arrays, tile index maps, ...).
     # jax/numpy array leaves are traced; everything else stays static.
     prepare: Callable[..., dict] | None = None
+    # mesh-cooperative streaming only: pack the per-device ``prepare``
+    # outputs of one wave into a single extras tree whose array leaves
+    # carry a leading device axis (sharded over the mesh; the leading
+    # axis is stripped inside each shard) and whose non-array leaves
+    # are device-invariant.  Required when per-device prepare outputs
+    # differ in *structure* (TC's data-dependent bucket ladder); when
+    # None, the executor stacks structurally identical outputs itself.
+    # Padding must be neutral for the kernels — the framework cannot
+    # know which sentinel is harmless.
+    mesh_pack: Callable[..., dict] | None = None
     # initial attribute state factory: (store) -> pytree
     init_state: Callable[..., Any] | None = None
     # extract final result: (store, state) -> anything

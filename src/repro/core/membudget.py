@@ -183,7 +183,13 @@ def dense_extra_bytes(nd: int, tile_dim: int,
                       workspace_kernel: str | None = None) -> int:
     """Dense-path surcharge for one task: ``nd`` staged bitmap tiles
     plus the kernel workspace estimate (worst case over the registry
-    when the algorithm names no kernel)."""
+    when the algorithm names no kernel).
+
+    Deliberately *not* mesh-aware: a task is atomic on one device, so
+    its footprint never shrinks with mesh size.  Per-device pricing of
+    a whole wave's spread-out tiles goes through the registry
+    estimators' ``devices`` hint instead (the mesh assembler prices the
+    per-device padded tile count directly)."""
     from ..kernels.registry import max_workspace_bytes, workspace_bytes
 
     extra = nd * tile_bytes(tile_dim)
@@ -271,18 +277,28 @@ class Wave:
 
 def build_waves(store: BlockStore, schedule: Schedule,
                 budget: MemoryBudget,
-                footprints: np.ndarray | None = None) -> list[Wave]:
+                footprints: np.ndarray | None = None, *,
+                devices: int = 1) -> list[Wave]:
     """Greedily pack LPT-ordered tasks into waves under ``budget``.
 
     Walking tasks heaviest-first (the schedule's LPT order) keeps each
     wave's load balanced the same way device packing does; a wave closes
-    when the next task would push its estimate past the budget.  Inside
-    a wave, tasks are re-sorted by leading block id so their segmented
-    COO slices coalesce.  A single task whose model footprint exceeds
-    the budget is unrunnable — raise rather than silently oversubscribe.
+    when the next task would push its estimate past the wave capacity.
+    Inside a wave, tasks are re-sorted by leading block id so their
+    segmented COO slices coalesce.
+
+    ``budget`` is *per device*; with ``devices`` > 1 (mesh-cooperative
+    streaming) one wave is processed cooperatively by the whole mesh, so
+    the wave capacity is ``devices × budget`` — but a single task is
+    atomic on one device, so any task whose model footprint exceeds the
+    per-device budget is unrunnable regardless of mesh size: raise
+    rather than silently oversubscribe.  The stream binder re-verifies
+    the assembled per-device slabs and splits waves whose actual bytes
+    overflow.
     """
     if footprints is None:
         footprints = task_footprints(store, schedule)
+    capacity = budget.total_bytes * max(int(devices), 1)
     waves: list[Wave] = []
     cur: list[int] = []
     cur_bytes = 0
@@ -290,11 +306,11 @@ def build_waves(store: BlockStore, schedule: Schedule,
         b = int(footprints[t])
         if b > budget.total_bytes:
             raise ValueError(
-                f"task {int(t)} needs {b} bytes > budget "
+                f"task {int(t)} needs {b} bytes > per-device budget "
                 f"{budget.total_bytes}; raise memory_budget or shrink "
                 f"tile_dim/blocks (p)"
             )
-        if cur and cur_bytes + b > budget.total_bytes:
+        if cur and cur_bytes + b > capacity:
             waves.append(_close_wave(cur, cur_bytes, schedule))
             cur, cur_bytes = [], 0
         cur.append(int(t))
@@ -314,7 +330,7 @@ def _close_wave(task_ids: list[int], est_bytes: int,
 
 def repack_waves(schedule: Schedule, budget: MemoryBudget,
                  footprints: np.ndarray, task_times: np.ndarray, *,
-                 slack: float = 0.2) -> list[Wave]:
+                 slack: float = 0.2, devices: int = 1) -> list[Wave]:
     """Re-pack every task into waves against *observed* per-task times.
 
     The paper's dynamic work queue, adapted to wave granularity: once
@@ -325,7 +341,11 @@ def repack_waves(schedule: Schedule, budget: MemoryBudget,
     time load past the balanced target (total time over the bytes-only
     wave-count floor, stretched by ``slack``) — so one dominated tail
     wave gets its heavy tasks spread instead of serialized.
+
+    As in :func:`build_waves`, ``budget`` is per device and the wave
+    byte capacity is ``devices × budget``.
     """
+    capacity = budget.total_bytes * max(int(devices), 1)
     t = np.asarray(task_times, dtype=np.float64)
     order = np.argsort(-t, kind="stable")
     # bytes-only greedy pass fixes the wave-count floor the time target
@@ -333,7 +353,7 @@ def repack_waves(schedule: Schedule, budget: MemoryBudget,
     floor_waves, acc = 1, 0
     for i in order:
         b = int(footprints[i])
-        if acc and acc + b > budget.total_bytes:
+        if acc and acc + b > capacity:
             floor_waves += 1
             acc = 0
         acc += b
@@ -346,7 +366,7 @@ def repack_waves(schedule: Schedule, budget: MemoryBudget,
     cur_bytes, cur_t = 0, 0.0
     for i in order:
         b = int(footprints[i])
-        if cur and (cur_bytes + b > budget.total_bytes
+        if cur and (cur_bytes + b > capacity
                     or cur_t + float(t[i]) > target):
             waves.append(_close_wave(cur, cur_bytes, schedule))
             cur, cur_bytes, cur_t = [], 0, 0.0

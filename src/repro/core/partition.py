@@ -165,7 +165,7 @@ def partition_symmetric_2d(g: Graph, p: int, *, refine_iters: int = 8) -> np.nda
 
 
 def choose_p(g: Graph, memory_budget, *, safety: int = 2,
-             p_max: int = 256) -> int:
+             p_max: int = 256, devices: int = 1) -> int:
     """Budget-aware partitioner grain: the smallest power-of-two ``p``
     whose heaviest row stripe fits ``1/safety`` of the memory budget.
 
@@ -175,6 +175,13 @@ def choose_p(g: Graph, memory_budget, *, safety: int = 2,
     instead of relying on ``build_waves`` to reject oversized tasks
     after the fact.  ``safety`` leaves headroom for bucket padding,
     per-edge routing masks, CSR slices and kernel workspace.
+
+    ``memory_budget`` is the *per-device* budget; ``devices`` > 1
+    (mesh-cooperative streaming) additionally requires ``p² ≥ devices``
+    so one wave can carry at least one single-block task per mesh
+    device — a coarser grain would leave devices idle even though the
+    byte bound alone is satisfied.  Tasks stay atomic per device, so
+    the stripe cap itself does not relax with mesh size.
     """
     from .membudget import COO_EDGE_BYTES, CSR_INDEX_BYTES, MemoryBudget
 
@@ -186,7 +193,8 @@ def choose_p(g: Graph, memory_budget, *, safety: int = 2,
         # probe with the cuts the layout will actually use
         cuts = partition_symmetric_2d(g, p) if p > 1 else np.array([0, g.n])
         heaviest = _heaviest_stripe(pre, cuts)
-        if heaviest <= cap or p >= p_max:
+        fits = heaviest <= cap and p * p >= max(int(devices), 1)
+        if fits or p >= p_max:
             # p_max is returned even unverified — a hub row can make the
             # cap unreachable by any contiguous partition; build_waves
             # still rejects genuinely oversized tasks downstream

@@ -90,6 +90,18 @@ class Schedule:
         ideal = self.weights.sum() / max(self.num_devices, 1)
         return float(loads.max() / max(ideal, 1e-12))
 
+    def partition_tasks(self, num_devices: int) -> np.ndarray:
+        """Fresh LPT device assignment over *this* schedule's tasks.
+
+        The mesh-cooperative streaming executor calls this on each
+        wave's restricted sub-schedule: the global ``device_assignment``
+        balances the whole task list, but one wave holds an arbitrary
+        subset of it, so re-packing wave-locally is what keeps every
+        device of the mesh busy within the wave.  Returns a ``(t,)``
+        device id per task of this schedule.
+        """
+        return lpt_assign(self.weights, max(int(num_devices), 1))
+
 
 def _demote_over_budget(alg: BlockAlgorithm, store: BlockStore,
                         bls: np.ndarray, fits: np.ndarray,

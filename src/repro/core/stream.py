@@ -82,6 +82,36 @@ staged wave slabs (current + prefetch), each ≤ the budget — with
 ``"slice"``/``"none"`` algorithms, *every* edge-proportional device
 allocation is bounded by ``memory_budget``.
 
+Mesh-cooperative streaming — ``mesh=``
+--------------------------------------
+``compile_plan(alg, store, memory_budget=..., mesh=mesh)`` composes the
+waves with :mod:`repro.core.distributed`'s execution model: the budget
+becomes *per device*, waves are packed to the mesh capacity
+``D × budget`` (:func:`repro.core.membudget.build_waves`), and each
+wave's tasks are LPT-split over the mesh so every device stages only
+its own padded COO/CSR/tile slab
+(:func:`repro.core.distributed.make_device_edge_partition`, bucket
+ladder shared with the single-device path).  The double-buffered stager
+``device_put``\\ s wave ``k+1``'s *sharded* slabs while the mesh computes
+wave ``k`` under ``shard_map``; inside the shard each device runs the
+kernels on its slice from iteration-start state, per-leaf updates are
+combined across the mesh with the algorithm's declared
+``metadata["combine"]`` collective (``psum``/``pmin``/``pmax`` —
+:func:`repro.core.distributed.combine_fn`) and folded into the running
+accumulator, so results stay bit-identical to in-core for integer/bool
+attributes and equal up to float summation order otherwise.  Vertex
+attributes, the resident context, and the state are replicated; only
+edge work is sharded — the paper's "reads are free, writes are
+reduced" model at wave granularity.  Algorithms opt in with
+``metadata["mesh"] == "shard"``; ``prepare`` runs per device against a
+device-local store view (device-rebased CSR, device tile subset), and
+structurally device-varying outputs are unified by the algorithm's
+``mesh_pack`` hook (see :class:`~repro.core.functors.BlockAlgorithm`).
+``schedule_stats["streaming"]`` grows ``mesh_devices``,
+``per_device_bytes`` (each entry ≤ the per-device budget),
+``collective_bytes``, and the mesh-wide ``overlap_efficiency``.  The
+full model is documented in ``docs/distributed.md``.
+
 Entry point: ``compile_plan(alg, store, memory_budget=...)`` returns a
 :class:`StreamingPlan` instead of a :class:`~repro.core.engine.Plan`.
 """
@@ -94,9 +124,12 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from .blocks import BlockStore
-from .context import Context, build_host_ctx, with_arrays
+from .context import _TRACED, Context, build_host_ctx, with_arrays
+from .distributed import combine_fn, make_device_edge_partition
 from .functors import BlockAlgorithm
 from .graph import csr_prefix
 from .membudget import (
@@ -200,6 +233,127 @@ class _PostStep:
         return self._jit(ctx, state, it)
 
 
+def _split_static(tree):
+    """Flatten ``tree`` into (array leaves, hashable aux): the same
+    traced/static split :class:`~repro.core.context.Context` applies to
+    ``extras``, reused here so a wave's stacked extras can cross the
+    jitted mesh step as a plain tuple of sharded arrays while ints such
+    as TC's ``dp``/``steps`` stay static (they drive shapes)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    arrays = tuple(leaf for leaf in leaves if _is_array_leaf(leaf))
+    markers = tuple(
+        _TRACED if _is_array_leaf(leaf) else leaf for leaf in leaves
+    )
+    return arrays, (treedef, markers)
+
+
+def _rejoin_static(aux, arrays):
+    treedef, markers = aux
+    arr = iter(arrays)
+    leaves = [next(arr) if m is _TRACED else m for m in markers]
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class _MeshStreamStep:
+    """The jitted mesh per-wave step: ``shard_map`` over the wave.
+
+    Each device of the 1-D mesh receives its own shard of the wave's
+    padded slab (COO, routing masks, CSR slice, tiles) plus its slice of
+    the device-stacked extras, runs the kernels from the *replicated*
+    iteration-start state, and the per-leaf updates are combined across
+    the mesh with the algorithm's declared collective — ``psum`` for
+    additive leaves (on the delta from iteration start, so replicated
+    baselines are not multiplied by D), ``pmin``/``pmax`` elementwise —
+    then folded into the running accumulator exactly like
+    :class:`_StreamStep` does per wave.  Pass-through detection is the
+    same trace-time identity test; the mesh program is SPMD, so a leaf
+    is uniformly touched or untouched on every device.
+
+    ``combined_keys`` records (at trace time) which state leaves
+    actually crossed a collective — the honest basis for the
+    ``collective_bytes`` accounting in ``schedule_stats``.
+    """
+
+    def __init__(self, alg: BlockAlgorithm, mesh: Mesh) -> None:
+        self.traces = 0
+        self.combined_keys: tuple[str, ...] = ()
+        spec = _combine_spec(alg)
+        axis = mesh.axis_names[0]
+
+        def step(res_ctx, slab, ex_leaves, state0, acc, it,
+                 run_dense: bool, ex_aux):
+            self.traces += 1
+            if not isinstance(state0, dict):
+                raise TypeError(
+                    f"{alg.name}: streaming requires a dict state pytree"
+                )
+
+            def body(res_ctx, slab, ex_leaves, state0, acc, it):
+                # each shard sees [1, ...] slices — drop the device axis
+                arrays = {k: v[0] for k, v in slab.items()}
+                extras = dict(res_ctx.extras)
+                if ex_aux is not None:
+                    extras.update(_rejoin_static(
+                        ex_aux, tuple(leaf[0] for leaf in ex_leaves)
+                    ))
+                ctx = with_arrays(res_ctx, extras=extras, **arrays)
+                new = state0
+                if alg.kernel_sparse is not None:
+                    new = alg.kernel_sparse(ctx, new, it)
+                if alg.kernel_dense is not None and run_dense:
+                    new = alg.kernel_dense(ctx, new, it)
+                added = set(new) - set(state0)
+                if added:
+                    raise ValueError(
+                        f"{alg.name}: kernels added state leaves "
+                        f"{sorted(added)}; streaming requires kernels to "
+                        f"write only leaves present in init_state (declare "
+                        f"scratch attributes there)"
+                    )
+                out = {}
+                combined = []
+                for key in state0:
+                    s0, nw = state0[key], new[key]
+                    if nw is s0:
+                        out[key] = acc[key]
+                        continue
+                    kind = spec(key)
+                    if kind not in _COMBINE_KINDS:
+                        raise ValueError(
+                            f"state leaf {key!r} is modified by the kernels "
+                            f"but declares no combine kind in "
+                            f"metadata['combine'] (one of {_COMBINE_KINDS}); "
+                            f"the mesh cannot fold its per-device partials"
+                        )
+                    red = combine_fn(kind, axis)(
+                        nw - s0 if kind == "add" else nw
+                    )
+                    if kind == "add":
+                        out[key] = acc[key] + red
+                    elif kind == "min":
+                        out[key] = jnp.minimum(acc[key], red)
+                    else:
+                        out[key] = jnp.maximum(acc[key], red)
+                    combined.append(key)
+                self.combined_keys = tuple(combined)
+                return out
+
+            P = PartitionSpec
+            return shard_map(
+                body, mesh=mesh,
+                in_specs=(P(), P(axis), P(axis), P(), P(), P()),
+                out_specs=P(),
+                check_rep=False,
+            )(res_ctx, slab, ex_leaves, state0, acc, it)
+
+        self._jit = jax.jit(step, static_argnums=(6, 7))
+
+    def __call__(self, res_ctx, slab, ex_leaves, state0, acc, it,
+                 run_dense: bool, ex_aux):
+        return self._jit(res_ctx, slab, ex_leaves, state0, acc, it,
+                         run_dense, ex_aux)
+
+
 _STREAM_STEP_CACHE: dict[tuple, _StreamStep] = {}
 _POST_STEP_CACHE: dict[tuple, _PostStep] = {}
 
@@ -222,7 +376,12 @@ def _post_step_for(alg: BlockAlgorithm, backend: str, *,
 @dataclass
 class _WaveSlab:
     """Host-side staged form of one wave: padded numpy arrays ready for
-    a single ``jax.device_put`` per iteration."""
+    a single ``jax.device_put`` per iteration.
+
+    Under a mesh the same fields carry a leading device axis (``[D, …]``
+    per-device slabs, uniformly padded), ``staged_bytes`` totals the
+    whole wave's H2D traffic, and ``per_device_bytes`` is the share one
+    mesh device holds — the quantity the per-device budget bounds."""
 
     wave: Wave
     src: np.ndarray
@@ -242,6 +401,7 @@ class _WaveSlab:
     segments: int                  # coalesced COO slices gathered
     csr_entries: int               # unpadded CSR slice length
     csr_segments: int              # coalesced CSR row-range gathers
+    per_device_bytes: int = 0      # one device's staged share (mesh)
 
 
 def _is_array_leaf(leaf: Any) -> bool:
@@ -303,7 +463,7 @@ class StreamingPlan:
                  mode: str = "hybrid", tile_dim: int = 512,
                  dense_frac: float = 0.5, dense_density: float = 0.005,
                  rebalance_threshold: float | None = None,
-                 share: bool = True) -> None:
+                 share: bool = True, mesh: Mesh | None = None) -> None:
         from ..kernels.registry import resolve_backend
 
         self.alg = alg
@@ -316,10 +476,30 @@ class StreamingPlan:
                 f"{alg.name}: metadata['csr'] must be one of {_CSR_MODES}, "
                 f"got {self._csr_mode!r}"
             )
+        self.mesh = mesh
+        if mesh is not None:
+            if len(mesh.axis_names) != 1:
+                raise ValueError(
+                    "mesh-cooperative streaming requires a 1-D mesh (one "
+                    f"block-parallel axis); got axes {mesh.axis_names}"
+                )
+            if alg.metadata.get("mesh") != "shard":
+                raise ValueError(
+                    f"{alg.name}: metadata['mesh'] must declare 'shard' to "
+                    "run under a mesh — the kernels must decompose over any "
+                    "partition of a wave's tasks judged from iteration-start "
+                    "state, and prepare must restrict to a device-local view "
+                    "(see docs/distributed.md)"
+                )
+            self.mesh_axis = mesh.axis_names[0]
+            self._mesh_devices = int(mesh.size)
+        else:
+            self.mesh_axis = None
+            self._mesh_devices = 1
         self.rebalance_threshold = rebalance_threshold
         self.schedule = schedule or build_schedule(
-            alg, store, num_devices=num_devices, mode=mode,
-            tile_dim=tile_dim, dense_frac=dense_frac,
+            alg, store, num_devices=max(num_devices, self._mesh_devices),
+            mode=mode, tile_dim=tile_dim, dense_frac=dense_frac,
             dense_density=dense_density, memory_budget=self.budget,
         )
         self.host = build_host_ctx(store, self.schedule, backend=self.backend)
@@ -329,13 +509,20 @@ class StreamingPlan:
             workspace_kernel=alg.metadata.get("workspace_kernel"),
             stage_csr=self._csr_mode == "slice",
         )
-        self._slabs = self._build_slabs(
-            build_waves(store, self.schedule, self.budget, self._footprints)
+        waves = build_waves(store, self.schedule, self.budget,
+                            self._footprints, devices=self._mesh_devices)
+        self._slabs = (
+            self._build_slabs_mesh(waves) if mesh is not None
+            else self._build_slabs(waves)
         )
         self._resident = self._build_resident_context()
         self._step = _stream_step_for(alg, self.backend, share=share)
+        self._mesh_step = (
+            _MeshStreamStep(alg, mesh) if mesh is not None else None
+        )
         self._post = _post_step_for(alg, self.backend, share=share)
         self._calibration: dict | None = None
+        self._collective_bytes = 0      # payload across mesh combines
         self._bytes_staged = 0          # actual H2D traffic, all passes
         self._edge_free = int(alg.metadata.get("edge_free_iterations", 0))
         self._edge_free_bufs: dict | None = None
@@ -363,30 +550,58 @@ class StreamingPlan:
         self._decide_hoist(slabs)
         return self._fit_slabs(slabs)
 
+    def _build_slabs_mesh(self, waves: list[Wave]) -> list[_WaveSlab]:
+        """Mesh counterpart of :meth:`_build_slabs`: assemble per-device
+        slabs for every wave, decide extras hoisting across devices AND
+        waves, then verify each wave's *per-device* bytes against the
+        per-device budget."""
+        pairs = [self._assemble_mesh(w) for w in waves]
+        self._resident_extras = {}
+        self._hoisted = False
+        trees = [e for _, lst in pairs for e in lst]
+        if trees and all(_trees_equal(e, trees[0]) for e in trees[1:]):
+            # device- and wave-invariant prepare outputs (PageRank's
+            # inv_deg, ...) are staged once, replicated over the mesh
+            self._resident_extras = trees[0]
+            self._hoisted = True
+        slabs = [self._finalize_mesh_extras(s, lst) for s, lst in pairs]
+        return self._fit_slabs(slabs)
+
     def _rebuild_slabs(self, waves: list[Wave]) -> list[_WaveSlab]:
         """Re-assemble after a re-pack, keeping the original hoist
         decision (the resident context already carries the hoisted
         extras)."""
-        slabs = [self._assemble(w) for w in waves]
-        for s in slabs:
-            self._strip_hoisted(s)
-        return self._fit_slabs(slabs)
+        return self._fit_slabs([self._reassemble(w) for w in waves])
+
+    def _reassemble(self, wave: Wave) -> _WaveSlab:
+        """One wave → finished slab, honoring the standing hoist
+        decision — shared by budget splits and rebalance rebuilds."""
+        if self.mesh is not None:
+            slab, extras_list = self._assemble_mesh(wave)
+            return self._finalize_mesh_extras(slab, extras_list)
+        slab = self._assemble(wave)
+        self._strip_hoisted(slab)
+        return slab
+
+    def _budget_load(self, slab: _WaveSlab) -> int:
+        """The bytes the budget must bound: one device's staged share
+        plus its kernel scratch (per-device under a mesh; the whole
+        slab on a single device)."""
+        staged = (slab.per_device_bytes if self.mesh is not None
+                  else slab.staged_bytes)
+        return staged + slab.workspace_bytes
 
     def _fit_slabs(self, slabs: list[_WaveSlab]) -> list[_WaveSlab]:
         out: list[_WaveSlab] = []
         pending = list(slabs)
         while pending:
             slab = pending.pop(0)
-            if (slab.staged_bytes + slab.workspace_bytes
-                    > self.budget.total_bytes):
+            if self._budget_load(slab) > self.budget.total_bytes:
                 # staged arrays + kernel scratch are the wave's real
                 # device footprint; split_wave raises for size-1 waves —
                 # the ≤ budget invariant is never silently violated
                 a, b = split_wave(slab.wave, self.schedule, self._footprints)
-                halves = [self._assemble(a), self._assemble(b)]
-                for h in halves:
-                    self._strip_hoisted(h)
-                pending[:0] = halves
+                pending[:0] = [self._reassemble(a), self._reassemble(b)]
                 continue
             out.append(slab)
         return out
@@ -504,6 +719,181 @@ class StreamingPlan:
             csr_entries=csr_entries, csr_segments=csr_segments,
         )
 
+    def _assemble_mesh(self, wave: Wave) -> tuple[_WaveSlab, list]:
+        """Assemble one wave as padded per-device slabs ``[D, …]``.
+
+        The wave's tasks are LPT-split over the mesh
+        (:meth:`~repro.core.scheduler.Schedule.partition_tasks` on the
+        wave's restricted sub-schedule), each device's COO/CSR slices
+        come from :func:`~repro.core.distributed.make_device_edge_partition`
+        (every block of every assigned task, bucket-ladder padded so all
+        waves share a few slab shapes), dense tiles are per-device
+        subsets zero-padded to the wave's tile bucket (zero tiles are
+        neutral for every shipped kernel: no set bits → no contribution),
+        and ``prepare`` runs once per device against a device-local
+        store view — device-rebased CSR maps, device tile subset — so
+        host-computed positions index that device's staged slice.
+
+        Returns the slab (extras unset) plus the per-device prepare
+        outputs; :meth:`_finalize_mesh_extras` hoists or stacks them.
+        """
+        store, sched = self.store, self.schedule
+        d = self._mesh_devices
+        t = sched.tile_dim
+        wsched = sched.restrict(wave.task_ids)
+        assign = wsched.partition_tasks(d)
+        part = make_device_edge_partition(
+            store, wsched, assignment=assign, num_devices=d, bucket=True,
+            stage_csr=self._csr_mode == "slice",
+        )
+        src, dst = part["src"], part["dst"]
+        edge_block, valid = part["edge_block"], part["valid"]
+        dense_blocks = np.zeros(store.layout.num_blocks, bool)
+        if wsched.dense_block_ids.size:
+            dense_blocks[wsched.dense_block_ids] = True
+        edense = dense_blocks[edge_block] & valid
+        sparse_mask = valid & ~edense
+        dense_mask = edense
+        run_dense = (
+            self.alg.kernel_dense is not None
+            and bool(wsched.dense_task_mask.any())
+        )
+        dev_scheds = [
+            wsched.restrict(np.nonzero(assign == i)[0]) for i in range(d)
+        ]
+
+        # -- per-device dense tiles, padded to the wave tile bucket ----
+        tiles = trs = tcs = None
+        tb = 0
+        empty_sub = (np.zeros((0, t, t), np.float32),
+                     np.zeros(0, np.int64), np.zeros(0, np.int64))
+        dev_subs = [empty_sub] * d      # reused below for prepare views
+        if run_dense:
+            nds = [int(ds.dense_block_ids.size) for ds in dev_scheds]
+            tb = bucket_size(max(nds), minimum=1)
+            tiles = np.zeros((d, tb, t, t), np.float32)
+            trs = np.zeros((d, tb), np.int64)
+            tcs = np.zeros((d, tb), np.int64)
+            for i, ds in enumerate(dev_scheds):
+                if ds.dense_block_ids.size:
+                    dev_subs[i] = store.tile_subset(ds.dense_block_ids)
+                    sub, sub_rs, sub_cs = dev_subs[i]
+                    tiles[i, : sub.shape[0]] = sub
+                    trs[i, : sub.shape[0]] = sub_rs
+                    tcs[i, : sub.shape[0]] = sub_cs
+
+        # -- per-device prepare against device-local store views -------
+        ws = 0
+        extras_list: list = []
+        if self.alg.prepare is not None:
+            for i, ds in enumerate(dev_scheds):
+                if run_dense:
+                    sub, sub_rs, sub_cs = dev_subs[i]
+                    wstore = dc_replace(
+                        store, tile_dim=t,
+                        tile_block_ids=ds.dense_block_ids.astype(np.int32),
+                        tiles=sub, tile_row_start=sub_rs,
+                        tile_col_start=sub_cs,
+                    )
+                else:
+                    wstore = dc_replace(
+                        store, tile_dim=0,
+                        tile_block_ids=np.zeros(0, np.int32),
+                        tiles=np.zeros((0, 0, 0), np.float32),
+                        tile_row_start=np.zeros(0, np.int64),
+                        tile_col_start=np.zeros(0, np.int64),
+                    )
+                if self._csr_mode == "slice":
+                    rbp_i, indptr_i = part["csr_maps"][i]
+                    sl = part["indices"][i, : part["csr_entries"][i]]
+                    wstore = dc_replace(
+                        wstore, indices=sl, row_block_ptr=rbp_i,
+                        indptr=indptr_i,
+                    )
+                extras = _to_host(self.alg.prepare(wstore, ds))
+                ws = max(ws, int(extras.pop("__workspace_bytes__", 0)))
+                extras_list.append(extras)
+        else:
+            extras_list = [{} for _ in range(d)]
+
+        if run_dense:
+            from ..kernels.registry import max_workspace_bytes, workspace_bytes
+
+            wk = self.alg.metadata.get("workspace_kernel")
+            hints = dict(nd=tb, tile_dim=t)   # per-device padded count
+            ws += (workspace_bytes(wk, **hints) if wk is not None
+                   else max_workspace_bytes(**hints))
+
+        csr = part.get("indices")
+        staged = (
+            src.nbytes + dst.nbytes + edge_block.nbytes
+            + sparse_mask.nbytes + dense_mask.nbytes
+        )
+        if csr is not None:
+            staged += csr.nbytes
+        if tiles is not None:
+            staged += tiles.nbytes + trs.nbytes + tcs.nbytes
+        slab = _WaveSlab(
+            wave=wave, src=src, dst=dst, edge_block=edge_block,
+            sparse_mask=sparse_mask, dense_mask=dense_mask,
+            tiles=tiles, tile_row_start=trs, tile_col_start=tcs,
+            csr=csr, extras=None, run_dense=run_dense,
+            staged_bytes=int(staged), workspace_bytes=int(ws),
+            edges=int(sum(part["edges"])),
+            segments=int(sum(part["segments"])),
+            csr_entries=int(sum(part.get("csr_entries", []))),
+            csr_segments=int(sum(part.get("csr_segments", []))),
+        )
+        return slab, extras_list
+
+    def _finalize_mesh_extras(self, slab: _WaveSlab,
+                              extras_list: list) -> _WaveSlab:
+        """Attach a mesh slab's extras (hoisted → none; else stacked
+        with a leading device axis) and fix the byte accounting."""
+        if (self._hoisted
+                and all(_trees_equal(e, self._resident_extras)
+                        for e in extras_list)):
+            slab.extras = None
+        else:
+            slab.extras = self._stack_extras(extras_list)
+            slab.staged_bytes += tree_array_bytes(slab.extras)
+        slab.per_device_bytes = -(-slab.staged_bytes // self._mesh_devices)
+        return slab
+
+    def _stack_extras(self, extras_list: list):
+        """Per-device prepare outputs → one tree with a leading device
+        axis: the algorithm's ``mesh_pack`` when provided (required for
+        structurally device-varying outputs like TC's bucket ladder),
+        else a plain stack of structurally identical trees.  Padding is
+        never invented here — a neutral pad value is algorithm
+        knowledge, so shape mismatches without ``mesh_pack`` raise."""
+        alg = self.alg
+        if alg.mesh_pack is not None:
+            return _to_host(alg.mesh_pack(extras_list))
+        flat = [jax.tree_util.tree_flatten(e) for e in extras_list]
+        leaves0, treedef0 = flat[0]
+        err = (
+            f"{alg.name}: per-device prepare outputs differ in "
+            f"structure or shape across mesh devices; provide "
+            f"BlockAlgorithm.mesh_pack to unify them (padding must be "
+            f"neutral for the kernels)"
+        )
+        if any(td != treedef0 for _, td in flat[1:]):
+            raise ValueError(err)
+        stacked = []
+        for i, leaf0 in enumerate(leaves0):
+            col = [leaves for leaves, _ in flat]
+            vals = [c[i] for c in col]
+            if _is_array_leaf(leaf0):
+                if len({np.asarray(v).shape for v in vals}) != 1:
+                    raise ValueError(err)
+                stacked.append(np.stack([np.asarray(v) for v in vals]))
+            else:
+                if any(v != leaf0 for v in vals[1:]):
+                    raise ValueError(err)
+                stacked.append(leaf0)
+        return jax.tree_util.tree_unflatten(treedef0, stacked)
+
     def _decide_hoist(self, slabs: list[_WaveSlab]) -> None:
         """Wave-invariant ``prepare`` outputs (vertex-level attribute
         arrays like PageRank's ``inv_deg``) are staged once as resident
@@ -528,6 +918,22 @@ class StreamingPlan:
             slab.staged_bytes -= tree_array_bytes(slab.extras)
             slab.extras = None
 
+    def _replicated_sharding(self) -> NamedSharding:
+        return NamedSharding(self.mesh, PartitionSpec())
+
+    def _put_replicated(self, tree: Any) -> Any:
+        """device_put array leaves — replicated over the mesh when one
+        is set (reads are free: every device holds the vertex-level
+        arrays and the state), plain single-device placement otherwise."""
+        if self.mesh is None:
+            return _put_arrays(tree)
+        sh = self._replicated_sharding()
+        return jax.tree_util.tree_map(
+            lambda leaf: jax.device_put(leaf, sh)
+            if _is_array_leaf(leaf) else leaf,
+            tree,
+        )
+
     def _build_resident_context(self) -> Context:
         """Vertex-level arrays only — the per-wave slab fields start
         empty and are swapped in by :func:`with_arrays` each wave.
@@ -536,29 +942,34 @@ class StreamingPlan:
         ``"slice"`` mode each wave swaps in its staged slice, and in
         ``"none"`` mode kernels never read it, so a minimal placeholder
         keeps both traced branches of conditional kernels indexable
-        without holding ``m``-proportional memory."""
+        without holding ``m``-proportional memory.  Under a mesh every
+        resident array is replicated on all devices (the model's
+        "reads are free" half — writes are reduced by the collectives)."""
         store = self.store
         indices = (
-            jnp.asarray(store.indices) if self._csr_mode == "resident"
-            else jnp.zeros(bucket_size(0), jnp.int32)
+            np.asarray(store.indices) if self._csr_mode == "resident"
+            else np.zeros(bucket_size(0), np.int32)
         )
-        return Context(
-            src=jnp.zeros(0, jnp.int32),
-            dst=jnp.zeros(0, jnp.int32),
-            edge_block=jnp.zeros(0, jnp.int32),
-            indptr=jnp.asarray(store.indptr),
+        arrays = self._put_replicated(dict(
+            src=np.zeros(0, np.int32),
+            dst=np.zeros(0, np.int32),
+            edge_block=np.zeros(0, np.int32),
+            indptr=np.asarray(store.indptr),
             indices=indices,
-            degrees=jnp.asarray(store.degrees),
-            row_block_ptr=jnp.asarray(store.row_block_ptr),
-            cuts=jnp.asarray(store.layout.cuts),
-            sparse_edge_mask=jnp.zeros(0, bool),
-            dense_edge_mask=jnp.zeros(0, bool),
-            extras=_put_arrays(dict(self._resident_extras)),
+            degrees=np.asarray(store.degrees),
+            row_block_ptr=np.asarray(store.row_block_ptr),
+            cuts=np.asarray(store.layout.cuts),
+            sparse_edge_mask=np.zeros(0, bool),
+            dense_edge_mask=np.zeros(0, bool),
+        ))
+        return Context(
+            extras=self._put_replicated(dict(self._resident_extras)),
             n=store.n,
             m=store.m,
             p=store.p,
             tile_dim=self.schedule.tile_dim,
             backend=self.backend,
+            **arrays,
         )
 
     # -- execute side --------------------------------------------------
@@ -600,7 +1011,8 @@ class StreamingPlan:
             tot = float(wts.sum())
             task_t[ids] = (t_w * wts / tot) if tot > 0 else t_w / ids.size
         new_waves = repack_waves(self.schedule, self.budget,
-                                 self._footprints, task_t)
+                                 self._footprints, task_t,
+                                 devices=self._mesh_devices)
         self._slabs = self._rebuild_slabs(new_waves)
         self._edge_free_bufs = None     # stale slab-0 reference
         self._rebalanced = True
@@ -609,10 +1021,18 @@ class StreamingPlan:
 
     @property
     def compile_count(self) -> int:
-        return self._step.traces
+        return (self._mesh_step.traces if self._mesh_step is not None
+                else self._step.traces)
 
-    def _stage(self, w: int) -> dict:
-        """One host→device copy of wave ``w``'s preassembled slab."""
+    def _stage(self, w: int):
+        """One host→device copy of wave ``w``'s preassembled slab.
+
+        Single device: a dict of device buffers.  Mesh: the ``[D, …]``
+        slabs are ``device_put`` with the block-axis sharding (one row
+        per device) and the stacked extras travel as a tuple of sharded
+        leaves plus their hashable static aux — the double-buffered
+        loop overlaps exactly this transfer with the previous wave's
+        ``shard_map`` compute."""
         slab = self._slabs[w]
         self._bytes_staged += slab.staged_bytes
         arrays = dict(
@@ -624,10 +1044,21 @@ class StreamingPlan:
                           tile_col_start=slab.tile_col_start)
         if slab.csr is not None:
             arrays["indices"] = slab.csr
-        bufs = jax.device_put(arrays)
+        if self.mesh is None:
+            bufs = jax.device_put(arrays)
+            if slab.extras is not None:
+                bufs["extras"] = _put_arrays(slab.extras)
+            return bufs
+        shard = NamedSharding(self.mesh, PartitionSpec(self.mesh_axis))
+        bufs = jax.device_put(arrays, {k: shard for k in arrays})
         if slab.extras is not None:
-            bufs["extras"] = _put_arrays(slab.extras)
-        return bufs
+            ex_leaves, ex_aux = _split_static(slab.extras)
+            ex_leaves = tuple(
+                jax.device_put(leaf, shard) for leaf in ex_leaves
+            )
+        else:
+            ex_leaves, ex_aux = (), None
+        return (bufs, ex_leaves, ex_aux)
 
     def _wave_context(self, bufs: dict) -> Context:
         arrays = {k: v for k, v in bufs.items() if k != "extras"}
@@ -635,6 +1066,23 @@ class StreamingPlan:
         if extras is not None:
             return with_arrays(self._resident, extras=extras, **arrays)
         return with_arrays(self._resident, **arrays)
+
+    def _step_wave(self, w: int, bufs, state0, acc, iarr):
+        """Dispatch one staged wave into the right jitted step."""
+        slab = self._slabs[w]
+        if self.mesh is None:
+            return self._step(self._wave_context(bufs), state0, acc, iarr,
+                              slab.run_dense)
+        slab_bufs, ex_leaves, ex_aux = bufs
+        out = self._mesh_step(self._resident, slab_bufs, ex_leaves, state0,
+                              acc, iarr, slab.run_dense, ex_aux)
+        # per-device collective payload: each combined leaf crosses one
+        # all-reduce per wave step (trace-time combined_keys is exact)
+        self._collective_bytes += sum(
+            int(state0[k].nbytes) for k in self._mesh_step.combined_keys
+            if hasattr(state0[k], "nbytes")
+        )
+        return out
 
     def _run_waves(self, state0, it: int):
         """One iteration's kernel work: stage + step every wave, folding
@@ -653,14 +1101,28 @@ class StreamingPlan:
             # edge-free phase, gives the identical combined result —
             # W-1 redundant full-vertex passes and all repeat stagings
             # saved
-            if self._edge_free_bufs is None:
-                self._edge_free_bufs = self._stage(0)
             if self._prefix_dev is None and self._prefix_host is not None:
                 pptr, pidx = self._prefix_host
-                self._prefix_dev = jax.device_put(
+                self._prefix_dev = self._put_replicated(
                     dict(indptr=pptr, indices=pidx)
                 )
-                self._bytes_staged += pptr.nbytes + pidx.nbytes
+                # replicated puts copy to every mesh device
+                self._bytes_staged += (
+                    (pptr.nbytes + pidx.nbytes) * self._mesh_devices
+                )
+            if self.mesh is not None:
+                # edge-free kernels consume no per-device data, so the
+                # mesh runs them replicated — every device computes the
+                # identical full-vertex update from replicated inputs,
+                # no collectives needed (a psum here would D-multiply
+                # additive leaves); the plain per-wave fold applies
+                ctx = self._resident
+                if self._prefix_dev is not None:
+                    ctx = with_arrays(ctx, **self._prefix_dev)
+                acc = self._step(ctx, state0, acc, iarr, False)
+                return acc, 0.0
+            if self._edge_free_bufs is None:
+                self._edge_free_bufs = self._stage(0)
             ctx = self._wave_context(self._edge_free_bufs)
             if self._prefix_dev is not None:
                 # adjacency sampling reads the first-k-neighbors CSR,
@@ -678,8 +1140,7 @@ class StreamingPlan:
             # otherwise saturate overlap_efficiency at 1.0)
             warm = state0
             for w in range(nw):
-                warm = self._step(self._wave_context(self._stage(w)),
-                                  state0, warm, iarr, self._slabs[w].run_dense)
+                warm = self._step_wave(w, self._stage(w), state0, warm, iarr)
             _block_tree(warm)
             stage_s = compute_s = 0.0
             wave_s: list[float] = []
@@ -689,8 +1150,7 @@ class StreamingPlan:
                 _block_tree(bufs)
                 stage_s += time.perf_counter() - t0
                 t0 = time.perf_counter()
-                acc = self._step(self._wave_context(bufs), state0, acc, iarr,
-                                 self._slabs[w].run_dense)
+                acc = self._step_wave(w, bufs, state0, acc, iarr)
                 _block_tree(acc)
                 dt = time.perf_counter() - t0
                 compute_s += dt
@@ -712,12 +1172,13 @@ class StreamingPlan:
         t0 = time.perf_counter()
         bufs = self._stage(0)
         for w in range(nw):
-            ctx = self._wave_context(bufs)
-            # async dispatch: the step for wave w starts on device...
-            acc = self._step(ctx, state0, acc, iarr, self._slabs[w].run_dense)
-            # ...while wave w+1's slab crosses host→device.  Dropping
-            # `bufs` here releases the previous slab's buffers as soon
-            # as the step consumes them (two slabs max in flight).
+            # async dispatch: the step for wave w starts on the device
+            # (or the whole mesh, under shard_map)...
+            acc = self._step_wave(w, bufs, state0, acc, iarr)
+            # ...while wave w+1's (sharded) slab crosses host→device.
+            # Dropping `bufs` here releases the previous slab's buffers
+            # as soon as the step consumes them (two slabs max in
+            # flight per device).
             bufs = self._stage(w + 1) if w + 1 < nw else None
         _block_tree(acc)
         return acc, time.perf_counter() - t0
@@ -744,6 +1205,12 @@ class StreamingPlan:
         while cont and it < alg.max_iterations:
             if alg.before is not None:
                 state = alg.before(self.host, state, it)
+            if self.mesh is not None:
+                # the state is replicated on every mesh device (writes
+                # are reduced by the step's collectives; host hooks may
+                # have injected fresh uncommitted leaves) — a no-op for
+                # leaves already placed
+                state = self._put_replicated(state)
             state, wall = self._run_waves(state, it)
             if wall > 0.0:
                 overlapped_wall += wall
@@ -792,6 +1259,18 @@ class StreamingPlan:
             num_waves=len(self._slabs),
             budget_bytes=self.budget.total_bytes,
             bytes_per_wave=bytes_per_wave,
+            # mesh composition: how many devices cooperate per wave, the
+            # worst single device's staged share (each ≤ budget_bytes —
+            # on one device this equals bytes_per_wave), and the
+            # per-device payload that crossed the combine collectives
+            # (psum/pmin/pmax) over the whole run
+            mesh_devices=self._mesh_devices,
+            per_device_bytes=[
+                s.per_device_bytes if self.mesh is not None
+                else s.staged_bytes
+                for s in self._slabs
+            ],
+            collective_bytes=int(self._collective_bytes),
             csr_mode=self._csr_mode,
             # per-wave staged CSR slice bytes (bucket-padded, already
             # included in bytes_per_wave) — all zeros unless "slice"

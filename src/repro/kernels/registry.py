@@ -108,7 +108,19 @@ def registered(name: str) -> dict[str, Callable]:
 # kernel needs on top of its staged inputs — e.g. spmv's gathered
 # xs/ys slices.  Estimators take keyword shape hints and return bytes;
 # unknown kernels price as 0 so the model degrades gracefully.
+#
+# Every estimator also understands a ``devices`` hint (default 1): the
+# mesh-cooperative streaming executor spreads one wave's work over a
+# device mesh, so scratch that scales with item/tile counts is priced
+# per device as ceil(count / devices) — the worst single device after
+# an LPT split, which is what a per-device memory budget must bound.
 _WORKSPACE: dict[str, Callable[..., int]] = {}
+
+
+def _per_device(count: int, devices: int) -> int:
+    """Worst-device share of ``count`` items split over ``devices``."""
+    d = max(int(devices), 1)
+    return -(-int(count) // d)
 
 
 def register_workspace(name: str) -> Callable[[Callable], Callable]:
@@ -142,9 +154,9 @@ def max_workspace_bytes(**shape_hints) -> int:
 
 # ``nd`` means "tiles staged in the batch" for every estimator below.
 @register_workspace("spmv_tiles")
-def _spmv_workspace(nd: int, tile_dim: int) -> int:
+def _spmv_workspace(nd: int, tile_dim: int, devices: int = 1) -> int:
     # gathered xs + produced ys, one (nd, T) float32 slab each
-    return 2 * nd * tile_dim * 4
+    return 2 * _per_device(nd, devices) * tile_dim * 4
 
 
 # CSR estimators: what the sparse/CSR path stages or scratches per wave.
@@ -152,31 +164,33 @@ def _spmv_workspace(nd: int, tile_dim: int) -> int:
 # swallow the dense hints so max_workspace_bytes stays callable with
 # (nd, tile_dim) alone.
 @register_workspace("csr_slice")
-def _csr_slice_workspace(csr_edges: int = 0, **_hints) -> int:
+def _csr_slice_workspace(csr_edges: int = 0, devices: int = 1,
+                         **_hints) -> int:
     # the conformal CSR row slices staged as the wave's ctx.indices
-    # (int32 per adjacency entry) — see BlockStore.csr_slices
-    return int(csr_edges) * 4
+    # (int32 per adjacency entry) — see BlockStore.csr_slices.  A mesh
+    # device stages only its own tasks' row slices, hence the split.
+    return _per_device(int(csr_edges) * 4, devices)
 
 
 @register_workspace("csr_bucket_search")
 def _csr_bucket_search_workspace(items: int = 0, depth: int = 0,
-                                 **_hints) -> int:
+                                 devices: int = 1, **_hints) -> int:
     # TC-style membership test over staged CSR slices: gathered values
     # plus lo/hi binary-search bounds, one (items, depth) int32 each
-    return 3 * int(items) * int(depth) * 4
+    return 3 * _per_device(items, devices) * int(depth) * 4
 
 
 @register_workspace("frontier_tiles")
-def _frontier_workspace(nd: int, tile_dim: int) -> int:
+def _frontier_workspace(nd: int, tile_dim: int, devices: int = 1) -> int:
     # gathered frontier columns (bool) + candidate mins (int32)
-    return nd * tile_dim * (1 + 4)
+    return _per_device(nd, devices) * tile_dim * (1 + 4)
 
 
 @register_workspace("tc_tiles")
-def _tc_workspace(nd: int, tile_dim: int) -> int:
+def _tc_workspace(nd: int, tile_dim: int, devices: int = 1) -> int:
     # the gathered tile operands of the masked matmul (one per staged
     # tile: each triple reads its 3 tiles, nd counts all of them)
-    return nd * tile_dim * tile_dim * 4
+    return _per_device(nd, devices) * tile_dim * tile_dim * 4
 
 
 # ----------------------------------------------------------------------
