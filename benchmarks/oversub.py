@@ -18,16 +18,38 @@ Three measurements on this container:
   why this module imports repro lazily) and runs the same budgeted
   waves through ``shard_map``, reporting per-device staged bytes,
   collective bytes, and overlap efficiency next to the single-device
-  streaming baseline at the same per-device budget.
+  streaming baseline at the same per-device budget;
+* the staging pipeline — ``--smoke`` (the CI perf-smoke gate) compares
+  the three-stage pipelined executor (``pipeline_depth=2``) against
+  the synchronous baseline (``pipeline_depth=0``) on a ≥4-wave R-MAT
+  run with a per-phase wall-clock breakdown (assemble / prepare /
+  device_put / compute / collective), checks TC's ``trace_count`` does
+  NOT grow with the wave count, gates ``overlap_efficiency`` against
+  :data:`SMOKE_OVERLAP_FLOOR`, and writes everything to
+  ``BENCH_stream.json`` (the build artifact).
 
 CLI: ``python -m benchmarks.oversub [--memory-budget 256KB]
-[--mesh-devices 8]``.
+[--mesh-devices 8] [--smoke]``.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import sys
 
 from .common import csv_row, time_median
+
+# Recorded floor for the CI perf-smoke gate on the *pipelined*
+# executor's best-of-repeats overlap_efficiency.  Best-of-repeats on
+# the 2-core CI container lands 0.65–1.0 (a background staging thread
+# contends with the XLA compute pool, so single runs swing); the floor
+# is set well below that band so only a structural regression — e.g.
+# the pipeline silently running synchronously so the serial baseline
+# equals the overlapped wall — can cross it, while still being a live
+# gate (overlap_efficiency is clamped to [0, 1], so a 0.0 floor could
+# never fail).  Raise it when benchmarking hardware with cores to
+# spare.
+SMOKE_OVERLAP_FLOOR = 0.10
 
 
 def run(scale: str = "small", repeats: int = 3, backend: str = "xla",
@@ -108,6 +130,9 @@ def run_streaming(g, *, repeats: int = 3, backend: str = "xla",
             t = time_median(timed, repeats=repeats)
             st = last["res"].schedule_stats["streaming"]
             skew = st["rebalance_skew"]
+            phases = ";".join(
+                f"{k}_s={v:.4f}" for k, v in st["phase_seconds"].items()
+            )
             rows.append(csv_row(
                 f"oversub/stream/{name}/{budget}", t,
                 f"waves={st['num_waves']};budget_bytes={st['budget_bytes']};"
@@ -117,11 +142,111 @@ def run_streaming(g, *, repeats: int = 3, backend: str = "xla",
                 f"csr_mode={st['csr_mode']};"
                 f"bytes_staged_total={st['bytes_staged_total']};"
                 f"resident_bytes={st['resident_bytes']};"
+                f"arena_bytes={st['arena_bytes']};"
+                f"trace_count={st['trace_count']};"
                 f"rebalanced={st['rebalanced']};"
                 f"rebalance_skew={skew if skew is None else round(skew, 2)};"
+                f"{phases};"
+                f"host_stage_overlap={st['host_stage_overlap']:.2f};"
                 f"overlap_efficiency={st['overlap_efficiency']:.2f}",
             ))
     return rows
+
+
+def _stream_once(alg, store, *, budget, depth, backend="xla"):
+    """One streamed run; returns (RunResult, streaming stats)."""
+    from repro.core import compile_plan
+
+    plan = compile_plan(alg, store, mode="sparse_only", backend=backend,
+                        share=False, memory_budget=budget,
+                        pipeline_depth=depth, rebalance_threshold=None)
+    res = plan.run()
+    return res, res.schedule_stats["streaming"]
+
+
+def run_smoke(out_path: str = "BENCH_stream.json", *, repeats: int = 3,
+              backend: str = "xla") -> bool:
+    """The CI perf-smoke gate (and its ``BENCH_stream.json`` artifact).
+
+    Two checks on a small R-MAT:
+
+    * **Trace stability** (hard, deterministic): TC streamed under a
+      coarse and a fine budget — the fine run has several times the
+      waves, and ``trace_count`` must NOT grow with them (one jit trace
+      per distinct bucket shape; the pre-BucketPlan executor retraced
+      once per wave).
+    * **Overlap floor**: the pipelined executor's best-of-``repeats``
+      ``overlap_efficiency`` on a ≥4-wave PageRank run must not regress
+      below :data:`SMOKE_OVERLAP_FLOOR` (measured against the
+      synchronous per-wave calibration baseline).
+
+    The artifact records both executors' per-phase wall-clock breakdown
+    (assemble / prepare / device_put / compute / collective) so a
+    pipeline win — or regression — is attributable to a phase, not just
+    an aggregate number.  Returns True when every check passed.
+    """
+    from repro.core import build_block_store, rmat
+    from repro.algorithms import pagerank_algorithm, tc_algorithm
+    from repro.algorithms.tc import orient_dag
+
+    g = rmat(12, 16, seed=5)
+    budget = "256KB"
+    modes: dict = {}
+    for label, depth in (("pipelined", 2), ("synchronous", 0)):
+        best = None
+        for _ in range(repeats):
+            res, st = _stream_once(pagerank_algorithm(),
+                                   build_block_store(g, 8),
+                                   budget=budget, depth=depth,
+                                   backend=backend)
+            cand = dict(
+                pipeline_depth=depth,
+                waves=st["num_waves"],
+                overlap_efficiency=round(st["overlap_efficiency"], 4),
+                host_stage_overlap=round(st["host_stage_overlap"], 4),
+                phase_seconds={k: round(v, 5)
+                               for k, v in st["phase_seconds"].items()},
+                arena_bytes=st["arena_bytes"],
+                arena_reuses=st["arena_reuses"],
+                trace_count=st["trace_count"],
+                seconds=round(res.seconds, 4),
+            )
+            if (best is None or cand["overlap_efficiency"]
+                    > best["overlap_efficiency"]):
+                best = cand
+        modes[label] = best
+    dag = orient_dag(rmat(10, 8, seed=5))
+    tc: dict = {}
+    for label, b in (("coarse", "512KB"), ("fine", "128KB")):
+        _, st = _stream_once(tc_algorithm(), build_block_store(dag, 8),
+                             budget=b, depth=2, backend=backend)
+        tc[label] = dict(budget=b, waves=st["num_waves"],
+                         trace_count=st["trace_count"])
+    checks = dict(
+        multi_wave=modes["pipelined"]["waves"] >= 4,
+        # the fine run multiplies the wave count…
+        tc_waves_grew=tc["fine"]["waves"] >= 2 * tc["coarse"]["waves"],
+        # …while the trace count stays put (one per distinct shape)
+        tc_traces_stable=(
+            tc["fine"]["trace_count"] <= tc["coarse"]["trace_count"] + 2
+            and tc["fine"]["trace_count"] < tc["fine"]["waves"]
+        ),
+        overlap_floor=(
+            modes["pipelined"]["overlap_efficiency"] >= SMOKE_OVERLAP_FLOOR
+        ),
+    )
+    payload = dict(
+        graph="rmat(12, 16, seed=5)", budget=budget,
+        floors=dict(overlap_efficiency=SMOKE_OVERLAP_FLOOR),
+        **modes,
+        tc_trace_stability=tc,
+        checks=checks,
+        passed=all(checks.values()),
+    )
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(json.dumps(payload, indent=2))
+    return payload["passed"]
 
 
 def run_mesh_streaming(g, *, repeats: int = 3, backend: str = "xla",
@@ -181,6 +306,10 @@ def run_mesh_streaming(g, *, repeats: int = 3, backend: str = "xla",
                 # registry's per-device pricing hint)
                 ws = workspace_bytes("csr_bucket_search", items=store.m,
                                      depth=8, devices=st["mesh_devices"])
+                phases = ";".join(
+                    f"{k}_s={v:.4f}"
+                    for k, v in st["phase_seconds"].items()
+                )
                 rows.append(csv_row(
                     f"oversub/mesh/{name}/{budget}/{label}", t,
                     f"devices={st['mesh_devices']};"
@@ -190,6 +319,8 @@ def run_mesh_streaming(g, *, repeats: int = 3, backend: str = "xla",
                     f"collective_bytes={st['collective_bytes']};"
                     f"per_device_scratch_est={ws};"
                     f"bytes_staged_total={st['bytes_staged_total']};"
+                    f"{phases};"
+                    f"host_stage_overlap={st['host_stage_overlap']:.2f};"
                     f"overlap_efficiency={st['overlap_efficiency']:.2f}",
                 ))
     return rows
@@ -213,7 +344,18 @@ if __name__ == "__main__":
              "initializes) and report per-device staged bytes, "
              "collective bytes, and overlap vs the 1-device baseline",
     )
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI perf-smoke gate: pipelined vs synchronous staging with "
+             "a per-phase breakdown, TC trace-count stability across "
+             "wave counts, and the recorded overlap floor — writes "
+             "BENCH_stream.json and exits non-zero on regression",
+    )
+    ap.add_argument("--smoke-out", default="BENCH_stream.json")
     a = ap.parse_args()
+    if a.smoke:
+        sys.exit(0 if run_smoke(a.smoke_out, repeats=a.repeats,
+                                backend=a.backend) else 1)
     if a.mesh_devices > 1:
         # must happen before the first jax import (repro imports lazily
         # for exactly this reason): XLA locks the device count at init

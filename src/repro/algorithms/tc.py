@@ -58,19 +58,16 @@ def _make_blocklists(store):
     return np.asarray(out, dtype=np.int64)
 
 
-def _prepare(store, sched):
-    """Bucketed sparse items + tile triple indices (host side, one-time).
+def _sparse_items(store, bls, dense_mask):
+    """(sg, lg, sb, lb) membership-test items of every sparse task.
 
-    Returns ``Context.extras``: the bucket dicts mix traced arrays
-    (``sg``/``lg``/``sb``/``lb``) with static ints (``dp``/``steps``
-    drive shapes/unroll) — the typed Context keeps that split.
+    Lengths come from differences of ``row_block_ptr`` rows, so they are
+    invariant under the per-wave/per-device CSR rebasing — which is what
+    lets :func:`_stage_plan` derive the bucket ladder from the *global*
+    store while each wave's ``prepare`` fills it from its local view.
     """
     p = store.p
-    bls = sched.blocklists
-    dense_mask = sched.dense_task_mask
     rbp = store.row_block_ptr
-
-    # ---- sparse items: (edge, k) pairs from sparse tasks --------------
     sg_all, lg_all, sb_all, lb_all = [], [], [], []
     for t in range(bls.shape[0]):
         if dense_mask[t]:
@@ -86,37 +83,102 @@ def _prepare(store, sched):
         su, lu, sv, lv = su[keep], lu[keep], sv[keep], lv[keep]
         # gather the shorter side, binary-search the longer one
         swap = lu > lv
-        sg = np.where(swap, sv, su)
-        lg = np.where(swap, lv, lu)
-        sb = np.where(swap, su, sv)
-        lb = np.where(swap, lu, lv)
-        sg_all.append(sg); lg_all.append(lg); sb_all.append(sb); lb_all.append(lb)
+        sg_all.append(np.where(swap, sv, su))
+        lg_all.append(np.where(swap, lv, lu))
+        sb_all.append(np.where(swap, su, sv))
+        lb_all.append(np.where(swap, lu, lv))
+    if not sg_all:
+        z = np.zeros(0, np.int64)
+        return z, z, z, z
+    return (np.concatenate(sg_all), np.concatenate(lg_all),
+            np.concatenate(sb_all), np.concatenate(lb_all))
 
+
+def _bucket_ids(lg: np.ndarray) -> np.ndarray:
+    return np.ceil(np.log2(np.maximum(lg, 1))).astype(np.int64)
+
+
+def _stage_plan(store, sched):
+    """The cross-wave ``BucketPlan``: one dp/steps ladder for the plan.
+
+    Computed ONCE from the full store and schedule (the executor calls
+    it before any per-wave ``prepare``): the union of every sparse
+    item's dp bucket, with ``steps`` the global max search depth per
+    bucket.  Every wave then emits exactly these buckets — item arrays
+    padded up the power-of-two count ladder with neutral items — so the
+    streamed step's static structure is wave-invariant and jit traces
+    once per distinct bucket *shape*, not once per wave (the TC retrace
+    that used to dominate high-wave-count runs).
+    """
+    _, lg, _, lb = _sparse_items(store, sched.blocklists,
+                                 sched.dense_task_mask)
+    if not lg.size:
+        return dict(dp_steps=())
+    ids = _bucket_ids(lg)
+    ladder = []
+    for b in np.unique(ids):
+        sel = ids == b
+        dp = int(max(1, 2 ** b))
+        steps = int(max(1, np.ceil(np.log2(float(lb[sel].max()) + 1)))) + 1
+        ladder.append((dp, steps))
+    return dict(dp_steps=tuple(ladder))
+
+
+def _prepare(store, sched, plan=None):
+    """Bucketed sparse items + tile triple indices (host side, one-time).
+
+    Returns ``Context.extras``: the bucket dicts mix traced arrays
+    (``sg``/``lg``/``sb``/``lb``) with static ints (``dp``/``steps``
+    drive shapes/unroll) — the typed Context keeps that split.
+
+    With a ``plan`` (the executor always passes the shared
+    :func:`_stage_plan` output), the emitted buckets follow the plan's
+    dp/steps ladder exactly: buckets this wave has no items for still
+    appear (one neutral item), and item counts pad up the power-of-two
+    ladder with neutral items (``lg = lb = 0`` — the mask and the
+    lower-bound check both reject them, so padding counts nothing).
+    """
+    from ..core.membudget import bucket_size
+    from ..kernels.registry import workspace_bytes
+
+    bls = sched.blocklists
+    dense_mask = sched.dense_task_mask
+
+    # ---- sparse items: (edge, k) pairs from sparse tasks --------------
+    sg, lg, sb, lb = _sparse_items(store, bls, dense_mask)
     buckets = []
     scratch = 0
-    if sg_all:
-        from ..kernels.registry import workspace_bytes
-
-        sg = np.concatenate(sg_all); lg = np.concatenate(lg_all)
-        sb = np.concatenate(sb_all); lb = np.concatenate(lb_all)
-        if sg.size:
-            bucket_id = np.ceil(np.log2(np.maximum(lg, 1))).astype(np.int64)
-            for b in np.unique(bucket_id):
-                sel = bucket_id == b
-                dp = int(max(1, 2 ** b))
-                steps = int(max(1, np.ceil(np.log2(float(lb[sel].max()) + 1)))) + 1
-                buckets.append(
-                    dict(
-                        dp=dp,
-                        steps=steps,
-                        sg=jnp.asarray(sg[sel]),
-                        lg=jnp.asarray(lg[sel]),
-                        sb=jnp.asarray(sb[sel]),
-                        lb=jnp.asarray(lb[sel]),
-                    )
+    ids = _bucket_ids(lg) if lg.size else np.zeros(0, np.int64)
+    if plan is not None:
+        for dp, steps in plan["dp_steps"]:
+            sel = ids == (int(dp).bit_length() - 1)
+            cnt = int(sel.sum())
+            padded = bucket_size(cnt, minimum=1)
+            arrs = {}
+            for key, col in (("sg", sg), ("lg", lg), ("sb", sb), ("lb", lb)):
+                a = np.zeros(padded, np.int64)
+                a[:cnt] = col[sel]
+                arrs[key] = jnp.asarray(a)
+            buckets.append(dict(dp=int(dp), steps=int(steps), **arrs))
+            scratch += workspace_bytes("csr_bucket_search",
+                                       items=padded, depth=int(dp))
+    elif lg.size:
+        for b in np.unique(ids):
+            sel = ids == b
+            dp = int(max(1, 2 ** b))
+            steps = int(max(1, np.ceil(np.log2(float(lb[sel].max()) + 1)))) + 1
+            buckets.append(
+                dict(
+                    dp=dp,
+                    steps=steps,
+                    sg=jnp.asarray(sg[sel]),
+                    lg=jnp.asarray(lg[sel]),
+                    sb=jnp.asarray(sb[sel]),
+                    lb=jnp.asarray(lb[sel]),
                 )
-                scratch += workspace_bytes("csr_bucket_search",
-                                           items=int(sel.sum()), depth=dp)
+            )
+            scratch += workspace_bytes("csr_bucket_search",
+                                       items=int(sel.sum()), depth=dp)
     # device scratch of the membership test, declared so the streaming
     # executor prices it against the budget (stripped before staging)
     extras = {"tc_buckets": buckets, "__workspace_bytes__": scratch}
@@ -124,10 +186,18 @@ def _prepare(store, sched):
     # ---- dense triples: tile index per block ---------------------------
     if dense_mask.any():
         tid_of_block = {int(b): t for t, b in enumerate(store.tile_block_ids)}
-        triples = bls[dense_mask]
-        extras["tc_tiles_idx"] = jnp.asarray(
-            [[tid_of_block[int(b)] for b in row] for row in triples], dtype=jnp.int32
+        triples = np.asarray(
+            [[tid_of_block[int(b)] for b in row] for row in bls[dense_mask]],
+            dtype=np.int32,
         )
+        if plan is not None:
+            # pad triple rows up the count ladder with -1 (masked by
+            # _kernel_dense) so dense waves share shapes too
+            padded = bucket_size(triples.shape[0], minimum=1)
+            full = np.full((padded, 3), -1, np.int32)
+            full[: triples.shape[0]] = triples
+            triples = full
+        extras["tc_tiles_idx"] = jnp.asarray(triples)
     else:
         extras["tc_tiles_idx"] = None
     return extras
@@ -174,10 +244,20 @@ def _mesh_pack(extras_list):
     serves every device.  Dense triples pad with ``-1`` rows, which
     ``_kernel_dense`` masks out.  Array leaves come back with a leading
     device axis, as the mesh executor's contract requires.
+
+    The returned tree re-declares ``__workspace_bytes__`` for the
+    *unified* shapes: every entry now runs every bucket at the padded
+    count, so the per-entry membership-test scratch is the sum over the
+    union ladder — the executor prices that against the budget instead
+    of the per-entry pre-unification declarations (which can
+    under-count when different entries define different buckets' caps).
     """
+    from ..kernels.registry import workspace_bytes
+
     d = len(extras_list)
     dps = sorted({int(b["dp"]) for e in extras_list for b in e["tc_buckets"]})
     buckets = []
+    scratch = 0
     for dp in dps:
         per_dev = [
             next((b for b in e["tc_buckets"] if int(b["dp"]) == dp), None)
@@ -198,7 +278,8 @@ def _mesh_pack(extras_list):
                 v = np.asarray(b[k], dtype=np.int64)
                 arrs[k][i, : v.shape[0]] = v
         buckets.append(dict(dp=dp, steps=steps, **arrs))
-    out = {"tc_buckets": buckets}
+        scratch += workspace_bytes("csr_bucket_search", items=cnt, depth=dp)
+    out = {"tc_buckets": buckets, "__workspace_bytes__": scratch}
     idxs = [e.get("tc_tiles_idx") for e in extras_list]
     if any(x is not None for x in idxs):
         tmax = max(
@@ -242,6 +323,7 @@ def tc_algorithm() -> BlockAlgorithm:
         kernel_sparse=_kernel_sparse,
         kernel_dense=_kernel_dense,
         prepare=_prepare,
+        stage_plan=_stage_plan,
         mesh_pack=_mesh_pack,
         init_state=lambda store: dict(nt=jnp.asarray(0, jnp.int32)),
         max_iterations=1,

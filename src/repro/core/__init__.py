@@ -49,8 +49,8 @@ from .scheduler import Schedule, build_schedule, lpt_assign
 from .context import Context, HostCtx, build_context, build_host_ctx
 from .engine import Plan, compile_plan, RunResult, Engine, run
 from .membudget import (
-    MemoryBudget, task_footprints, task_csr_edge_counts, build_waves,
-    repack_waves,
+    MemoryBudget, PIPELINE_DEPTH, arena_model_bytes, task_footprints,
+    task_csr_edge_counts, build_waves, repack_waves,
 )
 from .stream import StreamingPlan, compile_streaming_plan
 from .distributed import (
@@ -68,7 +68,8 @@ __all__ = [
     "Schedule", "build_schedule", "lpt_assign",
     "Context", "HostCtx", "build_context", "build_host_ctx",
     "Plan", "compile_plan", "RunResult",
-    "MemoryBudget", "task_footprints", "task_csr_edge_counts",
+    "MemoryBudget", "PIPELINE_DEPTH", "arena_model_bytes",
+    "task_footprints", "task_csr_edge_counts",
     "build_waves", "repack_waves",
     "StreamingPlan", "compile_streaming_plan",
     "DistributedEngine", "combine_fn", "make_device_edge_partition",

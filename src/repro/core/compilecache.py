@@ -1,0 +1,51 @@
+"""Share-gated compiled-step caching, common to both executors.
+
+The in-core :class:`~repro.core.engine.Plan` and the streaming
+:class:`~repro.core.stream.StreamingPlan` each own jitted step flavours
+(`_CompiledStep`, `_StreamStep`, `_PostStep`, ...).  All of them are
+cached process-wide under the same identity — ``(algorithm name,
+trace-affecting params, backend)`` — so that two plans for the same
+algorithm share one compilation, and jit's own shape bucketing makes
+same-shape graphs hit the compiled executable instead of retracing.
+
+This module is the single home of that keying/invalidation logic:
+``alg_cache_key`` builds the identity tuple, ``shared_entry`` is the
+share-gated lookup every cache flavour goes through.  Keeping them in
+one place means a change to the cache contract (new key component,
+eviction, ...) cannot silently diverge between the executors.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Callable, TypeVar
+
+if TYPE_CHECKING:  # pragma: no cover — typing only, avoids an import cycle
+    from .functors import BlockAlgorithm
+
+__all__ = ["alg_cache_key", "shared_entry"]
+
+T = TypeVar("T")
+
+
+def alg_cache_key(alg: "BlockAlgorithm", backend: str) -> tuple:
+    """Algorithms are identified by (name, trace-affecting params, backend).
+
+    Factories record trace-affecting parameters under
+    ``metadata["params"]``; two factory calls with equal params produce
+    behaviourally identical kernels and may share a compiled step.
+    """
+    params = alg.metadata.get("params")
+    return (alg.name, repr(sorted(params.items())) if params else None, backend)
+
+
+def shared_entry(cache: dict, key: tuple, factory: Callable[[], T], *,
+                 share: bool = True) -> T:
+    """The one share-gated cache lookup used for every compiled-step
+    flavour (in-core step in engine.py; wave/post/mesh steps in
+    stream.py).  ``share=False`` bypasses the cache for ad-hoc
+    algorithms that reuse a registered name with different kernels."""
+    if not share:
+        return factory()
+    entry = cache.get(key)
+    if entry is None:
+        entry = cache[key] = factory()
+    return entry

@@ -60,6 +60,7 @@ def make_device_edge_partition(
     num_devices: int | None = None,
     bucket: bool = False,
     stage_csr: bool = False,
+    alloc: Callable[..., np.ndarray] | None = None,
 ) -> dict[str, Any]:
     """Partition a schedule's tasks into padded per-device slabs.
 
@@ -86,6 +87,12 @@ def make_device_edge_partition(
         (:func:`repro.core.membudget.bucket_size`) so all waves of one
         plan share a few slab shapes and the jitted mesh step does not
         retrace per wave.
+    alloc
+        ``alloc(shape, dtype) -> zeroed np.ndarray`` used for the big
+        padded per-device slabs instead of ``np.zeros`` — the streaming
+        executor passes its staging arena's pooled-buffer allocator so
+        per-wave assembly recycles buffers instead of churning the host
+        allocator.  Must return zero-filled memory (padding semantics).
     stage_csr
         Additionally build each device's conformal CSR row slices
         (:meth:`~repro.core.blocks.BlockStore.csr_slices` over the
@@ -127,10 +134,11 @@ def make_device_edge_partition(
         )
     emax = max((int(x.shape[0]) for x in idx), default=1) or 1
     eb = bucket_size(emax) if bucket else emax
-    src = np.zeros((d, eb), dtype=np.int32)
-    dst = np.zeros((d, eb), dtype=np.int32)
-    edge_block = np.zeros((d, eb), dtype=np.int32)
-    valid = np.zeros((d, eb), dtype=bool)
+    zeros = alloc if alloc is not None else np.zeros
+    src = zeros((d, eb), dtype=np.int32)
+    dst = zeros((d, eb), dtype=np.int32)
+    edge_block = zeros((d, eb), dtype=np.int32)
+    valid = zeros((d, eb), dtype=bool)
     for i, ix in enumerate(idx):
         k = ix.shape[0]
         src[i, :k] = store.src[ix]
@@ -146,7 +154,7 @@ def make_device_edge_partition(
         slices = [store.csr_slices(bl) for bl in blocks]
         cmax = max((int(s[0].shape[0]) for s in slices), default=1) or 1
         cb = bucket_size(cmax) if bucket else cmax
-        indices = np.zeros((d, cb), dtype=np.int32)
+        indices = zeros((d, cb), dtype=np.int32)
         for i, (sl, _, _, _) in enumerate(slices):
             indices[i, : sl.shape[0]] = sl
         out.update(

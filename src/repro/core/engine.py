@@ -44,6 +44,7 @@ import jax
 import jax.numpy as jnp
 
 from .blocks import BlockStore
+from .compilecache import alg_cache_key, shared_entry
 from .context import Context, HostCtx, build_context, build_host_ctx
 from .functors import BlockAlgorithm
 from .scheduler import Schedule, build_schedule
@@ -87,34 +88,17 @@ class _CompiledStep:
 
 _STEP_CACHE: dict[tuple, _CompiledStep] = {}
 
-
-def _alg_cache_key(alg: BlockAlgorithm, backend: str) -> tuple:
-    """Algorithms are identified by (name, trace-affecting params, backend).
-
-    Factories record trace-affecting parameters under
-    ``metadata["params"]``; two factory calls with equal params produce
-    behaviourally identical kernels and may share a compiled step.
-    """
-    params = alg.metadata.get("params")
-    return (alg.name, repr(sorted(params.items())) if params else None, backend)
-
-
-def _shared_entry(cache: dict, key: tuple, factory, *, share: bool = True):
-    """The one share-gated cache lookup used for every compiled-step
-    flavour (in-core step here; wave/post steps in stream.py) — keep
-    keying/invalidation changes in a single place."""
-    if not share:
-        return factory()
-    entry = cache.get(key)
-    if entry is None:
-        entry = cache[key] = factory()
-    return entry
+# The keying/share-gating logic lives in repro.core.compilecache so the
+# in-core and streaming executors cannot diverge; the old private names
+# stay importable for downstream code.
+_alg_cache_key = alg_cache_key
+_shared_entry = shared_entry
 
 
 def _compiled_step_for(alg: BlockAlgorithm, backend: str, *,
                        share: bool = True) -> _CompiledStep:
-    return _shared_entry(_STEP_CACHE, _alg_cache_key(alg, backend),
-                         lambda: _CompiledStep(alg), share=share)
+    return shared_entry(_STEP_CACHE, alg_cache_key(alg, backend),
+                        lambda: _CompiledStep(alg), share=share)
 
 
 # ----------------------------------------------------------------------
@@ -168,9 +152,11 @@ class Plan:
                 and (schedule is None or cached.schedule is schedule)):
             return cached
         sched = schedule or build_schedule(self.alg, store, **self._sched_kw)
-        extras = (
-            self.alg.prepare(store, sched) if self.alg.prepare is not None else {}
-        )
+        # stage_plan exists to keep per-wave prepare outputs
+        # shape-stable across a streamed plan's waves; the in-core Plan
+        # has exactly one context and one trace, so it passes None and
+        # prepare keeps its unpadded single-shot form
+        extras = self.alg.run_prepare(store, sched, None)
         # reserved declaration for the streaming executor's footprint
         # model — not a kernel input (see stream._assemble)
         extras.pop("__workspace_bytes__", None)
@@ -275,7 +261,8 @@ def compile_plan(
     share: bool = True,
     use_pallas: bool = False,
     memory_budget: "int | str | None" = None,
-    rebalance_threshold: "float | None" = None,
+    rebalance_threshold: "float | str | None" = "auto",
+    pipeline_depth: int | None = None,
     mesh=None,
 ) -> "Plan | StreamingPlan":
     """Build + compile: schedule, prepare, typed contexts, jitted step.
@@ -290,17 +277,24 @@ def compile_plan(
 
     ``memory_budget`` (bytes, or a string like ``"64MB"``) switches to
     the out-of-core streaming executor: the result is a
-    :class:`~repro.core.stream.StreamingPlan` whose ``run`` stages
-    budget-sized, double-buffered waves of tasks — COO slab, dense
-    tiles, and (for ``metadata["csr"] == "slice"`` algorithms) the
-    conformal CSR row slices — instead of shipping the whole edge set
+    :class:`~repro.core.stream.StreamingPlan` whose ``run`` drives a
+    three-stage host→device pipeline over budget-sized waves of tasks —
+    background slab assembly into a staging arena, double-buffered
+    ``device_put``, compute — instead of shipping the whole edge set
     to the device up front.  The schedule is then built budget-aware
     (dense cut-offs sized so waves fit).  Same ``run()`` contract;
     ``schedule_stats["streaming"]`` reports waves, bytes staged per
-    wave (CSR broken out), and overlap efficiency.
-    ``rebalance_threshold`` (streaming only) opts in to tail-wave
-    rebalancing: when measured per-wave compute skew exceeds it, the
-    wave queue is re-packed against the observed task times.
+    wave (CSR broken out), per-phase wall clock, trace counts, arena
+    bytes, and the measured overlap efficiencies.
+    ``rebalance_threshold`` (streaming only) controls tail-wave
+    rebalancing, default **on** (``"auto"``): after the calibration
+    pass, the wave queue is re-packed against observed task times when
+    the estimate-vs-observed divergence trigger fires (hysteresis band
+    2.0/1.5, deterministic noise floor).  A float keeps the legacy
+    compute-skew trigger; ``None`` switches rebalancing off.
+    ``pipeline_depth`` (streaming only) bounds how many waves the
+    background staging worker assembles ahead (default 2; ``0`` runs
+    staging synchronously in the wave loop — the benchmark baseline).
 
     ``mesh`` (streaming only; a 1-D ``jax.sharding.Mesh``) composes the
     waves with the distributed execution model of
@@ -316,11 +310,18 @@ def compile_plan(
     """
     if backend is None:
         backend = "pallas" if use_pallas else "xla"
-    if rebalance_threshold is not None and memory_budget is None:
+    if (rebalance_threshold not in (None, "auto")
+            and memory_budget is None):
         raise ValueError(
             "rebalance_threshold only applies to the streaming executor; "
             "pass memory_budget=... as well (the in-core Plan has no waves "
             "to rebalance)"
+        )
+    if pipeline_depth is not None and memory_budget is None:
+        raise ValueError(
+            "pipeline_depth only applies to the streaming executor; "
+            "pass memory_budget=... as well (the in-core Plan stages no "
+            "waves)"
         )
     if mesh is not None and memory_budget is None:
         raise ValueError(
@@ -329,6 +330,7 @@ def compile_plan(
             "execution use repro.core.distributed.DistributedEngine)"
         )
     if memory_budget is not None:
+        from .membudget import PIPELINE_DEPTH
         from .stream import StreamingPlan
 
         return StreamingPlan(
@@ -338,6 +340,8 @@ def compile_plan(
             tile_dim=tile_dim, dense_frac=dense_frac,
             dense_density=dense_density, share=share,
             rebalance_threshold=rebalance_threshold,
+            pipeline_depth=(PIPELINE_DEPTH if pipeline_depth is None
+                            else pipeline_depth),
             mesh=mesh,
         )
     return Plan(

@@ -108,7 +108,19 @@ class BlockAlgorithm:
     # one-time extras preparation: (store, schedule) -> dict placed on
     # Context.extras (bucketed item arrays, tile index maps, ...).
     # jax/numpy array leaves are traced; everything else stays static.
+    # When ``stage_plan`` is set, prepare is called with a third
+    # positional argument: the plan-wide staging plan (see below).
     prepare: Callable[..., dict] | None = None
+    # optional cross-wave staging plan: (store, schedule) -> Any, called
+    # ONCE per *streaming* plan with the FULL store and schedule,
+    # before any (wave- or device-restricted) ``prepare``.  Its result
+    # is handed to every prepare call so shape-driving decisions — TC's
+    # dp/steps bucket ladder — are made once for the whole plan instead
+    # of per wave, keeping every wave's extras structurally identical
+    # (one jit trace per distinct bucket shape, not one per wave).  The
+    # in-core Plan passes ``plan=None`` instead: a single context needs
+    # no shape stabilization, so prepare keeps its unpadded form there.
+    stage_plan: Callable[..., Any] | None = None
     # mesh-cooperative streaming only: pack the per-device ``prepare``
     # outputs of one wave into a single extras tree whose array leaves
     # carry a leading device axis (sharded over the mesh; the leading
@@ -132,6 +144,19 @@ class BlockAlgorithm:
             raise ValueError(
                 f"{self.name}: at least one of kernel_sparse/kernel_dense is required"
             )
+
+    def run_prepare(self, store, sched, plan: Any = None) -> dict:
+        """Invoke ``prepare`` with the staging plan when one is declared.
+
+        Algorithms without ``stage_plan`` keep the two-argument prepare
+        contract unchanged; algorithms with one always receive the plan
+        (``None`` only when a caller skipped :attr:`stage_plan` — e.g.
+        ad-hoc use outside an executor)."""
+        if self.prepare is None:
+            return {}
+        if self.stage_plan is not None:
+            return self.prepare(store, sched, plan)
+        return self.prepare(store, sched)
 
     def compose_blocklists(self, store) -> np.ndarray:
         """Run P_C, or enumerate + filter with P_G (paper §3)."""

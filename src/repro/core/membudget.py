@@ -56,7 +56,8 @@ from .scheduler import Schedule
 
 __all__ = [
     "MemoryBudget", "parse_bytes", "COO_EDGE_BYTES", "CSR_INDEX_BYTES",
-    "TILE_HEADER_BYTES", "bucket_size", "task_edge_counts",
+    "TILE_HEADER_BYTES", "PIPELINE_DEPTH", "arena_model_bytes",
+    "bucket_size", "task_edge_counts",
     "task_csr_edge_counts", "task_footprints", "tile_bytes",
     "dense_extra_bytes", "single_task_bytes",
     "resident_bytes", "tree_array_bytes", "Wave", "build_waves",
@@ -65,6 +66,9 @@ __all__ = [
 
 # src + dst + edge_block (int32) + sparse/dense edge masks (bool).
 COO_EDGE_BYTES = 4 + 4 + 4 + 1 + 1
+# default staging-pipeline depth: how many waves ahead the background
+# staging worker may assemble (repro.core.stream._StagePipeline).
+PIPELINE_DEPTH = 2
 # one staged CSR adjacency entry (int32) — see BlockStore.csr_slices.
 CSR_INDEX_BYTES = 4
 # per-tile origin scalars: tile_row_start + tile_col_start (int64).
@@ -236,6 +240,25 @@ def tree_array_bytes(tree) -> int:
     return total
 
 
+
+
+def arena_model_bytes(slab_bytes, depth: int = PIPELINE_DEPTH,
+                      devices: int = 1) -> int:
+    """Model bytes of the staging arena for a plan's wave slabs.
+
+    The pipelined stager holds up to ``depth`` assembled host slabs in
+    its queue plus the one whose ``device_put`` is in flight, all drawn
+    from pooled per-(bucket shape, dtype) buffers — so the arena's
+    steady-state residency is bounded by ``(depth + 1)`` copies of the
+    *largest* slab (priced through the registry's ``stage_arena``
+    estimator, which also understands the per-device mesh split).  Host
+    memory: the device-side bound stays "each staged slab ≤ budget".
+    """
+    from ..kernels.registry import workspace_bytes
+
+    worst = max((int(b) for b in slab_bytes), default=0)
+    return workspace_bytes("stage_arena", slab_bytes=worst, depth=depth,
+                           devices=devices)
 
 
 def resident_bytes(store: BlockStore, state=None, *,

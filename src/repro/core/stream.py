@@ -1,9 +1,9 @@
-"""Out-of-core streaming executor: memory-budgeted, double-buffered waves.
+"""Out-of-core streaming executor: memory-budgeted, pipelined waves.
 
 This subsystem makes any :class:`~repro.core.engine.Plan`-compatible
 algorithm runnable under an explicit device-memory budget — the paper's
 headline capability ("graphs that fit host DRAM but not device memory",
-§4.3/§4.4, the block-list bound on device copies).  Four parts:
+§4.3/§4.4, the block-list bound on device copies).  Five parts:
 
 1. **Footprint model** (:mod:`repro.core.membudget`) prices each
    schedule task's COO slice, dense tiles, conformal CSR row slices
@@ -18,15 +18,44 @@ headline capability ("graphs that fit host DRAM but not device memory",
    all waves without retracing.  Within a wave, tasks are sorted by
    leading block id so the segmented-COO gather coalesces into few
    contiguous segments — staging approaches a single slice copy.
-3. **Double-buffered staging loop**: wave ``k``'s compute is dispatched
-   asynchronously (JAX async dispatch — the analog of the paper's four
-   CUDA streams), then wave ``k+1``'s host slab is ``jax.device_put``
-   while the device works; the previous slab's buffers are released as
-   their references drop.  The first executed iteration runs
-   synchronously to calibrate stage/compute times; every later
+3. **Three-stage host→device pipeline**: after a one-time *planning
+   pass* (assemble every wave once: verify bytes against the budget,
+   split overflows, hoist wave-invariant extras, cache each wave's
+   ``prepare`` outputs), the per-iteration wave loop runs as
+
+   * **stage 1 — background assembly** (:class:`_StagePipeline`, a
+     worker thread behind a bounded queue of depth
+     ``pipeline_depth``): wave ``k+2``'s numpy slab is gathered into
+     pooled arena buffers while wave ``k`` computes.  ``prepare``
+     outputs ride with the staged payload (cached from the planning
+     pass — never a synchronous loop step);
+   * **stage 2 — double-buffered ``device_put``**: wave ``k+1``'s slab
+     crosses host→device while the device works on wave ``k`` (JAX
+     async dispatch — the analog of the paper's CUDA copy streams);
+   * **stage 3 — compute**: the jitted wave step, folding partials.
+
+   The first executed iteration runs synchronously to calibrate
+   per-phase times (assemble / device_put / compute); every later
    iteration overlaps, and ``schedule_stats`` reports the measured
-   overlap efficiency.
-4. **Partial-result combination**: each wave's kernels run against the
+   ``overlap_efficiency`` plus ``host_stage_overlap`` — the fraction
+   of background host assembly hidden behind compute.
+4. **Staging arena** (:class:`_HostArena`): because all slabs are
+   padded to the power-of-two bucket ladder, the pipeline draws its
+   host buffers from one pool per (shape, dtype) and recycles wave
+   ``k``'s buffers into a later wave's assembly.  Recycling is
+   *completion-gated* — ``jax.device_put`` may alias host memory on
+   CPU, so a buffer re-enters the pool only once the step that read it
+   reports ready (non-blocking ``is_ready`` probe; iteration end is
+   the force-drain barrier).  When the device keeps up, steady-state
+   staging memory approaches the model's ``(depth + 1)``-slab bound
+   (:func:`repro.core.membudget.arena_model_bytes` through the
+   registry's ``stage_arena`` estimator; the measured high water is
+   reported as ``arena_bytes``) instead of one fresh allocation per
+   wave per iteration.  On device the bucket ladder plays the same
+   role: at most two staged slabs (current + prefetch) are in flight,
+   each ≤ the budget, and freed buffers match the next wave's shapes
+   exactly, so the device allocator reuses them instead of churning.
+5. **Partial-result combination**: each wave's kernels run against the
    *iteration-start* state and its per-leaf updates are folded with the
    algorithm's declared ``metadata["combine"]`` op (``add``/``min``/
    ``max`` — the same semantics as
@@ -38,13 +67,41 @@ headline capability ("graphs that fit host DRAM but not device memory",
    ``post`` (and the host hooks) run once per iteration on the combined
    state, against a *resident* context that holds only vertex-level
    arrays.
-5. **Tail-wave rebalancing** (opt-in via ``rebalance_threshold``): the
-   calibration pass times every wave's compute; when the skew
-   (max/mean) exceeds the threshold, the remaining iterations' waves
-   are re-packed LPT against the *observed* per-task times
-   (:func:`repro.core.membudget.repack_waves`) — the paper's dynamic
-   work queue at wave granularity, for skewed graphs where one wave's
-   compute dominates.
+
+Cross-wave trace stability
+--------------------------
+The jitted wave step retraces once per distinct (slab shapes, extras
+structure) combination.  Slab shapes are already bucketed (point 2);
+``prepare`` outputs are kept shape-stable by the algorithm's optional
+``stage_plan`` hook (:class:`~repro.core.functors.BlockAlgorithm`):
+it runs once per plan against the *full* store/schedule and its result
+is passed to every per-wave (and per-device) ``prepare``, so
+shape-driving decisions — TC's dp/steps bucket ladder — are made once
+for the whole plan.  ``schedule_stats["streaming"]["trace_count"]``
+reports the step's trace counter: with the hook it is one per distinct
+bucket shape, independent of the number of waves (the TC retrace that
+used to dominate high-wave-count runs).  All compiled-step flavours
+share the process-wide cache in :mod:`repro.core.compilecache`.
+
+Tail-wave rebalancing — ``rebalance_threshold``
+-----------------------------------------------
+Default **on** (``"auto"``): after the calibration pass, the observed
+per-wave compute shares are compared against the schedule's estimate
+shares (task weights); when the worst wave's observed/estimated share
+diverges beyond a hysteresis band (fire ≥ 2.0×, re-arm < 1.5×) *and*
+the measured times are above the noise floor (mean wave ≥ 10 ms — tiny
+runs are deterministically left alone, keeping staged-byte accounting
+reproducible), the remaining iterations' waves are re-packed LPT
+against the observed per-task times
+(:func:`repro.core.membudget.repack_waves`) — the paper's dynamic work
+queue at wave granularity.  A float keeps the legacy behavior (fire
+when the max/mean compute skew exceeds it); ``None`` is the explicit
+off switch.  A fire disarms the trigger and the post-re-pack
+recalibration only re-arms it below the low watermark — so the
+automatic path re-packs at most once per plan and a still-diverged but
+freshly packed queue never thrashes.  Results are unchanged by
+construction (per-wave folding is partition-invariant) and every
+re-packed wave is re-verified against the byte budget.
 
 CSR streaming — ``metadata["csr"]``
 -----------------------------------
@@ -91,18 +148,20 @@ becomes *per device*, waves are packed to the mesh capacity
 wave's tasks are LPT-split over the mesh so every device stages only
 its own padded COO/CSR/tile slab
 (:func:`repro.core.distributed.make_device_edge_partition`, bucket
-ladder shared with the single-device path).  The double-buffered stager
-``device_put``\\ s wave ``k+1``'s *sharded* slabs while the mesh computes
-wave ``k`` under ``shard_map``; inside the shard each device runs the
-kernels on its slice from iteration-start state, per-leaf updates are
-combined across the mesh with the algorithm's declared
-``metadata["combine"]`` collective (``psum``/``pmin``/``pmax`` —
-:func:`repro.core.distributed.combine_fn`) and folded into the running
-accumulator, so results stay bit-identical to in-core for integer/bool
-attributes and equal up to float summation order otherwise.  Vertex
-attributes, the resident context, and the state are replicated; only
-edge work is sharded — the paper's "reads are free, writes are
-reduced" model at wave granularity.  Algorithms opt in with
+ladder — and staging arena — shared with the single-device path).  The
+same three-stage pipeline stages the *sharded* slabs: the background
+worker assembles wave ``k+2``'s per-device slabs into arena buffers,
+wave ``k+1``'s slabs ``device_put`` with the block-axis sharding while
+the mesh computes wave ``k`` under ``shard_map``; inside the shard each
+device runs the kernels on its slice from iteration-start state,
+per-leaf updates are combined across the mesh with the algorithm's
+declared ``metadata["combine"]`` collective (``psum``/``pmin``/``pmax``
+— :func:`repro.core.distributed.combine_fn`) and folded into the
+running accumulator, so results stay bit-identical to in-core for
+integer/bool attributes and equal up to float summation order
+otherwise.  Vertex attributes, the resident context, and the state are
+replicated; only edge work is sharded — the paper's "reads are free,
+writes are reduced" model at wave granularity.  Algorithms opt in with
 ``metadata["mesh"] == "shard"``; ``prepare`` runs per device against a
 device-local store view (device-rebased CSR, device tile subset), and
 structurally device-varying outputs are unified by the algorithm's
@@ -117,6 +176,8 @@ Entry point: ``compile_plan(alg, store, memory_budget=...)`` returns a
 """
 from __future__ import annotations
 
+import queue
+import threading
 import time
 from dataclasses import dataclass, replace as dc_replace
 from typing import Any
@@ -128,21 +189,37 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
 from .blocks import BlockStore
+from .compilecache import alg_cache_key, shared_entry
 from .context import _TRACED, Context, build_host_ctx, with_arrays
 from .distributed import combine_fn, make_device_edge_partition
 from .functors import BlockAlgorithm
 from .graph import csr_prefix
 from .membudget import (
-    MemoryBudget, Wave, bucket_size, build_waves, repack_waves,
-    resident_bytes, split_wave, task_footprints, tree_array_bytes,
+    MemoryBudget, PIPELINE_DEPTH, Wave, arena_model_bytes, bucket_size,
+    build_waves, repack_waves, resident_bytes, split_wave, task_footprints,
+    tree_array_bytes,
 )
 from .scheduler import Schedule, build_schedule
-from .engine import RunResult, _alg_cache_key, _shared_entry
+from .engine import RunResult
 
 __all__ = ["StreamingPlan", "compile_streaming_plan"]
 
 _COMBINE_KINDS = ("add", "min", "max")
 _CSR_MODES = ("resident", "slice", "none")
+
+# Auto-rebalancing (default): fire when the *observed* wave-compute
+# skew (max/mean) exceeds the skew the schedule's estimates predicted
+# by _REBALANCE_HI; re-arm below _REBALANCE_LO (the hysteresis band
+# keeps a borderline queue from flapping).  Comparing skews — not raw
+# shares — makes the trigger insensitive to the constant per-wave
+# dispatch overhead, and means "the estimate already predicted this
+# imbalance" correctly stands down (LPT packed it as well as the bytes
+# allow).  Below the noise floor the timings are dominated by dispatch
+# jitter, so the trigger deterministically stands down — small runs
+# keep reproducible staged-byte accounting.
+_REBALANCE_HI = 2.0
+_REBALANCE_LO = 1.5
+_REBALANCE_NOISE_FLOOR_S = 10e-3
 
 
 def _combine_spec(alg: BlockAlgorithm):
@@ -360,16 +437,128 @@ _POST_STEP_CACHE: dict[tuple, _PostStep] = {}
 
 def _stream_step_for(alg: BlockAlgorithm, backend: str, *,
                      share: bool = True) -> _StreamStep:
-    return _shared_entry(_STREAM_STEP_CACHE, _alg_cache_key(alg, backend),
-                         lambda: _StreamStep(alg), share=share)
+    return shared_entry(_STREAM_STEP_CACHE, alg_cache_key(alg, backend),
+                        lambda: _StreamStep(alg), share=share)
 
 
 def _post_step_for(alg: BlockAlgorithm, backend: str, *,
                    share: bool = True) -> _PostStep | None:
     if alg.post is None:
         return None
-    return _shared_entry(_POST_STEP_CACHE, _alg_cache_key(alg, backend),
-                         lambda: _PostStep(alg), share=share)
+    return shared_entry(_POST_STEP_CACHE, alg_cache_key(alg, backend),
+                        lambda: _PostStep(alg), share=share)
+
+
+# ----------------------------------------------------------------------
+class _HostArena:
+    """Pooled host staging buffers, one free-list per (shape, dtype).
+
+    Every wave slab is padded to the power-of-two bucket ladder, so a
+    handful of buffer shapes serves the whole plan: the pipeline
+    *takes* zeroed buffers for assembly and *gives* them back once the
+    step that read them completed (completion-gated — see the plan's
+    ``_park_for_recycle``), keeping steady-state staging memory near
+    ``(depth + 1)`` slabs instead of a fresh allocation per wave per
+    iteration.  Thread-safe (the background worker takes while the
+    main loop gives)."""
+
+    def __init__(self) -> None:
+        self._free: dict[tuple, list[np.ndarray]] = {}
+        self._lock = threading.Lock()
+        self.bytes = 0          # high-water: total bytes ever pooled
+        self.reuses = 0
+
+    def take(self, shape, dtype=np.float64) -> np.ndarray:
+        key = (tuple(np.atleast_1d(shape).tolist())
+               if not np.isscalar(shape) else (int(shape),),
+               np.dtype(dtype).str)
+        with self._lock:
+            pool = self._free.get(key)
+            buf = pool.pop() if pool else None
+        if buf is None:
+            buf = np.zeros(shape, dtype)
+            self.bytes += buf.nbytes
+            return buf
+        self.reuses += 1
+        buf.fill(0)             # padding semantics: zeroed like np.zeros
+        return buf
+
+    def give(self, *arrays: np.ndarray) -> None:
+        with self._lock:
+            for a in arrays:
+                if a is None:
+                    continue
+                key = (tuple(a.shape), a.dtype.str)
+                self._free.setdefault(key, []).append(a)
+
+
+class _StagePipeline:
+    """Stage 1 of the pipeline: a persistent background worker that
+    assembles wave slabs ahead of the compute loop, behind a bounded
+    queue.
+
+    With depth ``d`` the worker runs at most ``d`` waves ahead — wave
+    ``k+2``'s gathers (and nothing else: ``prepare`` outputs were
+    cached by the planning pass) happen while wave ``k`` computes and
+    wave ``k+1``'s ``device_put`` crosses the bus.  The worker lives
+    across iterations: the main loop *requests* each iteration's wave
+    epoch, and requests the next one as soon as the current epoch's
+    last slab is drained, so the next iteration's first waves assemble
+    while ``post``/host hooks run — no per-iteration cold start.
+    ``assemble_s`` is the worker's busy time, ``stall_s`` the main
+    loop's time blocked on the queue — their ratio is the
+    ``host_stage_overlap`` statistic."""
+
+    def __init__(self, plan: "StreamingPlan", depth: int) -> None:
+        self._q: queue.Queue = queue.Queue(maxsize=max(int(depth), 1))
+        self._cmd: queue.Queue = queue.Queue()
+        self.assemble_s = 0.0
+        self.stall_s = 0.0
+        self._err: BaseException | None = None
+        self._t = threading.Thread(target=self._work, args=(plan,),
+                                   daemon=True)
+        self._t.start()
+
+    def _work(self, plan: "StreamingPlan") -> None:
+        try:
+            while True:
+                indices = self._cmd.get()
+                if indices is None:
+                    return
+                for w in indices:
+                    t0 = time.perf_counter()
+                    slab = plan._assemble_runtime(plan._slabs[w])
+                    self.assemble_s += time.perf_counter() - t0
+                    self._q.put(slab)
+        except BaseException as e:  # surfaced on the consumer side
+            self._err = e
+            self._q.put(None)
+
+    def request(self, indices) -> None:
+        """Enqueue one epoch (an iteration's wave order) for assembly."""
+        self._cmd.put(list(indices))
+
+    def get(self) -> "_WaveSlab":
+        t0 = time.perf_counter()
+        slab = self._q.get()
+        self.stall_s += time.perf_counter() - t0
+        if slab is None:
+            raise self._err
+        return slab
+
+    def close(self, arena: _HostArena) -> None:
+        """Stop the worker; speculatively assembled slabs hand their
+        buffers straight back to the arena (they were never staged).
+        Keeps draining while the worker finishes its in-flight epoch
+        (it may be blocked on the bounded queue)."""
+        self._cmd.put(None)
+        while self._t.is_alive() or not self._q.empty():
+            try:
+                slab = self._q.get(timeout=0.05)
+            except queue.Empty:
+                continue
+            if slab is not None:
+                arena.give(*slab.arena_arrays)
 
 
 # ----------------------------------------------------------------------
@@ -381,7 +570,9 @@ class _WaveSlab:
     Under a mesh the same fields carry a leading device axis (``[D, …]``
     per-device slabs, uniformly padded), ``staged_bytes`` totals the
     whole wave's H2D traffic, and ``per_device_bytes`` is the share one
-    mesh device holds — the quantity the per-device budget bounds."""
+    mesh device holds — the quantity the per-device budget bounds.
+    ``arena_arrays`` names the buffers drawn from the staging arena
+    (runtime assembly only) so ``_put_slab`` can recycle exactly those."""
 
     wave: Wave
     src: np.ndarray
@@ -402,6 +593,55 @@ class _WaveSlab:
     csr_entries: int               # unpadded CSR slice length
     csr_segments: int              # coalesced CSR row-range gathers
     per_device_bytes: int = 0      # one device's staged share (mesh)
+    arena_arrays: tuple = ()       # arena-owned buffers to recycle
+    prep_ws: int = 0               # prepare-declared share of workspace
+
+
+@dataclass
+class _WaveRecipe:
+    """The retained, array-free description of one planned wave.
+
+    The planning pass assembles every wave once (budget verification,
+    splits, hoisting, byte accounting) and keeps only this recipe plus
+    the cached ``prepare`` outputs — the big gather arrays are
+    reproduced per iteration by the staging pipeline into arena
+    buffers, so host memory holds ``O(pipeline depth)`` slabs instead
+    of every wave at once."""
+
+    wave: Wave
+    run_dense: bool
+    staged_bytes: int
+    workspace_bytes: int
+    per_device_bytes: int
+    edges: int
+    segments: int
+    csr_entries: int
+    csr_segments: int
+    csr_bytes: int                 # padded CSR slab bytes (0 when none)
+    src_bucket: int                # padded edge-slab width
+    extras: Any = None             # cached post-hoist prepare outputs
+
+
+@dataclass
+class _PlanUnit:
+    """One wave mid-planning: the assembled slab plus its *raw* prepare
+    outputs, so :meth:`StreamingPlan._fit_unified` can re-derive the
+    shared extras shapes after any split without re-running prepare."""
+
+    slab: _WaveSlab
+    dev_extras: list | None = None   # mesh: per-device raw prepare outputs
+    raw_extras: Any = None           # single device: the wave's raw outputs
+    base_staged: int = 0             # staged bytes excluding extras
+    base_ws: int = 0
+    prep_ws: int = 0                 # prepare-declared share of base_ws
+
+    @classmethod
+    def of_single(cls, slab: _WaveSlab) -> "_PlanUnit":
+        return cls(
+            slab=slab, raw_extras=slab.extras,
+            base_staged=slab.staged_bytes - tree_array_bytes(slab.extras),
+            base_ws=slab.workspace_bytes, prep_ws=slab.prep_ws,
+        )
 
 
 def _is_array_leaf(leaf: Any) -> bool:
@@ -443,6 +683,9 @@ def _block_tree(tree: Any) -> None:
             leaf.block_until_ready()
 
 
+_ABSENT = object()
+
+
 # ----------------------------------------------------------------------
 class StreamingPlan:
     """A compiled plan whose execution streams budget-sized waves.
@@ -450,10 +693,11 @@ class StreamingPlan:
     Produced by ``compile_plan(alg, store, memory_budget=...)``.  Same
     ``run()`` contract as :class:`~repro.core.engine.Plan` (hooks, post,
     iteration control, RunResult), but the per-iteration step is the
-    double-buffered wave loop described in the module docstring, and
-    ``schedule_stats`` additionally carries a ``"streaming"`` dict:
+    three-stage pipelined wave loop described in the module docstring,
+    and ``schedule_stats`` additionally carries a ``"streaming"`` dict:
     wave count, bytes staged per wave (each ≤ budget), resident bytes,
-    and overlap efficiency.
+    per-phase wall clock, trace count, arena bytes, and the measured
+    overlap efficiencies.
     """
 
     def __init__(self, alg: BlockAlgorithm, store: BlockStore,
@@ -462,7 +706,8 @@ class StreamingPlan:
                  backend: str = "xla", num_devices: int = 1,
                  mode: str = "hybrid", tile_dim: int = 512,
                  dense_frac: float = 0.5, dense_density: float = 0.005,
-                 rebalance_threshold: float | None = None,
+                 rebalance_threshold: float | str | None = "auto",
+                 pipeline_depth: int = PIPELINE_DEPTH,
                  share: bool = True, mesh: Mesh | None = None) -> None:
         from ..kernels.registry import resolve_backend
 
@@ -496,13 +741,34 @@ class StreamingPlan:
         else:
             self.mesh_axis = None
             self._mesh_devices = 1
+        if not (rebalance_threshold is None
+                or rebalance_threshold == "auto"
+                or isinstance(rebalance_threshold, (int, float))):
+            raise ValueError(
+                "rebalance_threshold must be 'auto' (default: deterministic "
+                "estimate-vs-observed divergence trigger), a float (legacy "
+                "compute-skew threshold), or None (off); got "
+                f"{rebalance_threshold!r}"
+            )
         self.rebalance_threshold = rebalance_threshold
+        self.pipeline_depth = max(int(pipeline_depth), 0)
         self.schedule = schedule or build_schedule(
             alg, store, num_devices=max(num_devices, self._mesh_devices),
             mode=mode, tile_dim=tile_dim, dense_frac=dense_frac,
             dense_density=dense_density, memory_budget=self.budget,
         )
         self.host = build_host_ctx(store, self.schedule, backend=self.backend)
+        # the cross-wave staging plan: shape-driving prepare decisions
+        # (TC's bucket ladder) made once against the FULL schedule
+        self._plan_state = (
+            alg.stage_plan(store, self.schedule)
+            if alg.stage_plan is not None else None
+        )
+        self._phase = dict(assemble=0.0, prepare=0.0, device_put=0.0,
+                           compute=0.0, collective=0.0)
+        self._arena = _HostArena()
+        self._arena_deferred: list[tuple] = []
+        self._pipe: _StagePipeline | None = None
 
         self._footprints = task_footprints(
             store, self.schedule,
@@ -511,10 +777,10 @@ class StreamingPlan:
         )
         waves = build_waves(store, self.schedule, self.budget,
                             self._footprints, devices=self._mesh_devices)
-        self._slabs = (
-            self._build_slabs_mesh(waves) if mesh is not None
-            else self._build_slabs(waves)
-        )
+        self._slabs = self._plan_recipes(waves, initial=True)
+        # the one-time planning pass's host cost (per-wave prepare),
+        # reported separately from the per-run phase deltas
+        self._planning_phase = dict(self._phase)
         self._resident = self._build_resident_context()
         self._step = _stream_step_for(alg, self.backend, share=share)
         self._mesh_step = (
@@ -523,7 +789,10 @@ class StreamingPlan:
         self._post = _post_step_for(alg, self.backend, share=share)
         self._calibration: dict | None = None
         self._collective_bytes = 0      # payload across mesh combines
+        self._collective_unit_s = 0.0   # isolated all-reduce estimate
         self._bytes_staged = 0          # actual H2D traffic, all passes
+        self._stall_s = 0.0             # main loop blocked on the queue
+        self._assemble_overlapped_s = 0.0
         self._edge_free = int(alg.metadata.get("edge_free_iterations", 0))
         self._edge_free_bufs: dict | None = None
         # first-k-neighbors CSR for the edge-free sampling phase: the
@@ -534,44 +803,183 @@ class StreamingPlan:
         )
         self._prefix_dev: dict | None = None
         self._rebalanced = False
+        self._reb_armed = True
         self._last_skew: float | None = None
+        self._last_divergence: float | None = None
         self.schedule.stats["waves"] = len(self._slabs)
 
-    # -- build side ----------------------------------------------------
-    def _build_slabs(self, waves: list[Wave]) -> list[_WaveSlab]:
-        """Assemble host slabs; split any wave whose *actual* staged
-        bytes overflow the budget (model under-priced prepare extras).
+    # -- build side (planning pass) ------------------------------------
+    def _plan_recipes(self, waves: list[Wave], *,
+                      initial: bool = False) -> list[_WaveRecipe]:
+        """Assemble each wave once, decide hoisting (first build only),
+        unify extras shapes across waves, verify/split against the
+        budget, and retain only the recipes.
 
-        Wave-invariant extras are hoisted resident *before* the budget
-        check — they are staged once, not per wave, so counting them
-        per wave would spuriously reject (or over-split) workable
-        budgets."""
-        slabs = [self._assemble(w) for w in waves]
-        self._decide_hoist(slabs)
-        return self._fit_slabs(slabs)
+        Any wave whose *actual* staged bytes overflow the budget (model
+        under-priced prepare extras, bucket padding) is split.  Wave-
+        invariant extras are hoisted resident *before* the budget check
+        — they are staged once, not per wave, so counting them per wave
+        would spuriously reject (or over-split) workable budgets."""
+        if self.mesh is not None:
+            units = [self._make_unit(w) for w in waves]
+            if initial:
+                self._resident_extras: dict = {}
+                self._hoisted = False
+                trees = [e for u in units for e in u.dev_extras]
+                if trees and all(_trees_equal(e, trees[0])
+                                 for e in trees[1:]):
+                    # device- and wave-invariant prepare outputs
+                    # (PageRank's inv_deg, ...) are staged once,
+                    # replicated over the mesh
+                    self._resident_extras = trees[0]
+                    self._hoisted = True
+            if self._hoisted or self.alg.mesh_pack is None:
+                slabs = [self._finalize_mesh_extras(u.slab, u.dev_extras)
+                         for u in units]
+                slabs = self._fit_slabs(slabs)
+            else:
+                slabs = self._fit_unified(units)
+        else:
+            slabs = [self._assemble(w) for w in waves]
+            if initial:
+                self._decide_hoist(slabs)
+            else:
+                # re-pack rebuild: the hoist decision stands (the
+                # resident context already carries the hoisted extras)
+                for s in slabs:
+                    self._strip_hoisted(s)
+            if self._hoisted or self.alg.mesh_pack is None:
+                slabs = self._fit_slabs(slabs)
+            else:
+                slabs = self._fit_unified(
+                    [_PlanUnit.of_single(s) for s in slabs]
+                )
+        return [self._recipe(s) for s in slabs]
 
-    def _build_slabs_mesh(self, waves: list[Wave]) -> list[_WaveSlab]:
-        """Mesh counterpart of :meth:`_build_slabs`: assemble per-device
-        slabs for every wave, decide extras hoisting across devices AND
-        waves, then verify each wave's *per-device* bytes against the
-        per-device budget."""
-        pairs = [self._assemble_mesh(w) for w in waves]
-        self._resident_extras = {}
-        self._hoisted = False
-        trees = [e for _, lst in pairs for e in lst]
-        if trees and all(_trees_equal(e, trees[0]) for e in trees[1:]):
-            # device- and wave-invariant prepare outputs (PageRank's
-            # inv_deg, ...) are staged once, replicated over the mesh
-            self._resident_extras = trees[0]
-            self._hoisted = True
-        slabs = [self._finalize_mesh_extras(s, lst) for s, lst in pairs]
-        return self._fit_slabs(slabs)
+    def _make_unit(self, wave: Wave) -> "_PlanUnit":
+        """Assemble one wave into a planning unit (raw extras kept)."""
+        if self.mesh is not None:
+            slab, lst = self._assemble_mesh(wave)
+            return _PlanUnit(slab=slab, dev_extras=lst,
+                             base_staged=slab.staged_bytes,
+                             base_ws=slab.workspace_bytes,
+                             prep_ws=slab.prep_ws)
+        slab = self._assemble(wave)
+        self._strip_hoisted(slab)
+        return _PlanUnit.of_single(slab)
 
-    def _rebuild_slabs(self, waves: list[Wave]) -> list[_WaveSlab]:
-        """Re-assemble after a re-pack, keeping the original hoist
-        decision (the resident context already carries the hoisted
-        extras)."""
-        return self._fit_slabs([self._reassemble(w) for w in waves])
+    def _fit_unified(self, units: list["_PlanUnit"]) -> list[_WaveSlab]:
+        """Cross-wave shape cache + budget fit, to fixpoint.
+
+        Every wave's ``prepare`` outputs are padded to one shared shape
+        set via the algorithm's ``mesh_pack`` — it already solves
+        exactly this problem for per-device outputs (unify
+        data-dependent structures like TC's bucket ladder with
+        kernel-neutral padding, array leaves gaining a leading axis);
+        treating the *waves* (× devices, under a mesh) as that axis
+        makes every wave's extras structurally identical, so the jitted
+        step traces once per distinct slab shape instead of once per
+        wave.  Because padding can push a unified slab over the budget,
+        the loop verifies the *unified* bytes, splits any offender, and
+        re-unifies the new wave set (smaller waves shrink the shared
+        caps) until every wave fits.  When even a single-task wave
+        cannot afford the shared caps (very tight budgets), unification
+        is abandoned for the whole plan — per-wave shapes cost extra
+        jit traces but keep the ≤ budget invariant without refusing a
+        runnable workload."""
+        d = self._mesh_devices
+        while True:
+            slabs = [u.slab for u in units]
+            if self.mesh is not None:
+                flat = [e for u in units for e in u.dev_extras]
+                packed = _to_host(self.alg.mesh_pack(flat))
+
+                def sliced(w):
+                    return jax.tree_util.tree_map(
+                        lambda leaf: (leaf[w * d: (w + 1) * d]
+                                      if _is_array_leaf(leaf) else leaf),
+                        packed,
+                    )
+            else:
+                packed = _to_host(
+                    self.alg.mesh_pack([u.raw_extras for u in units])
+                )
+
+                def sliced(w):
+                    return jax.tree_util.tree_map(
+                        lambda leaf: (leaf[w] if _is_array_leaf(leaf)
+                                      else leaf),
+                        packed,
+                    )
+            # uniform shapes → uniform device scratch.  mesh_pack may
+            # re-declare the prepare scratch for the *unified* shapes
+            # (every wave now runs every bucket at the padded cap — the
+            # per-wave pre-unification declarations can under-count
+            # when different waves define different buckets' caps);
+            # the dense-path share stays the per-wave max.
+            ws_decl = None
+            if isinstance(packed, dict):
+                ws_decl = packed.pop("__workspace_bytes__", None)
+            if ws_decl is not None:
+                ws = (max(u.base_ws - u.prep_ws for u in units)
+                      + int(ws_decl))
+            else:
+                ws = max(u.base_ws for u in units)
+            for w, u in enumerate(units):
+                u.slab.extras = sliced(w)
+                u.slab.staged_bytes = (
+                    u.base_staged + tree_array_bytes(u.slab.extras)
+                )
+                u.slab.workspace_bytes = ws
+                if self.mesh is not None:
+                    u.slab.per_device_bytes = -(-u.slab.staged_bytes // d)
+            over = {
+                w for w, u in enumerate(units)
+                if self._budget_load(u.slab) > self.budget.total_bytes
+            }
+            if not over:
+                return slabs
+            try:
+                rebuilt: list[_PlanUnit] = []
+                for w, u in enumerate(units):
+                    if w in over:
+                        a, b = split_wave(u.slab.wave, self.schedule,
+                                          self._footprints)
+                        rebuilt += [self._make_unit(a), self._make_unit(b)]
+                    else:
+                        rebuilt.append(u)
+                units = rebuilt
+            except ValueError:
+                # a single-task wave cannot afford the shared caps:
+                # fall back to raw per-wave shapes for the whole plan
+                return self._fit_slabs(
+                    [self._restore_raw(u) for u in units]
+                )
+
+    def _restore_raw(self, u: "_PlanUnit") -> _WaveSlab:
+        """Undo shape unification on one planning unit."""
+        slab = u.slab
+        slab.workspace_bytes = u.base_ws
+        if self.mesh is not None:
+            slab.staged_bytes = u.base_staged
+            slab.extras = None
+            return self._finalize_mesh_extras(slab, u.dev_extras)
+        slab.extras = u.raw_extras
+        slab.staged_bytes = u.base_staged + tree_array_bytes(u.raw_extras)
+        return slab
+
+    def _recipe(self, slab: _WaveSlab) -> _WaveRecipe:
+        return _WaveRecipe(
+            wave=slab.wave, run_dense=slab.run_dense,
+            staged_bytes=slab.staged_bytes,
+            workspace_bytes=slab.workspace_bytes,
+            per_device_bytes=slab.per_device_bytes,
+            edges=slab.edges, segments=slab.segments,
+            csr_entries=slab.csr_entries, csr_segments=slab.csr_segments,
+            csr_bytes=slab.csr.nbytes if slab.csr is not None else 0,
+            src_bucket=int(slab.src.shape[-1]),
+            extras=slab.extras,
+        )
 
     def _reassemble(self, wave: Wave) -> _WaveSlab:
         """One wave → finished slab, honoring the standing hoist
@@ -606,8 +1014,38 @@ class StreamingPlan:
             out.append(slab)
         return out
 
-    def _assemble(self, wave: Wave) -> _WaveSlab:
+    def _assemble_runtime(self, recipe: _WaveRecipe) -> _WaveSlab:
+        """Stage-1 body: reproduce one wave's slab into arena buffers.
+
+        Pure gathers — ``prepare`` ran in the planning pass and its
+        (post-hoist) outputs are cached on the recipe, so the worker
+        thread never touches jax or the algorithm.  Byte accounting is
+        pinned to the recipe's planned numbers (they are equal by
+        construction; pinning keeps the stats deterministic)."""
+        if self.mesh is not None:
+            slab, _ = self._assemble_mesh(recipe.wave, extras=recipe.extras,
+                                          alloc=self._arena.take)
+        else:
+            slab = self._assemble(recipe.wave, extras=recipe.extras,
+                                  alloc=self._arena.take)
+        slab.staged_bytes = recipe.staged_bytes
+        slab.workspace_bytes = recipe.workspace_bytes
+        slab.per_device_bytes = recipe.per_device_bytes
+        return slab
+
+    def _assemble(self, wave: Wave, *, extras: Any = _ABSENT,
+                  alloc=None) -> _WaveSlab:
+        """Assemble one wave's padded host slab.
+
+        Planning mode (``extras`` absent): build the wave-local store
+        view, run the algorithm's ``prepare`` against it (timed into
+        the ``prepare`` phase), and measure the staged bytes.  Runtime
+        mode (``extras`` given — the recipe's cached outputs, possibly
+        ``None`` after hoisting): gathers only, drawn from ``alloc``
+        (the staging arena)."""
         store, sched = self.store, self.schedule
+        zeros = alloc if alloc is not None else np.zeros
+        planning = extras is _ABSENT
         wsched = sched.restrict(wave.task_ids)
         blocks = np.unique(wsched.blocklists)
         segments = store.edge_segments(blocks)
@@ -618,11 +1056,12 @@ class StreamingPlan:
         )
         ne = int(idx.size)
         eb = bucket_size(ne)
-        src = np.zeros(eb, np.int32)
-        dst = np.zeros(eb, np.int32)
-        edge_block = np.zeros(eb, np.int32)
-        sparse_mask = np.zeros(eb, bool)
-        dense_mask = np.zeros(eb, bool)
+        src = zeros(eb, np.int32)
+        dst = zeros(eb, np.int32)
+        edge_block = zeros(eb, np.int32)
+        sparse_mask = zeros(eb, bool)
+        dense_mask = zeros(eb, bool)
+        arena_arrays = [src, dst, edge_block, sparse_mask, dense_mask]
         if ne:
             src[:ne] = store.src[idx]
             dst[:ne] = store.dst[idx]
@@ -646,18 +1085,20 @@ class StreamingPlan:
             nd = sub.shape[0]
             tb = bucket_size(nd, minimum=1)
             t = sched.tile_dim
-            tiles = np.zeros((tb, t, t), np.float32)
+            tiles = zeros((tb, t, t), np.float32)
             tiles[:nd] = sub
-            trs = np.zeros(tb, np.int64)
+            trs = zeros(tb, np.int64)
             trs[:nd] = sub_rs
-            tcs = np.zeros(tb, np.int64)
+            tcs = zeros(tb, np.int64)
             tcs[:nd] = sub_cs
-            wstore = dc_replace(
-                store, tile_dim=t,
-                tile_block_ids=wsched.dense_block_ids.astype(np.int32),
-                tiles=sub, tile_row_start=sub_rs, tile_col_start=sub_cs,
-            )
-        elif self.alg.prepare is not None:
+            arena_arrays += [tiles, trs, tcs]
+            if planning and self.alg.prepare is not None:
+                wstore = dc_replace(
+                    store, tile_dim=t,
+                    tile_block_ids=wsched.dense_block_ids.astype(np.int32),
+                    tiles=sub, tile_row_start=sub_rs, tile_col_start=sub_cs,
+                )
+        elif planning and self.alg.prepare is not None:
             # prepare must not see tiles the wave does not stage
             wstore = dc_replace(
                 store, tile_dim=0,
@@ -675,9 +1116,10 @@ class StreamingPlan:
             csr_entries = int(sl_idx.size)
             csr_segments = len(csr_segs)
             cb = bucket_size(csr_entries)
-            csr = np.zeros(cb, np.int32)
+            csr = zeros(cb, np.int32)
             csr[:csr_entries] = sl_idx
-            if self.alg.prepare is not None:
+            arena_arrays.append(csr)
+            if planning and self.alg.prepare is not None:
                 # prepare sees the wave-local CSR view: positions it
                 # computes from row_block_ptr index the staged slice
                 wstore = dc_replace(
@@ -685,14 +1127,17 @@ class StreamingPlan:
                     indptr=indptr_r,
                 )
 
-        extras = (
-            _to_host(self.alg.prepare(wstore, wsched))
-            if self.alg.prepare is not None else {}
-        )
-        # prepare may declare additional device scratch (e.g. TC's
-        # bucketed membership-test gather) under the reserved key; it
-        # is a budget input, not a kernel input
-        ws = int(extras.pop("__workspace_bytes__", 0))
+        ws = prep_ws = 0
+        if planning:
+            t0 = time.perf_counter()
+            extras = _to_host(
+                self.alg.run_prepare(wstore, wsched, self._plan_state)
+            )
+            self._phase["prepare"] += time.perf_counter() - t0
+            # prepare may declare additional device scratch (e.g. TC's
+            # bucketed membership-test gather) under the reserved key;
+            # it is a budget input, not a kernel input
+            ws = prep_ws = int(extras.pop("__workspace_bytes__", 0))
 
         staged = (
             src.nbytes + dst.nbytes + edge_block.nbytes
@@ -703,12 +1148,15 @@ class StreamingPlan:
             staged += csr.nbytes
         if tiles is not None:
             staged += tiles.nbytes + trs.nbytes + tcs.nbytes
-            from ..kernels.registry import max_workspace_bytes, workspace_bytes
+            if planning:
+                from ..kernels.registry import (
+                    max_workspace_bytes, workspace_bytes,
+                )
 
-            wk = self.alg.metadata.get("workspace_kernel")
-            hints = dict(nd=int(tiles.shape[0]), tile_dim=sched.tile_dim)
-            ws += (workspace_bytes(wk, **hints) if wk is not None
-                   else max_workspace_bytes(**hints))
+                wk = self.alg.metadata.get("workspace_kernel")
+                hints = dict(nd=int(tiles.shape[0]), tile_dim=sched.tile_dim)
+                ws += (workspace_bytes(wk, **hints) if wk is not None
+                       else max_workspace_bytes(**hints))
         return _WaveSlab(
             wave=wave, src=src, dst=dst, edge_block=edge_block,
             sparse_mask=sparse_mask, dense_mask=dense_mask,
@@ -717,9 +1165,12 @@ class StreamingPlan:
             staged_bytes=int(staged), workspace_bytes=int(ws),
             edges=ne, segments=len(segments),
             csr_entries=csr_entries, csr_segments=csr_segments,
+            arena_arrays=tuple(arena_arrays) if alloc is not None else (),
+            prep_ws=int(prep_ws),
         )
 
-    def _assemble_mesh(self, wave: Wave) -> tuple[_WaveSlab, list]:
+    def _assemble_mesh(self, wave: Wave, *, extras: Any = _ABSENT,
+                       alloc=None) -> tuple[_WaveSlab, list]:
         """Assemble one wave as padded per-device slabs ``[D, …]``.
 
         The wave's tasks are LPT-split over the mesh
@@ -730,21 +1181,25 @@ class StreamingPlan:
         waves share a few slab shapes), dense tiles are per-device
         subsets zero-padded to the wave's tile bucket (zero tiles are
         neutral for every shipped kernel: no set bits → no contribution),
-        and ``prepare`` runs once per device against a device-local
-        store view — device-rebased CSR maps, device tile subset — so
-        host-computed positions index that device's staged slice.
+        and — in the planning pass — ``prepare`` runs once per device
+        against a device-local store view (device-rebased CSR maps,
+        device tile subset) so host-computed positions index that
+        device's staged slice.  Runtime re-assembly (``extras`` given)
+        skips prepare and attaches the recipe's cached stacked extras.
 
-        Returns the slab (extras unset) plus the per-device prepare
-        outputs; :meth:`_finalize_mesh_extras` hoists or stacks them.
+        Returns the slab plus the per-device prepare outputs (planning
+        only); :meth:`_finalize_mesh_extras` hoists or stacks them.
         """
         store, sched = self.store, self.schedule
+        zeros = alloc if alloc is not None else np.zeros
+        planning = extras is _ABSENT
         d = self._mesh_devices
         t = sched.tile_dim
         wsched = sched.restrict(wave.task_ids)
         assign = wsched.partition_tasks(d)
         part = make_device_edge_partition(
             store, wsched, assignment=assign, num_devices=d, bucket=True,
-            stage_csr=self._csr_mode == "slice",
+            stage_csr=self._csr_mode == "slice", alloc=alloc,
         )
         src, dst = part["src"], part["dst"]
         edge_block, valid = part["edge_block"], part["valid"]
@@ -754,6 +1209,7 @@ class StreamingPlan:
         edense = dense_blocks[edge_block] & valid
         sparse_mask = valid & ~edense
         dense_mask = edense
+        arena_arrays = [src, dst, edge_block, valid]
         run_dense = (
             self.alg.kernel_dense is not None
             and bool(wsched.dense_task_mask.any())
@@ -771,9 +1227,10 @@ class StreamingPlan:
         if run_dense:
             nds = [int(ds.dense_block_ids.size) for ds in dev_scheds]
             tb = bucket_size(max(nds), minimum=1)
-            tiles = np.zeros((d, tb, t, t), np.float32)
-            trs = np.zeros((d, tb), np.int64)
-            tcs = np.zeros((d, tb), np.int64)
+            tiles = zeros((d, tb, t, t), np.float32)
+            trs = zeros((d, tb), np.int64)
+            tcs = zeros((d, tb), np.int64)
+            arena_arrays += [tiles, trs, tcs]
             for i, ds in enumerate(dev_scheds):
                 if ds.dense_block_ids.size:
                     dev_subs[i] = store.tile_subset(ds.dense_block_ids)
@@ -783,9 +1240,10 @@ class StreamingPlan:
                     tcs[i, : sub.shape[0]] = sub_cs
 
         # -- per-device prepare against device-local store views -------
-        ws = 0
+        ws = prep_ws = 0
         extras_list: list = []
-        if self.alg.prepare is not None:
+        if planning and self.alg.prepare is not None:
+            t_prep = time.perf_counter()
             for i, ds in enumerate(dev_scheds):
                 if run_dense:
                     sub, sub_rs, sub_cs = dev_subs[i]
@@ -810,13 +1268,17 @@ class StreamingPlan:
                         wstore, indices=sl, row_block_ptr=rbp_i,
                         indptr=indptr_i,
                     )
-                extras = _to_host(self.alg.prepare(wstore, ds))
-                ws = max(ws, int(extras.pop("__workspace_bytes__", 0)))
-                extras_list.append(extras)
-        else:
+                dev_extras = _to_host(
+                    self.alg.run_prepare(wstore, ds, self._plan_state)
+                )
+                ws = max(ws, int(dev_extras.pop("__workspace_bytes__", 0)))
+                extras_list.append(dev_extras)
+            prep_ws = ws
+            self._phase["prepare"] += time.perf_counter() - t_prep
+        elif planning:
             extras_list = [{} for _ in range(d)]
 
-        if run_dense:
+        if planning and run_dense:
             from ..kernels.registry import max_workspace_bytes, workspace_bytes
 
             wk = self.alg.metadata.get("workspace_kernel")
@@ -825,6 +1287,8 @@ class StreamingPlan:
                    else max_workspace_bytes(**hints))
 
         csr = part.get("indices")
+        if csr is not None and alloc is not None:
+            arena_arrays.append(csr)
         staged = (
             src.nbytes + dst.nbytes + edge_block.nbytes
             + sparse_mask.nbytes + dense_mask.nbytes
@@ -837,12 +1301,15 @@ class StreamingPlan:
             wave=wave, src=src, dst=dst, edge_block=edge_block,
             sparse_mask=sparse_mask, dense_mask=dense_mask,
             tiles=tiles, tile_row_start=trs, tile_col_start=tcs,
-            csr=csr, extras=None, run_dense=run_dense,
+            csr=csr, extras=None if planning else extras,
+            run_dense=run_dense,
             staged_bytes=int(staged), workspace_bytes=int(ws),
             edges=int(sum(part["edges"])),
             segments=int(sum(part["segments"])),
             csr_entries=int(sum(part.get("csr_entries", []))),
             csr_segments=int(sum(part.get("csr_segments", []))),
+            arena_arrays=tuple(arena_arrays) if alloc is not None else (),
+            prep_ws=int(prep_ws),
         )
         return slab, extras_list
 
@@ -856,6 +1323,14 @@ class StreamingPlan:
             slab.extras = None
         else:
             slab.extras = self._stack_extras(extras_list)
+            if (isinstance(slab.extras, dict)
+                    and "__workspace_bytes__" in slab.extras):
+                # mesh_pack re-declared the prepare scratch for the
+                # stacked (per-device padded) shapes — swap it in for
+                # the per-device pre-pack declaration
+                decl = int(slab.extras.pop("__workspace_bytes__"))
+                slab.workspace_bytes += decl - slab.prep_ws
+                slab.prep_ws = decl
             slab.staged_bytes += tree_array_bytes(slab.extras)
         slab.per_device_bytes = -(-slab.staged_bytes // self._mesh_devices)
         return slab
@@ -977,33 +1452,83 @@ class StreamingPlan:
     def num_waves(self) -> int:
         return len(self._slabs)
 
+    def _estimate_shares(self) -> np.ndarray:
+        """Each wave's share of the schedule's total weight — the
+        estimate the auto-rebalance trigger diverges against."""
+        w = np.asarray([
+            float(self.schedule.weights[s.wave.task_ids].sum())
+            for s in self._slabs
+        ])
+        tot = w.sum()
+        return w / tot if tot > 0 else np.full(w.shape, 1.0 / max(w.size, 1))
+
     def rebalance(self, wave_compute_s) -> bool:
         """Re-pack the wave queue against observed per-wave compute times.
 
-        The paper's dynamic work queue at wave granularity: when the
-        measured compute skew (max/mean over ``wave_compute_s``, one
-        entry per current wave) exceeds ``rebalance_threshold``, each
-        wave's time is attributed to its tasks proportionally to their
-        schedule weights and the whole queue is re-packed LPT against
-        those observed times (:func:`repro.core.membudget.repack_waves`)
-        — still under the byte budget.  Later iterations run the
-        re-packed waves; per-wave partial folding makes any task
-        partition produce the identical combined state, so results are
-        unchanged.  Called automatically after the calibration pass
-        when ``rebalance_threshold`` is set; returns True when a
-        re-pack happened.  At most one re-pack per plan.
+        The paper's dynamic work queue at wave granularity, evaluated
+        automatically after the calibration pass.  Trigger modes (see
+        ``rebalance_threshold``):
+
+        * ``"auto"`` (default) — deterministic estimate-vs-observed
+          divergence with hysteresis: each wave's observed compute
+          share is compared against its estimated share (schedule
+          weights); the re-pack fires when the worst ratio reaches
+          ``2.0`` and re-arms below ``1.5``.  Measurements below the
+          noise floor (mean wave < 10 ms) never fire — dispatch jitter
+          at that scale would make the staged-byte accounting
+          nondeterministic.
+        * float — legacy skew trigger: fire when max/mean of
+          ``wave_compute_s`` exceeds the threshold.
+        * ``None`` — off.
+
+        On fire, each wave's time is attributed to its tasks
+        proportionally to their schedule weights and the whole queue is
+        re-packed LPT against those observed times
+        (:func:`repro.core.membudget.repack_waves`) — still under the
+        byte budget (re-verified per assembled wave).  Later iterations
+        run the re-packed waves; per-wave partial folding makes any
+        task partition produce the identical combined state, so results
+        are unchanged.  Returns True when a re-pack happened.  The
+        automatic path fires at most once per plan (a fire disarms the
+        trigger, and the post-re-pack recalibration only re-arms it —
+        never re-fires); callers feeding fresh timings through this
+        method directly can fire again once an evaluation re-armed the
+        latch.  The legacy float trigger stays strictly one-shot.
         """
         times = np.asarray(wave_compute_s, dtype=np.float64)
-        if (self._rebalanced or times.size != len(self._slabs)
-                or len(self._slabs) < 2):
+        if times.size != len(self._slabs) or len(self._slabs) < 2:
             return False
         mean = float(times.mean())
         if mean <= 0.0:
             return False
         self._last_skew = float(times.max() / mean)
         thr = self.rebalance_threshold
-        if thr is None or self._last_skew <= thr:
+        if thr is None:
             return False
+        if thr == "auto":
+            est = self._estimate_shares()
+            est_skew = float(est.max() * est.size) if est.size else 1.0
+            self._last_divergence = self._last_skew / max(est_skew, 1.0)
+            if mean < _REBALANCE_NOISE_FLOOR_S:
+                return False            # noise-dominated: stand down
+            # the hysteresis latch: a fire disarms the trigger, and the
+            # post-re-pack recalibration re-evaluates here — a queue
+            # that is still diverged (≥ LO) stays disarmed rather than
+            # thrashing through another re-pack; only once an
+            # evaluation sees divergence back under LO does the trigger
+            # re-arm (relevant to callers feeding rebalance() fresh
+            # timings per run — the automatic path fires at most once)
+            if self._last_divergence < _REBALANCE_LO:
+                self._reb_armed = True
+                return False
+            if not self._reb_armed or self._last_divergence < _REBALANCE_HI:
+                return False            # inside the band, or disarmed
+            self._reb_armed = False
+        else:
+            if self._rebalanced:
+                return False            # legacy float trigger: one-shot
+            if self._last_skew <= float(thr):
+                return False
         task_t = np.zeros(self.schedule.num_tasks, dtype=np.float64)
         for t_w, slab in zip(times, self._slabs):
             ids = slab.wave.task_ids
@@ -1013,7 +1538,7 @@ class StreamingPlan:
         new_waves = repack_waves(self.schedule, self.budget,
                                  self._footprints, task_t,
                                  devices=self._mesh_devices)
-        self._slabs = self._rebuild_slabs(new_waves)
+        self._slabs = self._plan_recipes(new_waves)
         self._edge_free_bufs = None     # stale slab-0 reference
         self._rebalanced = True
         self.schedule.stats["waves"] = len(self._slabs)
@@ -1024,17 +1549,41 @@ class StreamingPlan:
         return (self._mesh_step.traces if self._mesh_step is not None
                 else self._step.traces)
 
-    def _stage(self, w: int):
-        """One host→device copy of wave ``w``'s preassembled slab.
+    # -- arena recycling ------------------------------------------------
+    # ``jax.device_put`` of a numpy array may alias the host memory
+    # instead of copying (CPU zero-copy), so a slab's arena buffers are
+    # only safe to reuse once the step that read them has COMPLETED —
+    # not merely been dispatched.  Each staged slab is parked with a
+    # probe leaf of its step's output; ``is_ready()`` (non-blocking)
+    # gates the hand-back, and a barrier point (iteration end, where
+    # ``_block_tree`` already waits) force-drains the queue.
+    def _park_for_recycle(self, slab: _WaveSlab, acc) -> None:
+        if not slab.arena_arrays:
+            return
+        probe = next(
+            (leaf for leaf in jax.tree_util.tree_leaves(acc)
+             if hasattr(leaf, "is_ready")), None,
+        )
+        self._arena_deferred.append((probe, slab.arena_arrays))
+
+    def _drain_recycle(self, *, force: bool = False) -> None:
+        while self._arena_deferred:
+            probe, arrays = self._arena_deferred[0]
+            if not (force or probe is None or probe.is_ready()):
+                return
+            self._arena.give(*arrays)
+            self._arena_deferred.pop(0)
+
+    def _put_slab(self, slab: _WaveSlab):
+        """Stage 2: one host→device copy of an assembled wave slab.
 
         Single device: a dict of device buffers.  Mesh: the ``[D, …]``
         slabs are ``device_put`` with the block-axis sharding (one row
         per device) and the stacked extras travel as a tuple of sharded
-        leaves plus their hashable static aux — the double-buffered
-        loop overlaps exactly this transfer with the previous wave's
-        ``shard_map`` compute."""
-        slab = self._slabs[w]
+        leaves plus their hashable static aux — the pipeline overlaps
+        exactly this transfer with the previous wave's compute."""
         self._bytes_staged += slab.staged_bytes
+        t0 = time.perf_counter()
         arrays = dict(
             src=slab.src, dst=slab.dst, edge_block=slab.edge_block,
             sparse_edge_mask=slab.sparse_mask, dense_edge_mask=slab.dense_mask,
@@ -1048,17 +1597,19 @@ class StreamingPlan:
             bufs = jax.device_put(arrays)
             if slab.extras is not None:
                 bufs["extras"] = _put_arrays(slab.extras)
-            return bufs
-        shard = NamedSharding(self.mesh, PartitionSpec(self.mesh_axis))
-        bufs = jax.device_put(arrays, {k: shard for k in arrays})
-        if slab.extras is not None:
-            ex_leaves, ex_aux = _split_static(slab.extras)
-            ex_leaves = tuple(
-                jax.device_put(leaf, shard) for leaf in ex_leaves
-            )
         else:
-            ex_leaves, ex_aux = (), None
-        return (bufs, ex_leaves, ex_aux)
+            shard = NamedSharding(self.mesh, PartitionSpec(self.mesh_axis))
+            slab_bufs = jax.device_put(arrays, {k: shard for k in arrays})
+            if slab.extras is not None:
+                ex_leaves, ex_aux = _split_static(slab.extras)
+                ex_leaves = tuple(
+                    jax.device_put(leaf, shard) for leaf in ex_leaves
+                )
+            else:
+                ex_leaves, ex_aux = (), None
+            bufs = (slab_bufs, ex_leaves, ex_aux)
+        self._phase["device_put"] += time.perf_counter() - t0
+        return bufs
 
     def _wave_context(self, bufs: dict) -> Context:
         arrays = {k: v for k, v in bufs.items() if k != "extras"}
@@ -1068,26 +1619,115 @@ class StreamingPlan:
         return with_arrays(self._resident, **arrays)
 
     def _step_wave(self, w: int, bufs, state0, acc, iarr):
-        """Dispatch one staged wave into the right jitted step."""
-        slab = self._slabs[w]
+        """Stage 3: dispatch one staged wave into the right jitted step."""
+        run_dense = self._slabs[w].run_dense
         if self.mesh is None:
             return self._step(self._wave_context(bufs), state0, acc, iarr,
-                              slab.run_dense)
+                              run_dense)
         slab_bufs, ex_leaves, ex_aux = bufs
         out = self._mesh_step(self._resident, slab_bufs, ex_leaves, state0,
-                              acc, iarr, slab.run_dense, ex_aux)
+                              acc, iarr, run_dense, ex_aux)
         # per-device collective payload: each combined leaf crosses one
         # all-reduce per wave step (trace-time combined_keys is exact)
         self._collective_bytes += sum(
             int(state0[k].nbytes) for k in self._mesh_step.combined_keys
             if hasattr(state0[k], "nbytes")
         )
+        self._phase["collective"] += self._collective_unit_s
         return out
 
+    def _measure_collective_unit(self, state0) -> None:
+        """Estimate one wave step's collective cost: an isolated, jitted
+        all-reduce of the combined state leaves across the mesh, timed
+        after a warm-up call.  The real collective is fused inside the
+        ``shard_map`` step, so this is the attributable stand-in the
+        phase breakdown reports (× wave steps executed)."""
+        keys = self._mesh_step.combined_keys if self._mesh_step else ()
+        if self.mesh is None or not keys:
+            return
+        axis = self.mesh_axis
+        tree = {k: state0[k] for k in keys if hasattr(state0[k], "nbytes")}
+        if not tree:
+            return
+
+        def allreduce(t):
+            return shard_map(
+                lambda x: jax.tree_util.tree_map(combine_fn("add", axis), x),
+                mesh=self.mesh,
+                in_specs=(PartitionSpec(),), out_specs=PartitionSpec(),
+                check_rep=False,
+            )(t)
+
+        fn = jax.jit(allreduce)
+        _block_tree(fn(tree))           # compile
+        t0 = time.perf_counter()
+        _block_tree(fn(tree))
+        self._collective_unit_s = time.perf_counter() - t0
+
+    def _calibrate(self, state0, acc, iarr, it: int):
+        """The synchronous first iteration: trace every distinct wave
+        shape (warm-up, result discarded), then time each phase —
+        assemble / device_put / compute — per wave, so the overlap and
+        phase statistics measure steady state rather than compilation."""
+        nw = len(self._slabs)
+        warm = state0
+        for w in range(nw):
+            t0 = time.perf_counter()
+            slab = self._assemble_runtime(self._slabs[w])
+            self._phase["assemble"] += time.perf_counter() - t0
+            warm = self._step_wave(w, self._put_slab(slab), state0, warm,
+                                   iarr)
+            self._park_for_recycle(slab, warm)
+            # keep the pool at its (depth+1)-slab bound even here: on a
+            # caught-up device the previous wave's buffers are already
+            # reusable
+            self._drain_recycle()
+        _block_tree(warm)
+        self._drain_recycle(force=True)
+        if self.mesh is not None and self._collective_unit_s == 0.0:
+            self._measure_collective_unit(state0)
+        assemble_s = put_s = compute_s = 0.0
+        wave_s: list[float] = []
+        for w in range(nw):
+            t0 = time.perf_counter()
+            slab = self._assemble_runtime(self._slabs[w])
+            dt = time.perf_counter() - t0
+            assemble_s += dt
+            put0 = self._phase["device_put"]
+            bufs = self._put_slab(slab)
+            _block_tree(bufs)
+            put_s += self._phase["device_put"] - put0
+            t0 = time.perf_counter()
+            acc = self._step_wave(w, bufs, state0, acc, iarr)
+            _block_tree(acc)
+            dt = time.perf_counter() - t0
+            compute_s += dt
+            wave_s.append(dt)
+            # the blocking wait above is the safe recycle point
+            self._arena.give(*slab.arena_arrays)
+        self._phase["assemble"] += assemble_s
+        self._phase["compute"] += compute_s
+        self._calibration = dict(
+            stage_s=assemble_s + put_s, compute_s=compute_s,
+            assemble_s=assemble_s, put_s=put_s, wave_compute_s=wave_s,
+        )
+        # a re-pack only pays off if another iteration will run it — on
+        # the final possible iteration it would rebuild (and report)
+        # slabs that never execute
+        if (self.rebalance_threshold is not None
+                and it + 1 < self.alg.max_iterations
+                and self.rebalance(wave_s)):
+            # the measured stage/compute baseline described the old
+            # packing — recalibrate on the next iteration so
+            # overlap_efficiency reflects the re-packed waves
+            # (at most once: rebalance() is one-shot per plan)
+            self._calibration = None
+        return acc
+
     def _run_waves(self, state0, it: int):
-        """One iteration's kernel work: stage + step every wave, folding
-        partials; calibration (synchronous, timed) on the first executed
-        iteration, double-buffered overlap afterwards."""
+        """One iteration's kernel work: the three-stage pipeline over
+        every wave, folding partials; calibration (synchronous, timed)
+        on the first executed iteration, pipelined overlap afterwards."""
         acc = state0
         nw = len(self._slabs)
         if nw == 0:
@@ -1122,7 +1762,11 @@ class StreamingPlan:
                 acc = self._step(ctx, state0, acc, iarr, False)
                 return acc, 0.0
             if self._edge_free_bufs is None:
-                self._edge_free_bufs = self._stage(0)
+                slab = self._assemble_runtime(self._slabs[0])
+                # the cached device bufs outlive this iteration (and may
+                # alias the host arrays), so these buffers never
+                # re-enter the arena — they free with the cache
+                self._edge_free_bufs = self._put_slab(slab)
             ctx = self._wave_context(self._edge_free_bufs)
             if self._prefix_dev is not None:
                 # adjacency sampling reads the first-k-neighbors CSR,
@@ -1134,54 +1778,69 @@ class StreamingPlan:
         self._edge_free_bufs = None     # release once edge work begins
         self._prefix_dev = None
         if self._calibration is None:
-            # warm-up pass: trace/compile every distinct wave shape with
-            # the result discarded, so the timed pass below measures
-            # steady-state compute — not compilation (which would
-            # otherwise saturate overlap_efficiency at 1.0)
-            warm = state0
-            for w in range(nw):
-                warm = self._step_wave(w, self._stage(w), state0, warm, iarr)
-            _block_tree(warm)
-            stage_s = compute_s = 0.0
-            wave_s: list[float] = []
-            for w in range(nw):
-                t0 = time.perf_counter()
-                bufs = self._stage(w)
-                _block_tree(bufs)
-                stage_s += time.perf_counter() - t0
-                t0 = time.perf_counter()
-                acc = self._step_wave(w, bufs, state0, acc, iarr)
-                _block_tree(acc)
-                dt = time.perf_counter() - t0
-                compute_s += dt
-                wave_s.append(dt)
-            self._calibration = dict(stage_s=stage_s, compute_s=compute_s,
-                                     wave_compute_s=wave_s)
-            # a re-pack only pays off if another iteration will run it —
-            # on the final possible iteration it would rebuild (and
-            # report) slabs that never execute
-            if (self.rebalance_threshold is not None
-                    and it + 1 < self.alg.max_iterations
-                    and self.rebalance(wave_s)):
-                # the measured stage/compute baseline described the old
-                # packing — recalibrate on the next iteration so
-                # overlap_efficiency reflects the re-packed waves
-                # (at most once: rebalance() is one-shot per plan)
-                self._calibration = None
-            return acc, 0.0
+            return self._calibrate(state0, acc, iarr, it), 0.0
         t0 = time.perf_counter()
-        bufs = self._stage(0)
+        put0 = self._phase["device_put"]
+        pipe = self._pipe
+        if pipe is None and self.pipeline_depth > 0:
+            # persistent worker, created at the first overlapped
+            # iteration; later iterations find their first waves
+            # already assembled (the epoch below is requested early)
+            pipe = self._pipe = _StagePipeline(self, self.pipeline_depth)
+            pipe.request(range(nw))
+        a0 = pipe.assemble_s if pipe is not None else 0.0
+        s0 = pipe.stall_s if pipe is not None else 0.0
+        fetched = 0
+
+        def next_slab(i: int) -> _WaveSlab:
+            nonlocal fetched
+            if pipe is None:
+                # synchronous baseline (pipeline_depth=0): assembly
+                # runs inline on the critical path
+                ta = time.perf_counter()
+                s = self._assemble_runtime(self._slabs[i])
+                self._phase["assemble"] += time.perf_counter() - ta
+                return s
+            s = pipe.get()
+            fetched += 1
+            if fetched == nw and it + 1 < self.alg.max_iterations:
+                # epoch drained: speculatively queue the next
+                # iteration's waves so they assemble during post/host
+                # hooks (an early-terminating run reclaims them)
+                pipe.request(range(nw))
+            return s
+
+        slab = next_slab(0)
+        bufs = self._put_slab(slab)
         for w in range(nw):
             # async dispatch: the step for wave w starts on the device
             # (or the whole mesh, under shard_map)...
             acc = self._step_wave(w, bufs, state0, acc, iarr)
-            # ...while wave w+1's (sharded) slab crosses host→device.
-            # Dropping `bufs` here releases the previous slab's buffers
-            # as soon as the step consumes them (two slabs max in
-            # flight per device).
-            bufs = self._stage(w + 1) if w + 1 < nw else None
+            self._park_for_recycle(slab, acc)
+            self._drain_recycle()   # non-blocking: feed the worker's pool
+            # ...while wave w+1's (sharded) slab crosses host→device and
+            # the background worker assembles wave w+2 into the arena.
+            # Rebinding `bufs` releases the previous slab's device
+            # buffers as soon as the step consumes them (two slabs max
+            # in flight per device).
+            if w + 1 < nw:
+                slab = next_slab(w + 1)
+                bufs = self._put_slab(slab)
+            else:
+                slab, bufs = None, None
         _block_tree(acc)
-        return acc, time.perf_counter() - t0
+        self._drain_recycle(force=True)
+        wall = time.perf_counter() - t0
+        put_d = self._phase["device_put"] - put0
+        stall = 0.0
+        if pipe is not None:
+            asm = pipe.assemble_s - a0
+            stall = pipe.stall_s - s0
+            self._assemble_overlapped_s += asm
+            self._stall_s += stall
+            self._phase["assemble"] += asm
+        self._phase["compute"] += max(wall - put_d - stall, 0.0)
+        return acc, wall
 
     def run(self, store: BlockStore | None = None,
             state: Any | None = None) -> RunResult:
@@ -1202,24 +1861,32 @@ class StreamingPlan:
         overlapped_wall = 0.0
         overlapped_iters = 0
         staged_before = self._bytes_staged
-        while cont and it < alg.max_iterations:
-            if alg.before is not None:
-                state = alg.before(self.host, state, it)
-            if self.mesh is not None:
-                # the state is replicated on every mesh device (writes
-                # are reduced by the step's collectives; host hooks may
-                # have injected fresh uncommitted leaves) — a no-op for
-                # leaves already placed
-                state = self._put_replicated(state)
-            state, wall = self._run_waves(state, it)
-            if wall > 0.0:
-                overlapped_wall += wall
-                overlapped_iters += 1
-            if self._post is not None:
-                state = self._post(self._resident, state, jnp.int32(it))
-            if alg.after is not None:
-                state, cont = alg.after(self.host, state, it)
-            it += 1
+        phase_before = dict(self._phase)
+        asm_before = self._assemble_overlapped_s
+        stall_before = self._stall_s
+        try:
+            while cont and it < alg.max_iterations:
+                if alg.before is not None:
+                    state = alg.before(self.host, state, it)
+                if self.mesh is not None:
+                    # the state is replicated on every mesh device
+                    # (writes are reduced by the step's collectives;
+                    # host hooks may have injected fresh uncommitted
+                    # leaves) — a no-op for leaves already placed
+                    state = self._put_replicated(state)
+                state, wall = self._run_waves(state, it)
+                if wall > 0.0:
+                    overlapped_wall += wall
+                    overlapped_iters += 1
+                if self._post is not None:
+                    state = self._post(self._resident, state, jnp.int32(it))
+                if alg.after is not None:
+                    state, cont = alg.after(self.host, state, it)
+                it += 1
+        finally:
+            if self._pipe is not None:
+                self._pipe.close(self._arena)
+                self._pipe = None
         state = jax.tree.map(
             lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
             state,
@@ -1236,13 +1903,20 @@ class StreamingPlan:
                 streaming=self._streaming_stats(
                     state, overlapped_wall, overlapped_iters,
                     staged_delta=self._bytes_staged - staged_before,
+                    phase_delta={
+                        k: self._phase[k] - phase_before[k]
+                        for k in self._phase
+                    },
+                    asm_delta=self._assemble_overlapped_s - asm_before,
+                    stall_delta=self._stall_s - stall_before,
                 ),
             ),
         )
 
     def _streaming_stats(self, state, overlapped_wall: float,
                          overlapped_iters: int, *,
-                         staged_delta: int) -> dict:
+                         staged_delta: int, phase_delta: dict,
+                         asm_delta: float, stall_delta: float) -> dict:
         bytes_per_wave = [s.staged_bytes for s in self._slabs]
         calib = self._calibration or dict(stage_s=0.0, compute_s=0.0)
         eff = 0.0
@@ -1251,6 +1925,15 @@ class StreamingPlan:
             serial = calib["stage_s"] + calib["compute_s"]
             mean_wall = overlapped_wall / overlapped_iters
             eff = max(0.0, min(1.0, (serial - mean_wall) / denom))
+        # how much of the background assembly the pipeline actually hid
+        # THIS run: the worker's busy time minus the main loop's queue
+        # stalls, over the busy time (1.0 = staging fully off the
+        # critical path)
+        host_overlap = 0.0
+        if asm_delta > 0:
+            host_overlap = max(0.0, min(
+                1.0, (asm_delta - stall_delta) / asm_delta,
+            ))
         prefix_bytes = 0
         if self._prefix_host is not None:
             pptr, pidx = self._prefix_host
@@ -1274,10 +1957,7 @@ class StreamingPlan:
             csr_mode=self._csr_mode,
             # per-wave staged CSR slice bytes (bucket-padded, already
             # included in bytes_per_wave) — all zeros unless "slice"
-            csr_bytes_per_wave=[
-                s.csr.nbytes if s.csr is not None else 0
-                for s in self._slabs
-            ],
+            csr_bytes_per_wave=[s.csr_bytes for s in self._slabs],
             csr_segments=[s.csr_segments for s in self._slabs],
             # actual H2D traffic this run, counting the calibration
             # warm-up pass and edge-free single-wave iterations honestly
@@ -1291,13 +1971,40 @@ class StreamingPlan:
             # first-k-neighbors CSR, device-held only during the
             # edge-free sampling phase (vertex-proportional)
             edge_free_prefix_bytes=int(prefix_bytes),
-            edge_buckets=sorted({s.src.shape[0] for s in self._slabs}),
+            edge_buckets=sorted({s.src_bucket for s in self._slabs}),
             coalesced_segments=[s.segments for s in self._slabs],
             overlap_efficiency=eff,
+            # three-stage pipeline observability -----------------------
+            pipeline_depth=self.pipeline_depth,
+            host_stage_overlap=host_overlap,
+            # jit traces of the wave step (process-wide when the step is
+            # shared); with stage_plan algorithms this is one per
+            # distinct bucket shape, independent of the wave count
+            trace_count=int(self.compile_count),
+            # staging arena: measured pooled-buffer high water vs the
+            # footprint model's (depth+1)-slab bound
+            arena_bytes=int(self._arena.bytes),
+            arena_model_bytes=arena_model_bytes(
+                bytes_per_wave, depth=max(self.pipeline_depth, 1),
+            ),
+            arena_reuses=int(self._arena.reuses),
+            # this run's wall clock per phase; the one-time planning
+            # pass (per-wave prepare + verification assembly) is broken
+            # out so repeated runs stay attributable
+            phase_seconds={k: float(v) for k, v in phase_delta.items()},
+            planning_phase_seconds={
+                k: float(v) for k, v in self._planning_phase.items()
+            },
             calibration=dict(calib),
             overlapped_iterations=overlapped_iters,
             rebalanced=self._rebalanced,
+            rebalance_mode=(
+                "off" if self.rebalance_threshold is None
+                else "auto" if self.rebalance_threshold == "auto"
+                else "skew"
+            ),
             rebalance_skew=self._last_skew,
+            rebalance_divergence=self._last_divergence,
         )
 
 

@@ -180,6 +180,19 @@ def _csr_bucket_search_workspace(items: int = 0, depth: int = 0,
     return 3 * _per_device(items, devices) * int(depth) * 4
 
 
+@register_workspace("stage_arena")
+def _stage_arena_workspace(slab_bytes: int = 0, depth: int = 2,
+                           devices: int = 1, **_hints) -> int:
+    # Pipelined staging (repro.core.stream._StagePipeline) keeps up to
+    # ``depth`` assembled host slabs in flight plus the one crossing the
+    # bus: the arena's pooled buffers are bounded by (depth + 1) × the
+    # largest slab.  Host-side memory — the *device* bound stays the
+    # per-slab ≤ budget invariant (at most current + prefetch resident),
+    # but the footprint model prices the arena so callers can see the
+    # true steady-state staging residency.
+    return _per_device(int(slab_bytes) * (max(int(depth), 1) + 1), devices)
+
+
 @register_workspace("frontier_tiles")
 def _frontier_workspace(nd: int, tile_dim: int, devices: int = 1) -> int:
     # gathered frontier columns (bool) + candidate mins (int32)

@@ -524,10 +524,78 @@ def test_rebalance_ignores_balanced_waves(graph):
     nw = plan.num_waves
     assert plan.rebalance([1.0] * nw) is False
     assert plan._rebalanced is False
-    # disabled (default None): even huge skew is a no-op
+    # explicitly disabled (None): even huge skew is a no-op
     off = compile_plan(pagerank_algorithm(), store, mode="sparse_only",
-                       share=False, memory_budget="16KB")
+                       share=False, memory_budget="16KB",
+                       rebalance_threshold=None)
     assert off.rebalance([1.0] * (off.num_waves - 1) + [100.0]) is False
+
+
+# ------------------------------------------------- default-on rebalancing
+def test_auto_rebalance_is_the_default(graph):
+    store = build_block_store(graph, 4)
+    plan = compile_plan(pagerank_algorithm(), store, mode="sparse_only",
+                        share=False, memory_budget="16KB")
+    assert plan.rebalance_threshold == "auto"
+
+
+def test_auto_rebalance_fires_on_divergence(graph):
+    """Observed skew far beyond the estimate's predicted skew (and above
+    the noise floor) re-packs the queue — deterministically, given the
+    measurements."""
+    store = build_block_store(graph, 4)
+    plan = compile_plan(pagerank_algorithm(), store, mode="sparse_only",
+                        share=False, memory_budget="16KB")
+    nw = plan.num_waves
+    assert nw >= 4
+    before = np.concatenate([s.wave.task_ids for s in plan._slabs])
+    # one wave dominating 10×nw over balanced peers, well above the
+    # 10 ms noise floor
+    times = [0.1] * (nw - 1) + [10.0 * nw * 0.1]
+    assert plan.rebalance(times) is True
+    assert plan._rebalanced is True
+    st_waves = plan._slabs
+    all_ids = np.concatenate([s.wave.task_ids for s in st_waves])
+    assert sorted(all_ids.tolist()) == sorted(before.tolist())
+    assert all(
+        s.staged_bytes + s.workspace_bytes <= plan.budget.total_bytes
+        for s in st_waves
+    )
+    nw2 = plan.num_waves
+    # hysteresis latch: the fire disarmed the trigger — the same skew
+    # on the freshly re-packed queue must NOT thrash a second re-pack…
+    assert plan._reb_armed is False
+    times2 = [0.1] * (nw2 - 1) + [10.0 * nw2 * 0.1]
+    assert plan.rebalance(times2) is False
+    # …until an evaluation under the low watermark re-arms it
+    assert plan.rebalance([0.1] * nw2) is False     # balanced → re-arm
+    assert plan._reb_armed is True
+    res = plan.run()
+    st = res.schedule_stats["streaming"]
+    assert st["rebalanced"] is True
+    assert st["rebalance_mode"] == "auto"
+    assert st["rebalance_divergence"] is not None
+    want = compile_plan(pagerank_algorithm(), store, mode="sparse_only",
+                        share=False).run().result
+    np.testing.assert_allclose(np.asarray(res.result), np.asarray(want),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_auto_rebalance_noise_floor_and_hysteresis(graph):
+    store = build_block_store(graph, 4)
+    plan = compile_plan(pagerank_algorithm(), store, mode="sparse_only",
+                        share=False, memory_budget="16KB")
+    nw = plan.num_waves
+    # same skew pattern, but sub-millisecond waves: timing noise — the
+    # trigger must deterministically stand down (staged-byte accounting
+    # stays reproducible on small runs)
+    tiny = [1e-4] * (nw - 1) + [1e-4 * 10 * nw]
+    assert plan.rebalance(tiny) is False
+    assert plan._rebalanced is False
+    # balanced waves above the floor: divergence ~1, inside the re-arm
+    # band — no fire
+    assert plan.rebalance([0.1] * nw) is False
+    assert plan._rebalanced is False
 
 
 def test_repack_waves_balances_time_under_budget(graph):
@@ -547,6 +615,155 @@ def test_repack_waves_balances_time_under_budget(graph):
     # coverage is a disjoint partition
     all_ids = np.concatenate([w.task_ids for w in waves])
     assert sorted(all_ids.tolist()) == list(range(sched.num_tasks))
+
+
+# ------------------------------------------------- pipeline + trace cache
+def _shape_key(recipe):
+    """The slab-shape identity a jit trace is keyed on: padded slab
+    widths, dense routing, and the shapes of the extras leaves."""
+    import jax
+
+    ex = tuple(
+        tuple(np.asarray(leaf).shape)
+        for leaf in jax.tree_util.tree_leaves(recipe.extras)
+        if hasattr(leaf, "shape")
+    )
+    return (recipe.src_bucket, recipe.csr_bytes, recipe.run_dense, ex)
+
+
+@pytest.fixture(scope="module")
+def graph9():
+    return rmat(9, 8, seed=3)
+
+
+TRACE_ALGORITHMS = [
+    ("pagerank", pagerank_algorithm, dict(mode="sparse_only"), "24KB"),
+    ("sv", sv_algorithm, dict(mode="sparse_only"), "24KB"),
+    ("afforest", afforest_algorithm, dict(mode="sparse_only"), "24KB"),
+    ("bfs", lambda: bfs_algorithm(0), dict(mode="sparse_only"), "24KB"),
+    ("kcore3", lambda: kcore_algorithm(3), dict(mode="sparse_only"), "24KB"),
+    ("hits", hits_algorithm, dict(mode="sparse_only"), "24KB"),
+    ("tc", tc_algorithm, dict(mode="sparse_only"), "64KB"),
+]
+
+
+@pytest.mark.parametrize("name,alg_f,kw,budget", TRACE_ALGORITHMS,
+                         ids=[a[0] for a in TRACE_ALGORITHMS])
+def test_traces_once_per_distinct_bucket_shape(name, alg_f, kw, budget,
+                                               graph9, dag):
+    """Satellite regression (the TC retrace): across a ≥6-wave streamed
+    run, the wave step traces once per *distinct slab shape* — far
+    fewer than once per wave — verified via the compiled step's traces
+    counter.  Streamed results stay equivalent to in-core with the
+    pipeline, arena, and default-on rebalancing all enabled."""
+    from repro.algorithms.tc import orient_dag as _orient
+
+    g = _orient(graph9) if name == "tc" else graph9
+    store = build_block_store(g, 4)
+    plan = compile_plan(alg_f(), store, share=False,
+                        memory_budget=budget, **kw)
+    res = plan.run()
+    st = res.schedule_stats["streaming"]
+    assert st["num_waves"] >= 6
+    distinct = {_shape_key(r) for r in plan._slabs}
+    # + 2: the edge-free/prefix-CSR context variants (afforest) and the
+    # resident-context step shape trace once each on top of the wave
+    # ladder
+    assert st["trace_count"] <= len(distinct) + 2
+    assert len(distinct) < st["num_waves"]
+
+    want = compile_plan(alg_f(), build_block_store(g, 4),
+                        share=False, **kw).run().result
+    got = res.result
+    # pipelined results are bit-identical for int/bool attributes
+    # (_assert_equivalent uses exact comparison for those dtypes)
+    if isinstance(want, dict):
+        assert want.keys() == got.keys()
+        for k in want:
+            _assert_equivalent(got[k], want[k])
+    else:
+        _assert_equivalent(np.asarray(got), np.asarray(want))
+
+
+def test_tc_trace_count_independent_of_wave_count():
+    """Acceptance: TC's trace count is one per distinct bucket shape —
+    constant as the wave count grows (the shared BucketPlan +
+    cross-wave extras unification), not linear in waves as the per-wave
+    dp/steps ladders used to make it."""
+    from repro.algorithms.tc import orient_dag as _orient
+
+    dag = _orient(rmat(10, 8, seed=5))
+    runs = {}
+    want = None
+    for budget in ("512KB", "128KB"):
+        plan = compile_plan(tc_algorithm(), build_block_store(dag, 8),
+                            mode="sparse_only", share=False,
+                            memory_budget=budget)
+        res = plan.run()
+        st = res.schedule_stats["streaming"]
+        if want is None:
+            want = res.result
+        assert res.result == want
+        # unified shapes: the mesh_pack-declared scratch replaces the
+        # per-wave declarations uniformly, never leaks into ctx.extras,
+        # and the budget still bounds slab + scratch per wave
+        ws = {r.workspace_bytes for r in plan._slabs}
+        assert len(ws) == 1 and ws.pop() > 0
+        for r in plan._slabs:
+            assert "__workspace_bytes__" not in (r.extras or {})
+            assert (r.staged_bytes + r.workspace_bytes
+                    <= plan.budget.total_bytes)
+        runs[budget] = (st["num_waves"], st["trace_count"],
+                        len({_shape_key(r) for r in plan._slabs}))
+    (w1, t1, _), (w2, t2, d2) = runs["512KB"], runs["128KB"]
+    assert w2 >= 2 * w1            # far more waves under the tight budget…
+    assert t2 <= d2                # …but still one trace per distinct shape
+    assert d2 <= max(w2 // 2, 3)   # and the shapes dedupe across waves
+
+
+def test_pipeline_depth_zero_is_synchronous_and_identical(graph):
+    """pipeline_depth=0 (the benchmark baseline) assembles inline; the
+    result is bit-identical to the pipelined run."""
+    store = build_block_store(graph, 4)
+    runs = {}
+    for depth in (2, 0):
+        plan = compile_plan(sv_algorithm(), store, mode="sparse_only",
+                            share=False, memory_budget="16KB",
+                            pipeline_depth=depth)
+        res = plan.run()
+        st = res.schedule_stats["streaming"]
+        assert st["pipeline_depth"] == depth
+        if depth == 0:
+            assert st["host_stage_overlap"] == 0.0
+        runs[depth] = np.asarray(res.result)
+    np.testing.assert_array_equal(runs[2], runs[0])
+
+
+def test_arena_and_phase_stats(graph):
+    """The staging arena recycles buffers across waves/iterations and
+    the per-phase wall clock is reported."""
+    store = build_block_store(graph, 4)
+    plan = compile_plan(pagerank_algorithm(), store, mode="sparse_only",
+                        share=False, memory_budget="16KB")
+    res = plan.run()
+    st = res.schedule_stats["streaming"]
+    assert st["num_waves"] >= 4
+    assert st["arena_bytes"] > 0
+    assert st["arena_reuses"] > 0          # buffers really cycle
+    assert st["arena_model_bytes"] >= max(st["bytes_per_wave"])
+    assert 0.0 <= st["host_stage_overlap"] <= 1.0
+    phases = st["phase_seconds"]
+    assert set(phases) == {"assemble", "prepare", "device_put", "compute",
+                           "collective"}
+    assert all(v >= 0.0 for v in phases.values())
+    assert phases["assemble"] > 0.0
+    assert phases["device_put"] > 0.0
+
+
+def test_pipeline_depth_requires_budget(graph):
+    store = build_block_store(graph, 4)
+    with pytest.raises(ValueError, match="memory_budget"):
+        compile_plan(pagerank_algorithm(), store, pipeline_depth=2)
 
 
 def test_schedule_restrict_subsets(graph):
