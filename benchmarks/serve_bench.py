@@ -1,0 +1,167 @@
+"""Graph-serving benchmark: cross-query batching vs sequential serving.
+
+The serving claim to measure: N compatible queries batched along the
+leading query axis run as ONE device step per iteration, so total
+device steps shrink toward ``max(iters)`` instead of ``sum(iters)``
+— and batching is semantics-preserving (results identical to serving
+each query alone).
+
+Two entry points:
+
+* the sweep — ``run()`` serves the same multi-seed PageRank workload
+  through :class:`~repro.serve.graphserve.GraphServer` at
+  ``max_batch`` ∈ {1, 2, 4, 8} and reports device steps, batch
+  occupancy, and latency percentiles per point;
+* the gate — ``--smoke`` (the CI serve-smoke job) compares batch-8
+  against sequential (batch-1) serving of 8 seeded PageRank queries,
+  checks the step-count reduction meets :data:`SMOKE_STEP_REDUCTION`
+  (≥2×), checks batched results are identical to the sequential runs,
+  records p50/p95/p99 latency for both modes, and writes everything to
+  ``BENCH_serve.json`` (the build artifact).
+
+CLI: ``python -m benchmarks.serve_bench [--smoke] [--smoke-out F]``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from .common import csv_row
+
+# Recorded floor for the CI serve-smoke gate: serving 8 compatible
+# seeded-PageRank queries at max_batch=8 must execute at most half the
+# device steps the sequential (max_batch=1) server does.  The ideal
+# reduction is ~8x (one fused step per iteration instead of eight);
+# freeze-on-convergence makes the batched run pay max(iters) rather
+# than sum(iters), so only a structural regression — batching silently
+# degrading to per-query execution — can cross a 2x floor.
+SMOKE_STEP_REDUCTION = 2.0
+
+
+def _workload(n_queries: int = 8):
+    """A registered server factory plus the query list (seeded PR)."""
+    from repro.core import build_block_store, rmat
+
+    g = rmat(10, 8, seed=7)
+    store = build_block_store(g, 4)
+
+    def make_server(max_batch: int):
+        from repro.serve import GraphServer
+
+        srv = GraphServer(max_batch=max_batch)
+        srv.register_graph("g", store)
+        return srv
+
+    queries = [("pagerank", dict(seeds=[17 * i + 3]))
+               for i in range(n_queries)]
+    return make_server, queries
+
+
+def _serve(make_server, queries, *, max_batch: int):
+    """Drain the workload once; returns (stats block, results by uid)."""
+    from repro.serve import Query
+
+    srv = make_server(max_batch)
+    uids = [srv.submit(Query("g", kind, dict(params)))
+            for kind, params in queries]
+    done = srv.drain()
+    return srv.stats(), [done[u].result for u in uids]
+
+
+def run(repeats: int = 1) -> list[str]:
+    import numpy as np
+
+    make_server, queries = _workload()
+    rows = []
+    for mb in (1, 2, 4, 8):
+        st, _ = _serve(make_server, queries, max_batch=mb)
+        lat = st["latency_s"] or {}
+        rows.append(csv_row(
+            f"serve/pr_multiseed/batch_{mb}",
+            float(np.mean([v for v in lat.values()]) if lat else 0.0),
+            f"steps={st['steps_executed']};batches={st['batches']};"
+            f"occupancy={st['batch_occupancy']};"
+            f"p50_s={lat.get('p50')};p95_s={lat.get('p95')};"
+            f"p99_s={lat.get('p99')}",
+        ))
+    return rows
+
+
+def run_smoke(out_path: str = "BENCH_serve.json") -> bool:
+    """The CI serve-smoke gate (and its ``BENCH_serve.json`` artifact).
+
+    Serves 8 seeded-PageRank queries sequentially (max_batch=1) and
+    batched (max_batch=8); gates the device step-count reduction at
+    :data:`SMOKE_STEP_REDUCTION` and requires batched results to be
+    identical to the sequential ones.  Returns True when every check
+    passed.
+    """
+    import numpy as np
+
+    make_server, queries = _workload()
+    modes: dict = {}
+    results: dict = {}
+    for label, mb in (("sequential", 1), ("batched", 8)):
+        st, res = _serve(make_server, queries, max_batch=mb)
+        results[label] = res
+        modes[label] = dict(
+            max_batch=mb,
+            steps_executed=st["steps_executed"],
+            batches=st["batches"],
+            batch_occupancy=st["batch_occupancy"],
+            admitted=st["admitted"],
+            completed=st["completed"],
+            latency_s=st["latency_s"],
+        )
+    reduction = (modes["sequential"]["steps_executed"]
+                 / max(modes["batched"]["steps_executed"], 1))
+    # int/bool query attributes are bit-identical under batching (the
+    # tier-1 tests assert that for BFS); PageRank ranks are float, where
+    # XLA may fuse the batched SpMV's summation differently — gate at a
+    # tight tolerance and record the worst deviation
+    max_abs_diff = max(
+        float(np.max(np.abs(np.asarray(a) - np.asarray(b))))
+        for a, b in zip(results["sequential"], results["batched"])
+    )
+    same = max_abs_diff <= 1e-7
+    checks = dict(
+        all_completed=(modes["batched"]["completed"] == len(queries)
+                       and modes["sequential"]["completed"] == len(queries)),
+        full_occupancy=modes["batched"]["batch_occupancy"] == 1.0,
+        step_reduction=reduction >= SMOKE_STEP_REDUCTION,
+        results_match=same,
+        percentiles_recorded=all(
+            modes[m]["latency_s"] is not None
+            and all(k in modes[m]["latency_s"] for k in ("p50", "p95", "p99"))
+            for m in modes
+        ),
+    )
+    payload = dict(
+        workload="8x pagerank(seeds=[...]) on rmat(10, 8, seed=7)",
+        floors=dict(step_reduction=SMOKE_STEP_REDUCTION),
+        **modes,
+        step_reduction=round(reduction, 2),
+        max_abs_result_diff=max_abs_diff,
+        checks=checks,
+        passed=all(checks.values()),
+    )
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(json.dumps(payload, indent=2))
+    return payload["passed"]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI serve-smoke gate: batched vs sequential multi-seed "
+             "PageRank step-count reduction and latency percentiles — "
+             "writes BENCH_serve.json and exits non-zero on regression",
+    )
+    ap.add_argument("--smoke-out", default="BENCH_serve.json")
+    a = ap.parse_args()
+    if a.smoke:
+        sys.exit(0 if run_smoke(a.smoke_out) else 1)
+    print("\n".join(run()))

@@ -18,6 +18,15 @@ both exactly the paper's iteration hooks.  Activation is realized as
 masking (see DESIGN §2): inactive edges/vertices are masked out rather
 than compacted, which is the static-shape analog of composing
 block-lists from blocks with non-empty queues.
+
+Batch axis (``sources=[...]``): the state carries a leading query axis
+on ``parent``/``frontier``/``dist`` (and per-query scalars ``nf``,
+``dir_dense``), and the level kernels vmap the single-source level
+function over axis 0 against the one shared graph context.  Each row
+runs exactly the traversal its solo run would — the direction heuristic
+and termination are evaluated per query — so batched results are
+bit-identical to single-source runs.  The single-source path is the
+unbatched code path, unchanged.
 """
 from __future__ import annotations
 
@@ -45,6 +54,35 @@ def _init_factory(source: int):
             dist=dist,
             nf=jnp.asarray(1, jnp.int32),
             dir_dense=jnp.asarray(False),  # False = top-down
+        )
+
+    return _init
+
+
+def _init_multi_factory(sources):
+    srcs = np.atleast_1d(np.asarray(sources, dtype=np.int64)).ravel()
+    if srcs.size == 0:
+        raise ValueError("sources must name at least one vertex")
+
+    def _init(store):
+        n = store.n
+        if (srcs < 0).any() or (srcs >= n).any():
+            raise ValueError(
+                f"sources out of range for a graph with {n} vertices")
+        b = srcs.size
+        rows = np.arange(b)
+        parent = np.full((b, n), _UNVISITED, np.int32)
+        frontier = np.zeros((b, n), bool)
+        dist = np.full((b, n), _UNVISITED, np.int32)
+        parent[rows, srcs] = srcs.astype(np.int32)
+        frontier[rows, srcs] = True
+        dist[rows, srcs] = 0
+        return dict(
+            parent=jnp.asarray(parent),
+            frontier=jnp.asarray(frontier),
+            dist=jnp.asarray(dist),
+            nf=jnp.ones((b,), jnp.int32),
+            dir_dense=jnp.zeros((b,), bool),
         )
 
     return _init
@@ -79,13 +117,28 @@ def _bottom_up_edges(ctx, state, edge_mask):
     return ppad.at[tgt].min(cand)[:n]
 
 
-def _kernel_sparse(ctx, state, it):
+# the state leaves a level function reads; batched kernels vmap over
+# exactly these so untouched leaves pass through by identity (the
+# streaming executor's per-wave fold relies on that to tell written
+# leaves from carried ones)
+_LEVEL_KEYS = ("parent", "frontier", "dist", "dir_dense")
+
+
+def _level_sparse(ctx, sub):
     msk = ctx.sparse_edge_mask
-    parent = jax.lax.cond(
-        state["dir_dense"],
-        lambda: _bottom_up_edges(ctx, state, msk),
-        lambda: _top_down(ctx, state, msk),
+    return jax.lax.cond(
+        sub["dir_dense"],
+        lambda: _bottom_up_edges(ctx, sub, msk),
+        lambda: _top_down(ctx, sub, msk),
     )
+
+
+def _kernel_sparse(ctx, state, it):
+    sub = {k: state[k] for k in _LEVEL_KEYS}
+    if state["parent"].ndim == 2:
+        parent = jax.vmap(lambda s: _level_sparse(ctx, s))(sub)
+    else:
+        parent = _level_sparse(ctx, sub)
     return dict(state, parent=parent)
 
 
@@ -115,35 +168,50 @@ def _bottom_up_tiles(ctx, state):
     return ppad.at[rows].min(cand)[:n]
 
 
-def _kernel_dense(ctx, state, it):
+def _level_dense(ctx, sub):
     msk = ctx.dense_edge_mask
-    parent = jax.lax.cond(
-        state["dir_dense"],
-        lambda: _bottom_up_tiles(ctx, state),
-        lambda: _top_down(ctx, state, msk),
+    return jax.lax.cond(
+        sub["dir_dense"],
+        lambda: _bottom_up_tiles(ctx, sub),
+        lambda: _top_down(ctx, sub, msk),
     )
+
+
+def _kernel_dense(ctx, state, it):
+    sub = {k: state[k] for k in _LEVEL_KEYS}
+    if state["parent"].ndim == 2:
+        parent = jax.vmap(lambda s: _level_dense(ctx, s))(sub)
+    else:
+        parent = _level_dense(ctx, sub)
     return dict(state, parent=parent)
 
 
 def _post(ctx, state, it):
-    # new frontier = vertices visited this level
+    # new frontier = vertices visited this level (elementwise, so the
+    # same code serves [n] and batched [b, n] states; the axis=-1 sum
+    # yields a scalar nf or one per query respectively)
     newly = (state["dist"] == _UNVISITED) & (state["parent"] != _UNVISITED)
     dist = jnp.where(newly, it + 1, state["dist"])
-    nf = jnp.sum(newly.astype(jnp.int32))
+    nf = jnp.sum(newly.astype(jnp.int32), axis=-1)
     return dict(state, frontier=newly, dist=dist, nf=nf)
 
 
-def bfs_algorithm(source: int = 0, *, max_iters: int = 10_000,
+def bfs_algorithm(source: int = 0, *, sources=None, max_iters: int = 10_000,
                   beta: int = 24) -> BlockAlgorithm:
+    """Single-source BFS from ``source``, or — with ``sources=[...]`` —
+    a batched multi-source BFS whose state carries a leading query axis
+    (one independent traversal per source; see module docstring)."""
     def before(host, state, it):
         # Beamer heuristic, host side (I_B): go bottom-up while the
-        # frontier is a large fraction of the graph
-        nf = int(jax.device_get(state["nf"]))
+        # frontier is a large fraction of the graph — elementwise, so
+        # a batched state gets one direction decision per query
+        nf = np.asarray(jax.device_get(state["nf"]))
         dense = nf * beta > host.n
         return dict(state, dir_dense=jnp.asarray(dense))
 
     def after(host, state, it):
-        return state, bool(jax.device_get(state["nf"]) > 0)
+        return state, bool(np.any(np.asarray(
+            jax.device_get(state["nf"])) > 0))
 
     return BlockAlgorithm(
         name="bfs",
@@ -151,7 +219,8 @@ def bfs_algorithm(source: int = 0, *, max_iters: int = 10_000,
         kernel_sparse=_kernel_sparse,
         kernel_dense=_kernel_dense,
         post=_post,
-        init_state=_init_factory(source),
+        init_state=(_init_factory(source) if sources is None
+                    else _init_multi_factory(sources)),
         before=before,
         after=after,
         max_iterations=max_iters,
@@ -164,11 +233,14 @@ def bfs_algorithm(source: int = 0, *, max_iters: int = 10_000,
         # devices pmin-folds to the identical (deterministic) parents
         metadata=dict(combine=dict(parent="min", dist="min"),
                       workspace_kernel="frontier_tiles", csr="none",
-                      mesh="shard"),
+                      mesh="shard", batch="query"),
     )
 
 
-def bfs(store, source: int = 0, **plan_kw) -> dict:
+def bfs(store, source: int = 0, *, sources=None, **plan_kw) -> dict:
     from ..core.engine import compile_plan
 
-    return compile_plan(bfs_algorithm(source), store, **plan_kw).run().result
+    alg = bfs_algorithm(source, sources=sources,
+                        max_iters=plan_kw.pop("max_iters", 10_000),
+                        beta=plan_kw.pop("beta", 24))
+    return compile_plan(alg, store, **plan_kw).run().result

@@ -47,10 +47,13 @@ from .blocks import BlockStore, build_block_store
 from .functors import BlockAlgorithm, Mode, default_estimate
 from .scheduler import Schedule, build_schedule, lpt_assign
 from .context import Context, HostCtx, build_context, build_host_ctx
-from .engine import Plan, compile_plan, RunResult, Engine, run
+from .engine import (
+    Plan, compile_plan, RunResult, Engine, run, batch_states, unbatch_state,
+)
 from .membudget import (
     MemoryBudget, PIPELINE_DEPTH, arena_model_bytes, task_footprints,
-    task_csr_edge_counts, build_waves, repack_waves,
+    task_csr_edge_counts, build_waves, repack_waves, TenantLedger,
+    batch_state_bytes,
 )
 from .stream import StreamingPlan, compile_streaming_plan
 from .distributed import (
@@ -67,10 +70,10 @@ __all__ = [
     "BlockAlgorithm", "Mode", "default_estimate",
     "Schedule", "build_schedule", "lpt_assign",
     "Context", "HostCtx", "build_context", "build_host_ctx",
-    "Plan", "compile_plan", "RunResult",
+    "Plan", "compile_plan", "RunResult", "batch_states", "unbatch_state",
     "MemoryBudget", "PIPELINE_DEPTH", "arena_model_bytes",
     "task_footprints", "task_csr_edge_counts",
-    "build_waves", "repack_waves",
+    "build_waves", "repack_waves", "TenantLedger", "batch_state_bytes",
     "StreamingPlan", "compile_streaming_plan",
     "DistributedEngine", "combine_fn", "make_device_edge_partition",
     "Engine", "run",

@@ -49,7 +49,44 @@ from .context import Context, HostCtx, build_context, build_host_ctx
 from .functors import BlockAlgorithm
 from .scheduler import Schedule, build_schedule
 
-__all__ = ["Plan", "compile_plan", "RunResult", "Engine", "run"]
+__all__ = ["Plan", "compile_plan", "RunResult", "Engine", "run",
+           "batch_states", "unbatch_state"]
+
+
+# ----------------------------------------------------------------------
+# Batched-state entry point.  Algorithms that declare
+# ``metadata["batch"] == "query"`` accept a state pytree with a leading
+# query axis (their kernels vmap per-query state over the one shared
+# graph context).  These helpers build and take apart that axis; both
+# Plan.run(state=...) and StreamingPlan.run(state=...) execute the
+# batched state unchanged.  The batch axis is orthogonal to the mesh
+# block axis: under ``mesh=`` the batched state is replicated like any
+# other state and per-wave partials fold leaf-wise, so batch × mesh
+# composes without new machinery.
+def batch_states(states, *, pad_to: int | None = None):
+    """Stack per-query state pytrees into one batched state.
+
+    Every state must share one tree structure and per-leaf shapes
+    (compatible queries).  With ``pad_to`` (a bucket from
+    :func:`repro.core.membudget.bucket_size`), the batch is padded by
+    replicating the last query's state so the compiled step traces once
+    per bucket; padded rows compute real results that callers discard.
+    """
+    states = list(states)
+    if not states:
+        raise ValueError("batch_states needs at least one state")
+    if pad_to is not None:
+        if pad_to < len(states):
+            raise ValueError(
+                f"pad_to={pad_to} is smaller than the batch of {len(states)}")
+        states = states + [states[-1]] * (pad_to - len(states))
+    return jax.tree.map(
+        lambda *leaves: jnp.stack([jnp.asarray(x) for x in leaves]), *states)
+
+
+def unbatch_state(state, index: int):
+    """Slice query ``index``'s row out of a batched state pytree."""
+    return jax.tree.map(lambda leaf: leaf[index], state)
 
 
 @dataclass
@@ -207,6 +244,16 @@ class Plan:
         tests assert this stays at 1 across same-shape graphs.
         """
         return self._step.traces
+
+    @property
+    def resident_device_bytes(self) -> int:
+        """Device bytes of holding this plan hot (default binding's
+        context: graph arrays + prepared extras), state excluded — the
+        serving admission controller's price for a resident in-core
+        plan.  Query state is priced separately per batch."""
+        from .membudget import tree_array_bytes
+
+        return tree_array_bytes(self._default.context)
 
     # -- execute side --------------------------------------------------
     def run(self, store: BlockStore | None = None,

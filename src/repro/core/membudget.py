@@ -56,11 +56,13 @@ from .scheduler import Schedule
 
 __all__ = [
     "MemoryBudget", "parse_bytes", "COO_EDGE_BYTES", "CSR_INDEX_BYTES",
-    "TILE_HEADER_BYTES", "PIPELINE_DEPTH", "arena_model_bytes",
+    "TILE_HEADER_BYTES", "PIPELINE_DEPTH", "STATE_COPIES",
+    "arena_model_bytes",
     "bucket_size", "task_edge_counts",
     "task_csr_edge_counts", "task_footprints", "tile_bytes",
     "dense_extra_bytes", "single_task_bytes",
-    "resident_bytes", "tree_array_bytes", "Wave", "build_waves",
+    "resident_bytes", "tree_array_bytes", "batch_state_bytes",
+    "TenantLedger", "Wave", "build_waves",
     "repack_waves",
 ]
 
@@ -73,6 +75,10 @@ PIPELINE_DEPTH = 2
 CSR_INDEX_BYTES = 4
 # per-tile origin scalars: tile_row_start + tile_col_start (int64).
 TILE_HEADER_BYTES = 8 + 8
+# batch-axis pricing: device copies of each query's state a batched
+# step holds live at once — the iteration-start state plus the step's
+# written/accumulator copy (post rebuilds every leaf).
+STATE_COPIES = 2
 
 _UNITS = {"b": 1, "kb": 10**3, "mb": 10**6, "gb": 10**9,
           "kib": 2**10, "mib": 2**20, "gib": 2**30}
@@ -240,6 +246,72 @@ def tree_array_bytes(tree) -> int:
     return total
 
 
+
+
+def batch_state_bytes(per_query_bytes: int, batch: int, *,
+                      copies: int = STATE_COPIES) -> int:
+    """Priced device bytes of ``batch`` query-state rows.
+
+    ``per_query_bytes`` is one query's state pytree
+    (:func:`tree_array_bytes` of its ``init_state``); a padded batch
+    prices every row of the bucket — padding rows occupy real device
+    memory even though their results are discarded.  ``copies`` models
+    how many live copies of the state the batched step holds at once
+    (:data:`STATE_COPIES`).  This is the admission controller's unit
+    price: resident plan bytes + Σ batch_state_bytes of everything
+    in flight must stay under the serving budget.
+    """
+    if batch < 0:
+        raise ValueError("batch must be non-negative")
+    return int(per_query_bytes) * int(batch) * int(copies)
+
+
+class TenantLedger:
+    """Per-tenant byte accounting for admitted serving work.
+
+    Each tenant has an optional byte cap (``budgets`` per tenant, or
+    ``default_budget`` for everyone unnamed; ``None`` means uncapped).
+    The serving admission controller charges a query's priced footprint
+    to its tenant while the query is queued-for-batch or running, and
+    releases it on completion — so one tenant's burst queues behind its
+    own cap instead of starving the others.
+    """
+
+    def __init__(self, budgets: dict | None = None,
+                 default_budget: "int | str | None" = None) -> None:
+        self._budgets = {
+            str(k): parse_bytes(v) for k, v in (budgets or {}).items()
+        }
+        self._default = (
+            parse_bytes(default_budget) if default_budget is not None else None
+        )
+        self._held: dict[str, int] = {}
+
+    def budget(self, tenant: str) -> int | None:
+        return self._budgets.get(str(tenant), self._default)
+
+    def held(self, tenant: str) -> int:
+        return self._held.get(str(tenant), 0)
+
+    def fits(self, tenant: str, nbytes: int) -> bool:
+        """Could ``nbytes`` EVER be admitted for this tenant (alone)?"""
+        b = self.budget(tenant)
+        return b is None or int(nbytes) <= b
+
+    def can_charge(self, tenant: str, nbytes: int) -> bool:
+        b = self.budget(tenant)
+        return b is None or self.held(tenant) + int(nbytes) <= b
+
+    def charge(self, tenant: str, nbytes: int) -> None:
+        if not self.can_charge(tenant, nbytes):
+            raise ValueError(
+                f"tenant {tenant!r} over budget: holds {self.held(tenant)} "
+                f"+ {int(nbytes)} > {self.budget(tenant)}"
+            )
+        self._held[str(tenant)] = self.held(tenant) + int(nbytes)
+
+    def release(self, tenant: str, nbytes: int) -> None:
+        self._held[str(tenant)] = max(0, self.held(tenant) - int(nbytes))
 
 
 def arena_model_bytes(slab_bytes, depth: int = PIPELINE_DEPTH,

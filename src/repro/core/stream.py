@@ -1452,6 +1452,26 @@ class StreamingPlan:
     def num_waves(self) -> int:
         return len(self._slabs)
 
+    @property
+    def resident_device_bytes(self) -> int:
+        """Device bytes of holding this streamed plan hot, state
+        excluded: the cross-wave resident arrays (vertex-level store
+        arrays, hoisted extras, the global CSR only in ``"resident"``
+        mode) plus the double-buffered worst-case wave — two staged
+        slabs (current + prefetch) and the kernel workspace.  The
+        serving admission controller prices a resident streamed plan
+        with this bound; query state is priced separately per batch."""
+        worst = max(
+            (s.staged_bytes + s.workspace_bytes for s in self._slabs),
+            default=0,
+        )
+        return int(
+            resident_bytes(self.store,
+                           include_csr=self._csr_mode == "resident")
+            + tree_array_bytes(self._resident_extras)
+            + 2 * worst
+        )
+
     def _estimate_shares(self) -> np.ndarray:
         """Each wave's share of the schedule's total weight — the
         estimate the auto-rebalance trigger diverges against."""

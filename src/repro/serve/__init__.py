@@ -1,4 +1,17 @@
-"""Serving substrate: slot-based batched decode engine."""
-from .engine import ServeEngine, Request
+"""Serving substrate.
 
-__all__ = ["ServeEngine", "Request"]
+Two engines live here:
+
+* :class:`GraphServer` (``graphserve``) — multi-tenant graph-query
+  serving: resident plans, membudget admission control, cross-query
+  batching along a leading batch axis.
+* :class:`ServeEngine` (``engine``) — the LM slot-batching decode
+  engine (token streams through a fixed decode batch).
+"""
+from .admission import AdmissionController
+from .engine import ServeEngine, Request
+from .graphserve import GraphServer, Query
+from .stats import ServingStats
+
+__all__ = ["ServeEngine", "Request", "GraphServer", "Query",
+           "AdmissionController", "ServingStats"]

@@ -1,4 +1,9 @@
-"""Slot-based batched serving engine.
+"""Slot-based batched LM serving engine (token streams).
+
+This is the *language-model* serving engine — a fixed decode batch of
+slots serving token-generation requests.  Graph-query serving (resident
+plans, admission control, cross-query batching) is the separate
+:mod:`repro.serve.graphserve`.
 
 A fixed-capacity decode batch of B slots serves a request queue in
 *waves*: a wave admits up to B requests, step-decodes them together
@@ -37,6 +42,9 @@ class Request:
     eos_id: int | None = None
     output: list[int] = field(default_factory=list)
     done: bool = False
+    # True when the wave's cache filled before the request reached
+    # max_new_tokens/EOS — done, but with fewer tokens than asked for
+    truncated: bool = False
 
 
 class ServeEngine:
@@ -95,6 +103,7 @@ class ServeEngine:
         for i, req in enumerate(wave):  # cache-length retirement
             if active[i]:
                 req.done = True
+                req.truncated = True
                 self.finished.append(req)
 
     def run_until_drained(self) -> list[Request]:

@@ -1,0 +1,83 @@
+"""Serving observability: admission counters, batch occupancy, latency.
+
+One :class:`ServingStats` instance per :class:`~repro.serve.graphserve.
+GraphServer` accumulates the server's whole history; its
+:meth:`ServingStats.snapshot` dict is what the server exposes as
+``server.stats()`` and injects into every batch's
+``schedule_stats["serving"]`` block — queue depth, cumulative
+admitted/rejected/queued counts, batch occupancy (real rows over padded
+bucket rows), executed step counts, footprint high water vs budget, and
+end-to-end p50/p95/p99 latency percentiles.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["ServingStats"]
+
+
+class ServingStats:
+    """Mutable counters; ``snapshot()`` renders the serving stats block."""
+
+    def __init__(self) -> None:
+        self.admitted = 0            # queries admitted (incl. from queue)
+        self.rejected = 0            # queries refused outright
+        self.queued = 0              # queue *events* (a query that waits)
+        self.queue_depth = 0         # currently waiting
+        self.completed = 0
+        self.batches = 0             # device batches executed
+        self.steps_executed = 0      # compiled step invocations (Σ iters×waves)
+        self.footprint_high_water_bytes = 0
+        self.budget_bytes: int | None = None
+        self._occupancy: list[tuple[int, int]] = []   # (real, padded)
+        self._latencies: list[float] = []
+
+    # -- recording -----------------------------------------------------
+    def record_admit(self) -> None:
+        self.admitted += 1
+
+    def record_reject(self) -> None:
+        self.rejected += 1
+
+    def record_queue(self) -> None:
+        self.queued += 1
+
+    def record_batch(self, real: int, padded: int, steps: int) -> None:
+        self.batches += 1
+        self.steps_executed += int(steps)
+        self._occupancy.append((int(real), int(padded)))
+
+    def record_latency(self, seconds: float) -> None:
+        self.completed += 1
+        self._latencies.append(float(seconds))
+
+    # -- reporting -----------------------------------------------------
+    def latency_percentiles(self) -> dict:
+        if not self._latencies:
+            return dict(p50=None, p95=None, p99=None)
+        lat = np.asarray(self._latencies, dtype=np.float64)
+        p50, p95, p99 = np.percentile(lat, [50.0, 95.0, 99.0])
+        return dict(p50=float(p50), p95=float(p95), p99=float(p99))
+
+    def batch_occupancy(self) -> float | None:
+        """Mean fraction of bucket rows occupied by real queries."""
+        if not self._occupancy:
+            return None
+        return float(np.mean([r / p for r, p in self._occupancy if p > 0]))
+
+    def snapshot(self) -> dict:
+        return dict(
+            queue_depth=self.queue_depth,
+            admitted=self.admitted,
+            rejected=self.rejected,
+            queued=self.queued,
+            completed=self.completed,
+            batches=self.batches,
+            steps_executed=self.steps_executed,
+            batch_occupancy=self.batch_occupancy(),
+            batch_sizes=[r for r, _ in self._occupancy],
+            bucket_sizes=[p for _, p in self._occupancy],
+            latency_s=self.latency_percentiles(),
+            footprint_high_water_bytes=self.footprint_high_water_bytes,
+            budget_bytes=self.budget_bytes,
+        )

@@ -1,0 +1,318 @@
+"""GraphServer: batching semantics, admission bounds, resident-plan reuse."""
+import numpy as np
+import networkx as nx
+import pytest
+
+from repro.core import (
+    batch_states, build_block_store, compile_plan, from_edges, rmat,
+    unbatch_state,
+)
+from repro.core.membudget import batch_state_bytes, tree_array_bytes
+from repro.algorithms import bfs, pagerank
+from repro.algorithms.bfs import bfs_algorithm
+from repro.algorithms.pagerank import pagerank_algorithm
+from repro.serve import GraphServer, Query
+
+_UNVISITED = 2**31 - 1
+
+
+def _permuted_copy(g, seed=0):
+    """Same n/m, different labels — a genuinely different graph."""
+    perm = np.random.default_rng(seed).permutation(g.n)
+    s, d = g.coo()
+    return from_edges(perm[s], perm[d], n=g.n)
+
+
+@pytest.fixture(scope="module")
+def store(small_graphs):
+    return build_block_store(small_graphs["rmat"], 4)
+
+
+# ------------------------------------------------------- batched algorithms
+def test_multi_source_bfs_matches_solo_exactly(store):
+    srcs = [0, 5, 17, 100, 63]
+    out = bfs(store, sources=srcs, mode="hybrid", dense_density=0.001)
+    assert out["parent"].shape == (len(srcs), store.n)
+    for i, s in enumerate(srcs):
+        solo = bfs(store, source=s, mode="hybrid", dense_density=0.001)
+        assert np.array_equal(out["parent"][i], solo["parent"])
+        assert np.array_equal(out["dist"][i], solo["dist"])
+
+
+def test_multi_source_bfs_streamed_matches_solo(store):
+    srcs = [3, 11, 42]
+    plan = compile_plan(bfs_algorithm(sources=srcs), store,
+                        memory_budget="40KB")
+    assert plan.num_waves >= 2
+    out = plan.run().result
+    for i, s in enumerate(srcs):
+        solo = bfs(store, source=s)
+        assert np.array_equal(np.asarray(out["parent"])[i], solo["parent"])
+        assert np.array_equal(np.asarray(out["dist"])[i], solo["dist"])
+
+
+def test_personalized_pagerank_matches_networkx(small_graphs, nx_graphs):
+    g, G = small_graphs["rmat"], nx_graphs["rmat"]
+    store = build_block_store(g, 4)
+    seeds = [3, 9, 27]
+    pr = pagerank(store, seeds=seeds, tol=1e-9, max_iters=200)
+    pers = {v: 0.0 for v in G}
+    for s in seeds:
+        pers[s] = 1.0 / len(seeds)
+    want = nx.pagerank(G, alpha=0.85, personalization=pers, dangling=pers,
+                       tol=1e-12, max_iter=500)
+    want = np.array([want[i] for i in range(g.n)])
+    np.testing.assert_allclose(pr, want, atol=5e-5)
+    assert abs(pr.sum() - 1.0) < 1e-3
+
+
+def test_batched_pagerank_freezes_to_solo_state(store):
+    """Each row of a batched run ends bit-identical to its solo run,
+    even though queries converge at different iterations."""
+    seedsets = [[0], [7, 19], [3, 9, 27]]
+    plan = compile_plan(pagerank_algorithm(), store, mode="sparse_only")
+    states = [pagerank_algorithm(seeds=s).init_state(store)
+              for s in seedsets]
+    res = plan.run(state=batch_states(states, pad_to=4))
+    for i, s in enumerate(seedsets):
+        solo = compile_plan(pagerank_algorithm(seeds=s), store,
+                            mode="sparse_only").run()
+        got = np.asarray(unbatch_state(res.state, i)["rank"])
+        assert np.array_equal(got, solo.result)
+
+
+# ----------------------------------------------------------- GraphServer
+def test_server_batch_bit_identical_to_solo(store):
+    srv = GraphServer(max_batch=8)
+    srv.register_graph("web", store, mode="sparse_only")
+    srcs = [0, 5, 17, 100, 63]
+    uids = [srv.submit(Query("web", "bfs", dict(source=s))) for s in srcs]
+    done = srv.drain()
+    for uid, s in zip(uids, srcs):
+        solo = bfs(store, source=s, mode="sparse_only")
+        q = done[uid]
+        assert q.status == "done"
+        assert np.array_equal(q.result["parent"], solo["parent"])
+        assert np.array_equal(q.result["dist"], solo["dist"])
+        assert q.latency_s is not None and q.latency_s > 0
+
+
+def test_server_mixed_kinds_and_nonbatchable(store):
+    from repro.algorithms import connected_components, k_core
+
+    srv = GraphServer(max_batch=4)
+    srv.register_graph("web", store, mode="sparse_only")
+    u_pr = srv.submit(Query("web", "pagerank", dict(seeds=[1])))
+    u_kc = srv.submit(Query("web", "kcore", dict(k=3)))
+    u_cc = srv.submit(Query("web", "cc"))
+    done = srv.drain()
+    np.testing.assert_array_equal(
+        done[u_pr].result,
+        pagerank(store, seeds=[1], mode="sparse_only"))
+    np.testing.assert_array_equal(done[u_kc].result, k_core(store, 3))
+    np.testing.assert_array_equal(
+        done[u_cc].result, connected_components(store))
+
+
+def test_server_bucket_ladder_traces_once_per_bucket(store):
+    srv = GraphServer(max_batch=8)
+    # distinctive params → a private compiled-step cache entry, so
+    # trace counts aren't polluted by other tests in this process
+    srv.register_graph("web", store, mode="sparse_only")
+    params = dict(seeds=None, damping=0.66)
+    for s in ([2], [5], [9]):
+        srv.submit(Query("web", "pagerank", dict(params, seeds=s)))
+    srv.drain()                      # batch of 3 → bucket 4
+    plan = srv.plan_for("web", "pagerank", dict(damping=0.66, seeds=[2]))
+    c = plan.compile_count
+    for s in ([11], [13], [17], [21]):
+        srv.submit(Query("web", "pagerank", dict(params, seeds=s)))
+    srv.drain()                      # batch of 4 → same bucket, no retrace
+    assert plan.compile_count == c
+    st = srv.stats()
+    assert st["bucket_sizes"] == [4, 4]
+    assert st["batch_sizes"] == [3, 4]
+
+
+def test_admission_budget_never_exceeded_streamed(store):
+    """The acceptance invariant: priced resident+batch footprint stays
+    under the serving budget, asserted under a streamed plan (≥4 waves),
+    while every query still completes with solo-exact results."""
+    wave_budget = "40KB"
+    probe = compile_plan(pagerank_algorithm(), store,
+                         memory_budget=wave_budget)
+    assert probe.num_waves >= 4
+    per_q = batch_state_bytes(
+        tree_array_bytes(pagerank_algorithm(seeds=[0]).init_state(store)), 1)
+    budget = probe.resident_device_bytes + 3 * per_q
+
+    srv = GraphServer(memory_budget=budget, max_batch=8)
+    srv.register_graph("web", store, memory_budget=wave_budget)
+    uids = [srv.submit(Query("web", "pagerank", dict(seeds=[s])))
+            for s in range(8)]
+    st = srv.stats()
+    assert st["queue_depth"] > 0          # budget forces queueing
+    done = srv.drain()
+    st = srv.stats()
+    assert st["footprint_high_water_bytes"] <= budget
+    assert st["rejected"] == 0
+    assert st["completed"] == 8
+    assert st["queued"] > 0
+    for s, uid in enumerate(uids):
+        solo = compile_plan(pagerank_algorithm(seeds=[s]), store,
+                            memory_budget=wave_budget).run().result
+        assert np.array_equal(done[uid].result, solo)
+
+
+def test_admission_rejects_query_that_never_fits(store):
+    probe = compile_plan(pagerank_algorithm(), store, memory_budget="40KB")
+    per_q = batch_state_bytes(
+        tree_array_bytes(pagerank_algorithm(seeds=[0]).init_state(store)), 1)
+    srv = GraphServer(memory_budget=probe.resident_device_bytes + per_q // 2)
+    srv.register_graph("web", store, memory_budget="40KB")
+    uid = srv.submit(Query("web", "pagerank", dict(seeds=[1])))
+    q = srv.result(uid)
+    assert q.status == "rejected" and q.reason
+    assert srv.stats()["rejected"] == 1
+    assert srv.drain()[uid] is q          # drain still returns it
+
+
+def test_tenant_cap_queues_own_burst_not_others(store):
+    per_q = batch_state_bytes(
+        tree_array_bytes(pagerank_algorithm(seeds=[0]).init_state(store)), 1)
+    srv = GraphServer(max_batch=1, tenant_budgets={"a": per_q})
+    srv.register_graph("web", store, mode="sparse_only")
+    srv.submit(Query("web", "pagerank", dict(seeds=[1]), tenant="a"))
+    srv.submit(Query("web", "pagerank", dict(seeds=[2]), tenant="a"))
+    srv.submit(Query("web", "pagerank", dict(seeds=[3]), tenant="b"))
+    st = srv.stats()
+    assert st["queued"] == 1              # a's burst waits behind a's cap
+    assert st["admitted"] == 2            # b admits immediately
+    done = srv.drain()
+    assert all(q.status == "done" for q in done.values())
+    # a query alone over its tenant cap is rejected, not queued forever
+    srv2 = GraphServer(tenant_budgets={"c": per_q // 2})
+    srv2.register_graph("web", store, mode="sparse_only")
+    uid = srv2.submit(Query("web", "pagerank", dict(seeds=[1]), tenant="c"))
+    assert srv2.result(uid).status == "rejected"
+
+
+def test_serving_stats_block(store):
+    srv = GraphServer(memory_budget="256MB", max_batch=4)
+    srv.register_graph("web", store, mode="sparse_only")
+    for s in range(5):
+        srv.submit(Query("web", "bfs", dict(source=s)))
+    done = srv.drain()
+    st = srv.stats()
+    assert st["admitted"] == 5 and st["completed"] == 5
+    lat = st["latency_s"]
+    assert lat["p50"] <= lat["p95"] <= lat["p99"]
+    assert 0 < st["batch_occupancy"] <= 1.0
+    assert st["steps_executed"] > 0
+    assert st["budget_bytes"] == 256_000_000
+    assert 0 < st["footprint_high_water_bytes"] <= st["budget_bytes"]
+    # the serving block rides on every batch's schedule_stats
+    q = next(iter(done.values()))
+    serving = q.schedule_stats["serving"]
+    for key in ("queue_depth", "admitted", "rejected", "batch_occupancy",
+                "latency_s"):
+        assert key in serving
+
+
+def test_server_unknown_inputs_fail_loudly(store):
+    srv = GraphServer()
+    srv.register_graph("web", store)
+    with pytest.raises(KeyError):
+        srv.submit(Query("nope", "pagerank"))
+    with pytest.raises(ValueError):
+        srv.submit(Query("web", "pagerankk"))
+    with pytest.raises(ValueError):
+        srv.submit(Query("web", "bfs", dict(sauce=3)))
+    with pytest.raises(ValueError):
+        srv.register_graph("web", store)
+
+
+# ----------------------------------------------- cross-graph plan reuse
+def test_server_shares_in_core_plan_across_same_shape_graphs(small_graphs):
+    g1 = small_graphs["rmat"]
+    g2 = _permuted_copy(g1, seed=7)
+    s1, s2 = build_block_store(g1, 4), build_block_store(g2, 4)
+    srv = GraphServer(max_batch=4)
+    srv.register_graph("a", s1, mode="sparse_only")
+    srv.register_graph("b", s2, mode="sparse_only")
+    u1 = srv.submit(Query("a", "pagerank", dict(seeds=[1], damping=0.71)))
+    srv.drain()
+    plan = srv.plan_for("a", "pagerank", dict(seeds=[1], damping=0.71))
+    c = plan.compile_count
+    u2 = srv.submit(Query("b", "pagerank", dict(seeds=[1], damping=0.71)))
+    done = srv.drain()
+    assert srv.plan_for("b", "pagerank",
+                        dict(seeds=[1], damping=0.71)) is plan
+    assert plan.compile_count == c        # zero new steps for graph b
+    fresh = compile_plan(pagerank_algorithm(seeds=[1], damping=0.71), s2,
+                         mode="sparse_only", share=False).run().result
+    np.testing.assert_allclose(done[u2].result, fresh, atol=1e-7)
+    assert done[u1].result.shape == fresh.shape
+
+
+def test_streamed_plan_reuse_compiles_zero_new_steps(small_graphs):
+    """Satellite: a second streamed plan over a same-shape graph rides
+    the process-wide stream-step cache — zero new compiles when the
+    wave bucket ladder coincides — and matches a fresh unshared plan."""
+    g1 = small_graphs["rmat"]
+
+    def alg():
+        return pagerank_algorithm(damping=0.81)      # private cache entry
+
+    s1, s2 = build_block_store(g1, 4), build_block_store(g1, 4)
+    p1 = compile_plan(alg(), s1, memory_budget="40KB")
+    p1.run()
+    c = p1.compile_count
+    assert c >= 1
+    p2 = compile_plan(alg(), s2, memory_budget="40KB")
+    r2 = p2.run()
+    assert p2.compile_count == c          # same buckets → zero new steps
+    # a genuinely different (relabeled) graph may pack different wave
+    # buckets — each NEW bucket shape traces once, results still match
+    g3 = _permuted_copy(g1, seed=11)
+    s3 = build_block_store(g3, 4)
+    p3 = compile_plan(alg(), s3, memory_budget="40KB")
+    r3 = p3.run()
+    fresh = compile_plan(alg(), s3, memory_budget="40KB",
+                         share=False).run()
+    np.testing.assert_allclose(r3.result, fresh.result, atol=1e-7)
+    np.testing.assert_allclose(r2.result, p1.run().result, atol=1e-7)
+
+
+def test_in_core_plan_run_other_store_matches_fresh(small_graphs):
+    """Satellite: plan.run(other_store) — zero new steps AND the same
+    numbers a fresh plan computes (the serving path leans on this)."""
+    g1 = small_graphs["rmat"]
+    g2 = _permuted_copy(g1, seed=13)
+    s1, s2 = build_block_store(g1, 4), build_block_store(g2, 4)
+    plan = compile_plan(pagerank_algorithm(damping=0.79), s1,
+                        mode="sparse_only", share=False)
+    plan.run()
+    assert plan.compile_count == 1
+    via_reuse = plan.run(s2)
+    assert plan.compile_count == 1        # zero new compiled steps
+    fresh = compile_plan(pagerank_algorithm(damping=0.79), s2,
+                         mode="sparse_only", share=False).run()
+    np.testing.assert_allclose(via_reuse.result, fresh.result, atol=1e-7)
+
+
+# ------------------------------------------------------ batch-state helpers
+def test_batch_state_helpers_round_trip():
+    states = [dict(x=np.full((3,), i, np.int32), s=np.int32(i))
+              for i in range(3)]
+    b = batch_states(states, pad_to=4)
+    assert b["x"].shape == (4, 3) and b["s"].shape == (4,)
+    for i in range(3):
+        row = unbatch_state(b, i)
+        assert np.array_equal(np.asarray(row["x"]), states[i]["x"])
+        assert int(row["s"]) == i
+    assert int(unbatch_state(b, 3)["s"]) == 2   # pad replicates the last
+    with pytest.raises(ValueError):
+        batch_states([])
+    with pytest.raises(ValueError):
+        batch_states(states, pad_to=2)

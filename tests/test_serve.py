@@ -41,6 +41,20 @@ def test_engine_eos_stops_early(small_model):
     assert len(done[0].output) == 1  # stopped at EOS immediately
 
 
+def test_cache_length_retirement_sets_truncated(small_model):
+    """A request the wave's cache cannot finish is done AND truncated;
+    normally-finished requests are not."""
+    cfg, params = small_model
+    eng = ServeEngine(cfg, params, batch_slots=2, cache_len=16)
+    eng.submit(Request(uid=0, prompt=[1, 2, 3], max_new_tokens=100))
+    eng.submit(Request(uid=1, prompt=[4, 5], max_new_tokens=3))
+    done = {r.uid: r for r in eng.run_until_drained()}
+    assert done[0].done and done[0].truncated
+    assert len(done[0].output) < 100
+    assert done[1].done and not done[1].truncated
+    assert len(done[1].output) == 3
+
+
 def test_engine_greedy_matches_single_stream(small_model):
     """Batched slots must not leak state between requests."""
     cfg, params = small_model
