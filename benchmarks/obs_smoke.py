@@ -1,0 +1,145 @@
+"""The CI obs-smoke gate: the telemetry layer must be loadable and free.
+
+Two promises the unified telemetry layer makes, checked on a ≥4-wave
+streamed PageRank run:
+
+* **The exported timeline is valid.**  A traced run's Chrome-trace JSON
+  parses, timestamps are monotonic in file order, every pipeline phase
+  (assemble / device_put / compute, plus the per-iteration span) is
+  present, and the ``main`` / ``staging`` / per-device lanes all
+  appear — i.e. the artifact actually loads in ``ui.perfetto.dev`` and
+  shows the three-stage pipeline.
+
+* **Tracing is (near-)free.**  Traced wall time must stay within
+  :data:`SMOKE_OVERHEAD_RATIO` of untraced on the same warm plan —
+  ``repeats`` interleaved alternating-order pairs per attempt, ratio
+  of means, best of up to three attempts (noise only ever inflates the
+  ratio: the tracer adds work, it never removes any), compile and
+  calibration excluded — so turning ``REPRO_TRACE`` on in production
+  costs nothing measurable.
+
+Writes the unified run-report to ``BENCH_obs.json`` and leaves the
+validated timeline at ``obs_smoke.perfetto.json`` (both build
+artifacts).  CLI: ``python -m benchmarks.obs_smoke --smoke``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+#: Traced wall time may be at most this multiple of untraced.
+SMOKE_OVERHEAD_RATIO = 1.05
+
+REQUIRED_LANES = ("main", "staging", "device/0")
+REQUIRED_PHASES = ("assemble", "device_put", "compute", "iteration")
+
+
+def _timed(fn) -> float:
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def run_smoke(out_path: str = "BENCH_obs.json", *,
+              trace_path: str = "obs_smoke.perfetto.json",
+              repeats: int = 8, backend: str = "xla") -> bool:
+    from repro import obs
+    from repro.core import build_block_store, compile_plan, rmat
+    from repro.algorithms import pagerank_algorithm
+
+    g = rmat(12, 16, seed=5)
+    plan = compile_plan(pagerank_algorithm(), build_block_store(g, 8),
+                        mode="sparse_only", backend=backend, share=False,
+                        memory_budget="256KB", pipeline_depth=2,
+                        rebalance_threshold=None)
+    # warm: compile + calibration happen here, outside both timings
+    res = plan.run()
+    waves = res.schedule_stats["streaming"]["num_waves"]
+
+    # One attempt: `repeats` interleaved pairs with alternating order
+    # (so load drift on a shared CI runner hits both sides equally),
+    # ratio of means.  Noise can only inflate the ratio — the tracer
+    # adds work, never removes it — so the gate takes the best of up to
+    # three attempts and stops early once one lands under the bar.
+    events, dropped = [], 0
+
+    def _run_traced(traced: list) -> None:
+        nonlocal events, dropped
+        with obs.tracing(capacity=1 << 18) as tr:
+            traced.append(_timed(plan.run))
+            events, dropped = tr.events(), tr.dropped
+
+    def _attempt() -> tuple[float, float]:
+        untraced, traced = [], []
+        for i in range(repeats):
+            if i % 2:
+                _run_traced(traced)
+                untraced.append(_timed(plan.run))
+            else:
+                untraced.append(_timed(plan.run))
+                _run_traced(traced)
+        return sum(untraced) / len(untraced), sum(traced) / len(traced)
+
+    attempts: list[float] = []
+    best = float("inf")
+    untraced_s = traced_s = 0.0
+    for _ in range(3):
+        u, t = _attempt()
+        r = t / u
+        attempts.append(round(r, 4))
+        if r < best:
+            best, untraced_s, traced_s = r, u, t
+        if r <= SMOKE_OVERHEAD_RATIO:
+            break
+    trace = obs.export.write_chrome_trace(trace_path, events)
+
+    try:
+        summary = obs.export.validate_chrome_trace(
+            json.dumps(trace), require_lanes=REQUIRED_LANES,
+            require_phases=REQUIRED_PHASES)
+        trace_error = None
+    except ValueError as e:        # pragma: no cover — the gate's teeth
+        summary, trace_error = dict(lanes=[], span_counts={}, events=0), str(e)
+
+    overhead = traced_s / untraced_s if untraced_s > 0 else float("inf")
+    checks = dict(
+        multi_wave=waves >= 4,
+        trace_valid=trace_error is None,
+        nothing_dropped=dropped == 0,
+        overhead=overhead <= SMOKE_OVERHEAD_RATIO,
+    )
+    payload = obs.export.run_report("obs_smoke", dict(
+        graph="rmat(12, 16, seed=5)", budget="256KB", waves=waves,
+        floors=dict(overhead_ratio=SMOKE_OVERHEAD_RATIO),
+        untraced_s=round(untraced_s, 5), traced_s=round(traced_s, 5),
+        overhead_ratio=round(overhead, 4), overhead_attempts=attempts,
+        trace=dict(path=trace_path, lanes=summary["lanes"],
+                   span_counts=summary["span_counts"],
+                   events=summary["events"], dropped=dropped,
+                   error=trace_error),
+        checks=checks,
+        passed=all(checks.values()),
+    ))
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(json.dumps(payload, indent=2))
+    return payload["passed"]
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--smoke", action="store_true",
+        help="CI obs-smoke gate: validate the exported timeline and the "
+             "traced-vs-untraced overhead ratio; writes BENCH_obs.json",
+    )
+    ap.add_argument("--smoke-out", default="BENCH_obs.json")
+    ap.add_argument("--trace-out", default="obs_smoke.perfetto.json")
+    ap.add_argument("--repeats", type=int, default=8)
+    a = ap.parse_args()
+    if a.smoke:
+        sys.exit(0 if run_smoke(a.smoke_out, trace_path=a.trace_out,
+                                repeats=a.repeats) else 1)
+    ap.print_help()

@@ -235,14 +235,16 @@ def run_smoke(out_path: str = "BENCH_stream.json", *, repeats: int = 3,
             modes["pipelined"]["overlap_efficiency"] >= SMOKE_OVERLAP_FLOOR
         ),
     )
-    payload = dict(
+    from repro import obs
+
+    payload = obs.export.run_report("stream_smoke", dict(
         graph="rmat(12, 16, seed=5)", budget=budget,
         floors=dict(overlap_efficiency=SMOKE_OVERLAP_FLOOR),
         **modes,
         tc_trace_stability=tc,
         checks=checks,
         passed=all(checks.values()),
-    )
+    ))
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)
     print(json.dumps(payload, indent=2))

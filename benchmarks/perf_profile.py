@@ -1,10 +1,21 @@
 """Performance profiles (paper Fig. 3, Dolan–Moré): fraction of
 (algorithm × graph) instances each scheduling mode solves within factor
-τ of the per-instance best."""
+τ of the per-instance best.
+
+Timing is span-driven: every measured run executes under a
+``repro.obs`` span (``profile.run`` with mode/instance/repeat
+attributes), and the per-instance medians are derived from the recorded
+span durations — the tracer is the single timing source, replacing the
+module's old private stopwatch shims.  The same buffer is exported as
+``perf_profile.perfetto.json``, so a profile sweep leaves behind a
+loadable timeline (one ``profile.run`` span per measured repeat, with
+the executors' own iteration/phase spans nested inside).
+"""
 from __future__ import annotations
 
 import numpy as np
 
+from repro import obs
 from repro.core import build_block_store, compile_plan
 from repro.algorithms import (
     afforest_algorithm, bfs_algorithm, pagerank_algorithm, sv_algorithm,
@@ -13,33 +24,54 @@ from repro.algorithms import (
 from repro.algorithms.tc import orient_dag
 from repro.data import benchmark_suite
 
-from .common import csv_row, time_median
+from .common import csv_row
 
 MODES = ["sparse_only", "dense_only", "hybrid"]
 TAUS = [1.0, 1.1, 1.25, 1.5, 2.0, 4.0]
 
+#: Timeline artifact the sweep leaves behind (Chrome-trace JSON).
+TRACE_PATH = "perf_profile.perfetto.json"
 
-def run(scale: str = "small", repeats: int = 3, backend: str = "xla") -> list[str]:
+
+def _median_span_s(tr: obs.Tracer, **attrs) -> float:
+    """Median duration (seconds) of the ``profile.run`` spans matching
+    ``attrs`` — the span buffer is the timing record."""
+    durs = [ev.dur_ns / 1e9 for ev in tr.spans("profile.run", **attrs)]
+    return float(np.median(durs)) if durs else float("inf")
+
+
+def run(scale: str = "small", repeats: int = 3, backend: str = "xla",
+        trace_path: str | None = TRACE_PATH) -> list[str]:
     graphs = benchmark_suite(scale)
     algos = {
         "pr": pagerank_algorithm, "sv": sv_algorithm, "cc": afforest_algorithm,
         "bfs": lambda: bfs_algorithm(0), "tc": tc_algorithm,
     }
     times: dict[str, dict[str, float]] = {m: {} for m in MODES}
-    for gname, g in graphs.items():
-        for aname, afac in algos.items():
-            inst = f"{aname}/{gname}"
-            for mode in MODES:
-                base = orient_dag(g) if aname == "tc" else g
-                store = build_block_store(base, 4)
-                try:
-                    plan = compile_plan(afac(), store, mode=mode, tile_dim=512,
-                                        dense_density=0.001, backend=backend)
-                    times[mode][inst] = time_median(
-                        lambda: plan.run(), repeats=repeats
-                    )
-                except Exception:
-                    times[mode][inst] = float("inf")
+    # a dedicated tracer: the sweep records (and exports) its own
+    # timeline without clobbering whatever REPRO_TRACE set up
+    with obs.tracing(capacity=1 << 18) as tr:
+        for gname, g in graphs.items():
+            for aname, afac in algos.items():
+                inst = f"{aname}/{gname}"
+                for mode in MODES:
+                    base = orient_dag(g) if aname == "tc" else g
+                    store = build_block_store(base, 4)
+                    try:
+                        plan = compile_plan(afac(), store, mode=mode,
+                                            tile_dim=512, dense_density=0.001,
+                                            backend=backend)
+                        plan.run()      # warm-up: compile outside the spans
+                        for rep in range(repeats):
+                            with obs.span("profile.run", lane="main",
+                                          mode=mode, inst=inst, rep=rep):
+                                plan.run()
+                        times[mode][inst] = _median_span_s(
+                            tr, mode=mode, inst=inst)
+                    except Exception:
+                        times[mode][inst] = float("inf")
+        if trace_path:
+            obs.export.write_chrome_trace(trace_path, tr.events())
 
     instances = sorted(times[MODES[0]])
     best = {

@@ -137,7 +137,9 @@ def run_smoke(out_path: str = "BENCH_serve.json") -> bool:
             for m in modes
         ),
     )
-    payload = dict(
+    from repro import obs
+
+    payload = obs.export.run_report("serve_smoke", dict(
         workload="8x pagerank(seeds=[...]) on rmat(10, 8, seed=7)",
         floors=dict(step_reduction=SMOKE_STEP_REDUCTION),
         **modes,
@@ -145,7 +147,7 @@ def run_smoke(out_path: str = "BENCH_serve.json") -> bool:
         max_abs_result_diff=max_abs_diff,
         checks=checks,
         passed=all(checks.values()),
-    )
+    ))
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)
     print(json.dumps(payload, indent=2))

@@ -18,6 +18,8 @@ from __future__ import annotations
 
 from typing import TYPE_CHECKING, Callable, TypeVar
 
+from .. import obs
+
 if TYPE_CHECKING:  # pragma: no cover — typing only, avoids an import cycle
     from .functors import BlockAlgorithm
 
@@ -44,8 +46,12 @@ def shared_entry(cache: dict, key: tuple, factory: Callable[[], T], *,
     stream.py).  ``share=False`` bypasses the cache for ad-hoc
     algorithms that reuse a registered name with different kernels."""
     if not share:
+        obs.metrics.counter("compile.cache.bypasses").inc()
         return factory()
     entry = cache.get(key)
     if entry is None:
+        obs.metrics.counter("compile.cache.misses").inc()
         entry = cache[key] = factory()
+    else:
+        obs.metrics.counter("compile.cache.hits").inc()
     return entry

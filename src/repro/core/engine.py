@@ -43,6 +43,7 @@ if TYPE_CHECKING:  # pragma: no cover — import cycle guard, typing only
 import jax
 import jax.numpy as jnp
 
+from .. import obs
 from .blocks import BlockStore
 from .compilecache import alg_cache_key, shared_entry
 from .context import Context, HostCtx, build_context, build_host_ctx
@@ -109,6 +110,7 @@ class _CompiledStep:
 
         def step(ctx: Context, state, it, run_dense: bool):
             self.traces += 1  # trace-time side effect == compile counter
+            obs.metrics.counter("compile.traces").inc()
             if alg.kernel_sparse is not None:
                 state = alg.kernel_sparse(ctx, state, it)
             if alg.kernel_dense is not None and run_dense:
@@ -273,17 +275,24 @@ class Plan:
         it = 0
         cont = True
         while cont and it < alg.max_iterations:
-            if alg.before is not None:
-                state = alg.before(b.host, state, it)
-            state = self._step(b.context, state, jnp.int32(it), b.run_dense)
-            if alg.after is not None:
-                state, cont = alg.after(b.host, state, it)
+            with obs.span("iteration", lane="main", it=it, alg=alg.name):
+                if alg.before is not None:
+                    state = alg.before(b.host, state, it)
+                with obs.span("compute", lane="device", it=it):
+                    state = self._step(b.context, state, jnp.int32(it),
+                                       b.run_dense)
+                if alg.after is not None:
+                    state, cont = alg.after(b.host, state, it)
             it += 1
         state = jax.tree.map(
             lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
             state,
         )
         dt = time.perf_counter() - t0
+        m = obs.metrics
+        m.counter("engine.runs").inc()
+        m.counter("engine.iterations").inc(it)
+        m.histogram("engine.run_seconds").observe(dt)
         result = alg.finalize(b.store, state) if alg.finalize else state
         return RunResult(
             result=result,

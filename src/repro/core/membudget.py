@@ -51,6 +51,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from .. import obs
 from .blocks import BlockStore
 from .scheduler import Schedule
 
@@ -309,6 +310,8 @@ class TenantLedger:
                 f"+ {int(nbytes)} > {self.budget(tenant)}"
             )
         self._held[str(tenant)] = self.held(tenant) + int(nbytes)
+        obs.metrics.gauge("membudget.tenant_held_high_water_bytes").set_max(
+            sum(self._held.values()))
 
     def release(self, tenant: str, nbytes: int) -> None:
         self._held[str(tenant)] = max(0, self.held(tenant) - int(nbytes))
@@ -412,6 +415,8 @@ def build_waves(store: BlockStore, schedule: Schedule,
         cur_bytes += b
     if cur:
         waves.append(_close_wave(cur, cur_bytes, schedule))
+    obs.metrics.counter("membudget.wave_builds").inc()
+    obs.metrics.counter("membudget.waves_packed").inc(len(waves))
     return waves
 
 

@@ -188,6 +188,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
+from .. import obs
 from .blocks import BlockStore
 from .compilecache import alg_cache_key, shared_entry
 from .context import _TRACED, Context, build_host_ctx, with_arrays
@@ -516,7 +517,7 @@ class _StagePipeline:
         self.stall_s = 0.0
         self._err: BaseException | None = None
         self._t = threading.Thread(target=self._work, args=(plan,),
-                                   daemon=True)
+                                   name="repro-staging", daemon=True)
         self._t.start()
 
     def _work(self, plan: "StreamingPlan") -> None:
@@ -527,7 +528,7 @@ class _StagePipeline:
                     return
                 for w in indices:
                     t0 = time.perf_counter()
-                    slab = plan._assemble_runtime(plan._slabs[w])
+                    slab = plan._assemble_runtime(plan._slabs[w], wave=w)
                     self.assemble_s += time.perf_counter() - t0
                     self._q.put(slab)
         except BaseException as e:  # surfaced on the consumer side
@@ -1014,20 +1015,28 @@ class StreamingPlan:
             out.append(slab)
         return out
 
-    def _assemble_runtime(self, recipe: _WaveRecipe) -> _WaveSlab:
+    def _assemble_runtime(self, recipe: _WaveRecipe, *,
+                          wave: int = -1) -> _WaveSlab:
         """Stage-1 body: reproduce one wave's slab into arena buffers.
 
         Pure gathers — ``prepare`` ran in the planning pass and its
         (post-hoist) outputs are cached on the recipe, so the worker
         thread never touches jax or the algorithm.  Byte accounting is
         pinned to the recipe's planned numbers (they are equal by
-        construction; pinning keeps the stats deterministic)."""
-        if self.mesh is not None:
-            slab, _ = self._assemble_mesh(recipe.wave, extras=recipe.extras,
-                                          alloc=self._arena.take)
-        else:
-            slab = self._assemble(recipe.wave, extras=recipe.extras,
-                                  alloc=self._arena.take)
+        construction; pinning keeps the stats deterministic).  The span
+        lands on the ``staging`` lane whichever thread runs it — the
+        background worker in steady state, the main loop during
+        calibration and at ``pipeline_depth=0``."""
+        with obs.span("assemble", lane="staging", wave=wave,
+                      bytes=recipe.staged_bytes):
+            if self.mesh is not None:
+                slab, _ = self._assemble_mesh(
+                    recipe.wave, extras=recipe.extras,
+                    alloc=self._arena.take,
+                )
+            else:
+                slab = self._assemble(recipe.wave, extras=recipe.extras,
+                                      alloc=self._arena.take)
         slab.staged_bytes = recipe.staged_bytes
         slab.workspace_bytes = recipe.workspace_bytes
         slab.per_device_bytes = recipe.per_device_bytes
@@ -1562,6 +1571,9 @@ class StreamingPlan:
         self._edge_free_bufs = None     # stale slab-0 reference
         self._rebalanced = True
         self.schedule.stats["waves"] = len(self._slabs)
+        obs.metrics.counter("stream.rebalances").inc()
+        obs.instant("rebalance", lane="main", skew=self._last_skew,
+                    waves=len(self._slabs))
         return True
 
     @property
@@ -1594,7 +1606,7 @@ class StreamingPlan:
             self._arena.give(*arrays)
             self._arena_deferred.pop(0)
 
-    def _put_slab(self, slab: _WaveSlab):
+    def _put_slab(self, slab: _WaveSlab, *, wave: int = -1):
         """Stage 2: one host→device copy of an assembled wave slab.
 
         Single device: a dict of device buffers.  Mesh: the ``[D, …]``
@@ -1604,30 +1616,34 @@ class StreamingPlan:
         exactly this transfer with the previous wave's compute."""
         self._bytes_staged += slab.staged_bytes
         t0 = time.perf_counter()
-        arrays = dict(
-            src=slab.src, dst=slab.dst, edge_block=slab.edge_block,
-            sparse_edge_mask=slab.sparse_mask, dense_edge_mask=slab.dense_mask,
-        )
-        if slab.tiles is not None:
-            arrays.update(tiles=slab.tiles, tile_row_start=slab.tile_row_start,
-                          tile_col_start=slab.tile_col_start)
-        if slab.csr is not None:
-            arrays["indices"] = slab.csr
-        if self.mesh is None:
-            bufs = jax.device_put(arrays)
-            if slab.extras is not None:
-                bufs["extras"] = _put_arrays(slab.extras)
-        else:
-            shard = NamedSharding(self.mesh, PartitionSpec(self.mesh_axis))
-            slab_bufs = jax.device_put(arrays, {k: shard for k in arrays})
-            if slab.extras is not None:
-                ex_leaves, ex_aux = _split_static(slab.extras)
-                ex_leaves = tuple(
-                    jax.device_put(leaf, shard) for leaf in ex_leaves
-                )
+        with obs.span("device_put", lane="device", wave=wave,
+                      devices=self._mesh_devices, bytes=slab.staged_bytes):
+            arrays = dict(
+                src=slab.src, dst=slab.dst, edge_block=slab.edge_block,
+                sparse_edge_mask=slab.sparse_mask,
+                dense_edge_mask=slab.dense_mask,
+            )
+            if slab.tiles is not None:
+                arrays.update(tiles=slab.tiles,
+                              tile_row_start=slab.tile_row_start,
+                              tile_col_start=slab.tile_col_start)
+            if slab.csr is not None:
+                arrays["indices"] = slab.csr
+            if self.mesh is None:
+                bufs = jax.device_put(arrays)
+                if slab.extras is not None:
+                    bufs["extras"] = _put_arrays(slab.extras)
             else:
-                ex_leaves, ex_aux = (), None
-            bufs = (slab_bufs, ex_leaves, ex_aux)
+                shard = NamedSharding(self.mesh, PartitionSpec(self.mesh_axis))
+                slab_bufs = jax.device_put(arrays, {k: shard for k in arrays})
+                if slab.extras is not None:
+                    ex_leaves, ex_aux = _split_static(slab.extras)
+                    ex_leaves = tuple(
+                        jax.device_put(leaf, shard) for leaf in ex_leaves
+                    )
+                else:
+                    ex_leaves, ex_aux = (), None
+                bufs = (slab_bufs, ex_leaves, ex_aux)
         self._phase["device_put"] += time.perf_counter() - t0
         return bufs
 
@@ -1642,18 +1658,27 @@ class StreamingPlan:
         """Stage 3: dispatch one staged wave into the right jitted step."""
         run_dense = self._slabs[w].run_dense
         if self.mesh is None:
-            return self._step(self._wave_context(bufs), state0, acc, iarr,
-                              run_dense)
-        slab_bufs, ex_leaves, ex_aux = bufs
-        out = self._mesh_step(self._resident, slab_bufs, ex_leaves, state0,
-                              acc, iarr, run_dense, ex_aux)
+            with obs.span("compute", lane="device", wave=w,
+                          devices=self._mesh_devices):
+                return self._step(self._wave_context(bufs), state0, acc,
+                                  iarr, run_dense)
+        with obs.span("compute", lane="device", wave=w,
+                      devices=self._mesh_devices):
+            slab_bufs, ex_leaves, ex_aux = bufs
+            out = self._mesh_step(self._resident, slab_bufs, ex_leaves,
+                                  state0, acc, iarr, run_dense, ex_aux)
         # per-device collective payload: each combined leaf crosses one
         # all-reduce per wave step (trace-time combined_keys is exact)
-        self._collective_bytes += sum(
+        cbytes = sum(
             int(state0[k].nbytes) for k in self._mesh_step.combined_keys
             if hasattr(state0[k], "nbytes")
         )
+        self._collective_bytes += cbytes
         self._phase["collective"] += self._collective_unit_s
+        # the real all-reduce is fused inside the shard_map step, so the
+        # timeline carries its attributable stand-in cost as a span
+        obs.add_span("collective", self._collective_unit_s, lane="device",
+                     wave=w, devices=self._mesh_devices, bytes=cbytes)
         return out
 
     def _measure_collective_unit(self, state0) -> None:
@@ -1693,10 +1718,10 @@ class StreamingPlan:
         warm = state0
         for w in range(nw):
             t0 = time.perf_counter()
-            slab = self._assemble_runtime(self._slabs[w])
+            slab = self._assemble_runtime(self._slabs[w], wave=w)
             self._phase["assemble"] += time.perf_counter() - t0
-            warm = self._step_wave(w, self._put_slab(slab), state0, warm,
-                                   iarr)
+            warm = self._step_wave(w, self._put_slab(slab, wave=w), state0,
+                                   warm, iarr)
             self._park_for_recycle(slab, warm)
             # keep the pool at its (depth+1)-slab bound even here: on a
             # caught-up device the previous wave's buffers are already
@@ -1710,11 +1735,11 @@ class StreamingPlan:
         wave_s: list[float] = []
         for w in range(nw):
             t0 = time.perf_counter()
-            slab = self._assemble_runtime(self._slabs[w])
+            slab = self._assemble_runtime(self._slabs[w], wave=w)
             dt = time.perf_counter() - t0
             assemble_s += dt
             put0 = self._phase["device_put"]
-            bufs = self._put_slab(slab)
+            bufs = self._put_slab(slab, wave=w)
             _block_tree(bufs)
             put_s += self._phase["device_put"] - put0
             t0 = time.perf_counter()
@@ -1782,11 +1807,11 @@ class StreamingPlan:
                 acc = self._step(ctx, state0, acc, iarr, False)
                 return acc, 0.0
             if self._edge_free_bufs is None:
-                slab = self._assemble_runtime(self._slabs[0])
+                slab = self._assemble_runtime(self._slabs[0], wave=0)
                 # the cached device bufs outlive this iteration (and may
                 # alias the host arrays), so these buffers never
                 # re-enter the arena — they free with the cache
-                self._edge_free_bufs = self._put_slab(slab)
+                self._edge_free_bufs = self._put_slab(slab, wave=0)
             ctx = self._wave_context(self._edge_free_bufs)
             if self._prefix_dev is not None:
                 # adjacency sampling reads the first-k-neighbors CSR,
@@ -1818,7 +1843,7 @@ class StreamingPlan:
                 # synchronous baseline (pipeline_depth=0): assembly
                 # runs inline on the critical path
                 ta = time.perf_counter()
-                s = self._assemble_runtime(self._slabs[i])
+                s = self._assemble_runtime(self._slabs[i], wave=i)
                 self._phase["assemble"] += time.perf_counter() - ta
                 return s
             s = pipe.get()
@@ -1831,7 +1856,7 @@ class StreamingPlan:
             return s
 
         slab = next_slab(0)
-        bufs = self._put_slab(slab)
+        bufs = self._put_slab(slab, wave=0)
         for w in range(nw):
             # async dispatch: the step for wave w starts on the device
             # (or the whole mesh, under shard_map)...
@@ -1845,7 +1870,7 @@ class StreamingPlan:
             # in flight per device).
             if w + 1 < nw:
                 slab = next_slab(w + 1)
-                bufs = self._put_slab(slab)
+                bufs = self._put_slab(slab, wave=w + 1)
             else:
                 slab, bufs = None, None
         _block_tree(acc)
@@ -1886,22 +1911,24 @@ class StreamingPlan:
         stall_before = self._stall_s
         try:
             while cont and it < alg.max_iterations:
-                if alg.before is not None:
-                    state = alg.before(self.host, state, it)
-                if self.mesh is not None:
-                    # the state is replicated on every mesh device
-                    # (writes are reduced by the step's collectives;
-                    # host hooks may have injected fresh uncommitted
-                    # leaves) — a no-op for leaves already placed
-                    state = self._put_replicated(state)
-                state, wall = self._run_waves(state, it)
-                if wall > 0.0:
-                    overlapped_wall += wall
-                    overlapped_iters += 1
-                if self._post is not None:
-                    state = self._post(self._resident, state, jnp.int32(it))
-                if alg.after is not None:
-                    state, cont = alg.after(self.host, state, it)
+                with obs.span("iteration", lane="main", it=it, alg=alg.name):
+                    if alg.before is not None:
+                        state = alg.before(self.host, state, it)
+                    if self.mesh is not None:
+                        # the state is replicated on every mesh device
+                        # (writes are reduced by the step's collectives;
+                        # host hooks may have injected fresh uncommitted
+                        # leaves) — a no-op for leaves already placed
+                        state = self._put_replicated(state)
+                    state, wall = self._run_waves(state, it)
+                    if wall > 0.0:
+                        overlapped_wall += wall
+                        overlapped_iters += 1
+                    if self._post is not None:
+                        state = self._post(self._resident, state,
+                                           jnp.int32(it))
+                    if alg.after is not None:
+                        state, cont = alg.after(self.host, state, it)
                 it += 1
         finally:
             if self._pipe is not None:
@@ -1913,6 +1940,12 @@ class StreamingPlan:
         )
         dt = time.perf_counter() - t0
         result = alg.finalize(self.store, state) if alg.finalize else state
+        self._publish_metrics(
+            iterations=it, seconds=dt,
+            staged_delta=self._bytes_staged - staged_before,
+            phase_delta={k: self._phase[k] - phase_before[k]
+                         for k in self._phase},
+        )
         return RunResult(
             result=result,
             state=state,
@@ -1932,6 +1965,28 @@ class StreamingPlan:
                 ),
             ),
         )
+
+    def _publish_metrics(self, *, iterations: int, seconds: float,
+                         staged_delta: int, phase_delta: dict) -> None:
+        """Publish one run's deltas into the process-wide registry.
+
+        ``schedule_stats`` stays the per-run source of truth; the
+        registry accumulates across runs (and plans) so the unified
+        run-report and obs-smoke gate read one place."""
+        m = obs.metrics
+        m.counter("stream.runs").inc()
+        m.counter("stream.iterations").inc(iterations)
+        m.histogram("stream.run_seconds").observe(seconds)
+        for k, v in phase_delta.items():
+            m.counter(f"stream.phase_seconds.{k}").inc(max(v, 0.0))
+        m.counter("stream.bytes_staged").inc(max(int(staged_delta), 0))
+        m.gauge("stream.arena_bytes").set_max(self._arena.bytes)
+        m.gauge("stream.waves").set(len(self._slabs))
+        m.gauge("stream.mesh_devices").set(self._mesh_devices)
+        m.gauge("stream.budget_bytes").set(self.budget.total_bytes)
+        if self._slabs:
+            m.gauge("stream.budget_high_water_bytes").set_max(
+                max(self._budget_load(r) for r in self._slabs))
 
     def _streaming_stats(self, state, overlapped_wall: float,
                          overlapped_iters: int, *,

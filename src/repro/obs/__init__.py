@@ -1,0 +1,55 @@
+"""Unified telemetry: structured tracing, metrics, timeline export.
+
+``repro.obs`` is the one low-overhead observability subsystem every
+execution layer publishes into, replacing the ad-hoc
+``time.perf_counter()`` deltas and disconnected stats dicts that used
+to live in each module:
+
+* **Spans** (:mod:`repro.obs.tracer`) — ``with obs.span("assemble",
+  wave=k): ...`` records a named interval into a thread-safe ring
+  buffer shared by the streaming executor's background staging worker
+  and the main loop.  Off by default; ``REPRO_TRACE=1`` (or
+  :func:`enable`) turns it on, and when off every instrumentation
+  point is a single ``None``-check no-op, so traced and untraced runs
+  are bit-identical and equally fast.
+* **Metrics** (:mod:`repro.obs.metrics`) — the always-on process-wide
+  registry (:data:`metrics`) of counters, gauges, and fixed-bucket
+  histograms: phase seconds, staged/arena bytes, budget high water,
+  compile/trace counts, admission decisions, batch occupancy, query
+  latency.  ``obs.metrics.snapshot()`` renders it as one flat dict.
+* **Exporters** (:mod:`repro.obs.export`) — Chrome-trace/Perfetto JSON
+  timelines (one lane per mesh device plus the staging thread;
+  per-wave ``assemble → device_put → compute → collective`` spans) and
+  the schema-versioned run-report that ``BENCH_stream.json``,
+  ``BENCH_serve.json``, and ``BENCH_obs.json`` share.
+
+Quickstart::
+
+    from repro import obs
+
+    obs.enable()                          # or REPRO_TRACE=1 in the env
+    plan.run()                            # spans record as it executes
+    obs.export.write_chrome_trace("run.perfetto.json")
+    obs.metrics.snapshot()                # {"stream.phase_seconds...": ...}
+
+See ``docs/observability.md`` for the metric catalog and how to read
+the exported timeline in ``ui.perfetto.dev``.
+"""
+from . import export
+from .metrics import (
+    Counter, Gauge, Histogram, MetricsRegistry, REGISTRY,
+    exp_bucket_edges, latency_bucket_edges, metrics,
+)
+from .tracer import (
+    SpanEvent, Tracer, add_span, disable, enable, enabled, instant, span,
+    tracer, tracing,
+)
+
+__all__ = [
+    "span", "add_span", "instant", "enable", "disable", "enabled",
+    "tracer", "tracing", "Tracer", "SpanEvent",
+    "metrics", "REGISTRY", "MetricsRegistry",
+    "Counter", "Gauge", "Histogram",
+    "exp_bucket_edges", "latency_bucket_edges",
+    "export",
+]

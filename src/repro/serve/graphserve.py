@@ -46,6 +46,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any
 
+from .. import obs
 from ..algorithms.bfs import bfs_algorithm
 from ..algorithms.cc import afforest_algorithm
 from ..algorithms.kcore import kcore_algorithm
@@ -336,12 +337,15 @@ class GraphServer:
         store, _ = self._graphs[head.graph]
         plan = self._plan_of(head.graph, entry)
         try:
-            if entry.batchable:
-                state = batch_states([q._init_state for q in group],
-                                     pad_to=bucket)
-            else:
-                state = group[0]._init_state
-            res = plan.run(store=store, state=state)
+            with obs.span("serve.batch", lane="main", graph=head.graph,
+                          alg=entry.key[0] if entry.key else "?",
+                          real=len(group), bucket=bucket):
+                if entry.batchable:
+                    state = batch_states([q._init_state for q in group],
+                                         pad_to=bucket)
+                else:
+                    state = group[0]._init_state
+                res = plan.run(store=store, state=state)
         finally:
             if pad_reserved:
                 self.admission.unreserve(pad_reserved)
@@ -361,6 +365,8 @@ class GraphServer:
             self.admission.release(q.tenant, q.priced_bytes)
             self._done[q.uid] = q
         self._stats.footprint_high_water_bytes = (
+            self.admission.high_water_bytes)
+        obs.metrics.gauge("serve.footprint_high_water_bytes").set_max(
             self.admission.high_water_bytes)
         res.schedule_stats["serving"] = self.stats()
         self.last_schedule_stats = res.schedule_stats

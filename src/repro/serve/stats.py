@@ -8,10 +8,21 @@ GraphServer` accumulates the server's whole history; its
 admitted/rejected/queued counts, batch occupancy (real rows over padded
 bucket rows), executed step counts, footprint high water vs budget, and
 end-to-end p50/p95/p99 latency percentiles.
+
+Latencies land in a **bounded** :class:`repro.obs.metrics.Histogram`
+(the process-wide ``serve.latency_seconds`` instrument on the default
+log-spaced ladder), not an unbounded list: a server that has answered a
+million queries holds the same few dozen bucket counts as one that
+answered ten, and the reported p50/p95/p99 are within one bucket width
+of the exact order statistics.  Admission decisions and batch occupancy
+are mirrored into the registry too, so the unified run-report sees them
+without asking the server.
 """
 from __future__ import annotations
 
 import numpy as np
+
+from .. import obs
 
 __all__ = ["ServingStats"]
 
@@ -30,34 +41,47 @@ class ServingStats:
         self.footprint_high_water_bytes = 0
         self.budget_bytes: int | None = None
         self._occupancy: list[tuple[int, int]] = []   # (real, padded)
-        self._latencies: list[float] = []
+        # per-server view of the shared bounded latency instrument:
+        # constant memory in query count, percentile error ≤ one bucket
+        self._latency = obs.Histogram("serve.latency_seconds")
 
     # -- recording -----------------------------------------------------
     def record_admit(self) -> None:
         self.admitted += 1
+        obs.metrics.counter("serve.admitted").inc()
 
     def record_reject(self) -> None:
         self.rejected += 1
+        obs.metrics.counter("serve.rejected").inc()
 
     def record_queue(self) -> None:
         self.queued += 1
+        obs.metrics.counter("serve.queued").inc()
 
     def record_batch(self, real: int, padded: int, steps: int) -> None:
         self.batches += 1
         self.steps_executed += int(steps)
         self._occupancy.append((int(real), int(padded)))
+        m = obs.metrics
+        m.counter("serve.batches").inc()
+        m.counter("serve.steps_executed").inc(int(steps))
+        if padded > 0:
+            m.histogram("serve.batch_occupancy",
+                        edges=tuple(i / 10 for i in range(11))
+                        ).observe(real / padded)
 
     def record_latency(self, seconds: float) -> None:
         self.completed += 1
-        self._latencies.append(float(seconds))
+        self._latency.observe(float(seconds))
+        obs.metrics.histogram("serve.latency_seconds").observe(float(seconds))
 
     # -- reporting -----------------------------------------------------
     def latency_percentiles(self) -> dict:
-        if not self._latencies:
+        if not self._latency.count:
             return dict(p50=None, p95=None, p99=None)
-        lat = np.asarray(self._latencies, dtype=np.float64)
-        p50, p95, p99 = np.percentile(lat, [50.0, 95.0, 99.0])
-        return dict(p50=float(p50), p95=float(p95), p99=float(p99))
+        return dict(p50=self._latency.percentile(50),
+                    p95=self._latency.percentile(95),
+                    p99=self._latency.percentile(99))
 
     def batch_occupancy(self) -> float | None:
         """Mean fraction of bucket rows occupied by real queries."""
