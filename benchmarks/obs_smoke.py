@@ -29,8 +29,12 @@ import json
 import sys
 import time
 
+from .common import best_of, env_float
+
 #: Traced wall time may be at most this multiple of untraced.
-SMOKE_OVERHEAD_RATIO = 1.05
+#: Override with ``REPRO_SMOKE_OVERHEAD_RATIO`` (default 1.05) when a
+#: CI runner is noisy enough that the default gate flakes.
+SMOKE_OVERHEAD_RATIO = env_float("REPRO_SMOKE_OVERHEAD_RATIO", 1.05)
 
 REQUIRED_LANES = ("main", "staging", "device/0")
 REQUIRED_PHASES = ("assemble", "device_put", "compute", "iteration")
@@ -82,17 +86,12 @@ def run_smoke(out_path: str = "BENCH_obs.json", *,
                 _run_traced(traced)
         return sum(untraced) / len(untraced), sum(traced) / len(traced)
 
-    attempts: list[float] = []
-    best = float("inf")
-    untraced_s = traced_s = 0.0
-    for _ in range(3):
-        u, t = _attempt()
-        r = t / u
-        attempts.append(round(r, 4))
-        if r < best:
-            best, untraced_s, traced_s = r, u, t
-        if r <= SMOKE_OVERHEAD_RATIO:
-            break
+    (untraced_s, traced_s), scores = best_of(
+        _attempt, attempts=3,
+        score=lambda ut: -(ut[1] / ut[0]),
+        good_enough=lambda ut: ut[1] / ut[0] <= SMOKE_OVERHEAD_RATIO,
+    )
+    attempts = [round(-s, 4) for s in scores]
     trace = obs.export.write_chrome_trace(trace_path, events)
 
     try:

@@ -320,6 +320,7 @@ def compile_plan(
     rebalance_threshold: "float | str | None" = "auto",
     pipeline_depth: int | None = None,
     mesh=None,
+    host_fraction: "float | str | None" = "auto",
 ) -> "Plan | StreamingPlan":
     """Build + compile: schedule, prepare, typed contexts, jitted step.
 
@@ -352,6 +353,23 @@ def compile_plan(
     background staging worker assembles ahead (default 2; ``0`` runs
     staging synchronously in the wave loop — the benchmark baseline).
 
+    ``host_fraction`` (streaming only) co-schedules the host CPU as a
+    compute resource: each wave is split into a device partition and a
+    host partition; the host tasks run the algorithm's sparse kernel
+    eagerly on the CPU backend in a thread pool, overlapped with the
+    device wave, and their partials fold through the same
+    ``metadata["combine"]`` contract as mesh partials — bit-identical
+    to a device-only run for integer/bool attributes.  ``"auto"`` (the
+    default) starts device-only and peels the light/sparse tail of each
+    wave only once calibration shows the host can hide behind the
+    device; a float in ``[0, 1]`` pins the host share of per-wave work
+    (``0.0`` disables, ``1.0`` runs everything on the host); ``None``
+    disables the host lane entirely.  Host tasks are never staged, so
+    every staged device slab stays within ``memory_budget``.
+    ``schedule_stats["hetero"]`` reports the resolved split, host/device
+    task counts, measured host/device throughput ratio, and per-resource
+    makespans.  See ``docs/heterogeneous.md``.
+
     ``mesh`` (streaming only; a 1-D ``jax.sharding.Mesh``) composes the
     waves with the distributed execution model of
     :mod:`repro.core.distributed`: ``memory_budget`` becomes *per
@@ -379,6 +397,12 @@ def compile_plan(
             "pass memory_budget=... as well (the in-core Plan stages no "
             "waves)"
         )
+    if host_fraction not in (None, "auto") and memory_budget is None:
+        raise ValueError(
+            "host_fraction only applies to the streaming executor; "
+            "pass memory_budget=... as well (the in-core Plan has no "
+            "waves to split across host and device)"
+        )
     if mesh is not None and memory_budget is None:
         raise ValueError(
             "mesh= composes the *streaming* executor with a device mesh; "
@@ -399,6 +423,7 @@ def compile_plan(
             pipeline_depth=(PIPELINE_DEPTH if pipeline_depth is None
                             else pipeline_depth),
             mesh=mesh,
+            host_fraction=host_fraction,
         )
     return Plan(
         alg, store, schedule,

@@ -60,6 +60,18 @@ loop continues while it returns ``True``, bounded by
     view of the wave.  Absent (the default), passing a mesh raises —
     a custom algorithm must not silently run under collectives whose
     semantics it never declared.  See ``docs/distributed.md``.
+``host``
+    host-lane capability for heterogeneous co-scheduling
+    (``compile_plan(..., host_fraction=...)``): ``"auto"`` (default —
+    eligible when ``kernel_sparse`` exists and every name in
+    ``host_kernels`` is registry-certified host-executable) or
+    ``"never"`` (tasks are never peeled to the CPU; an explicit
+    nonzero ``host_fraction`` then raises).
+``host_kernels``
+    registry kernel names the sparse kernel dispatches to — each must
+    pass :func:`repro.kernels.registry.host_executable` for the host
+    lane to engage.  Pure-``jnp`` sparse kernels (every shipped
+    algorithm) leave it empty.  See ``docs/heterogeneous.md``.
 """
 from __future__ import annotations
 

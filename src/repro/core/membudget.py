@@ -47,7 +47,7 @@ step serves all waves without retracing.
 from __future__ import annotations
 
 import re
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 
 import numpy as np
 
@@ -65,6 +65,8 @@ __all__ = [
     "resident_bytes", "tree_array_bytes", "batch_state_bytes",
     "TenantLedger", "Wave", "build_waves",
     "repack_waves",
+    "HOST_RATIO_DEFAULT", "HETERO_HIDE_FACTOR",
+    "peel_host_tasks", "hetero_split_diverged",
 ]
 
 # src + dst + edge_block (int32) + sparse/dense edge masks (bool).
@@ -358,6 +360,18 @@ def resident_bytes(store: BlockStore, state=None, *,
 
 
 # ----------------------------------------------------------------------
+#: Assumed host-vs-device slowdown per unit task weight when the host
+#: lane has not been measured yet (``REPRO_HETERO_HOST_RATIO`` env var
+#: overrides; the streaming executor replaces it with the observed
+#: ratio after the first heterogeneous iteration).
+HOST_RATIO_DEFAULT = 4.0
+#: The ``"auto"`` split only peels a task to the host while the host
+#: queue's predicted time stays under this fraction of the remaining
+#: device time — host work must hide behind the device wave, with a
+#: margin, so co-scheduling can only shorten the wave.
+HETERO_HIDE_FACTOR = 0.9
+
+
 @dataclass
 class Wave:
     """One budget-sized unit of streamed work.
@@ -367,16 +381,124 @@ class Wave:
     segments.  ``est_bytes`` is the model estimate used for packing;
     the staged slab's actual (bucket-padded) bytes are measured by the
     stream binder and recorded in ``schedule_stats``.
+    ``host_task_ids`` is the wave's host partition — tasks peeled off
+    by :func:`peel_host_tasks` that run on the host CPU and never count
+    against ``est_bytes`` (they are never staged).
     """
 
     task_ids: np.ndarray
     est_bytes: int
+    host_task_ids: np.ndarray = field(
+        default_factory=lambda: np.zeros(0, dtype=np.int64))
+
+
+def peel_host_tasks(schedule: Schedule, waves: list[Wave],
+                    host_fraction: "float | str", *,
+                    task_times: np.ndarray | None = None,
+                    host_ratio: float = HOST_RATIO_DEFAULT,
+                    footprints: np.ndarray | None = None,
+                    min_tasks: int = 0) -> list[Wave]:
+    """Split each wave into a device partition and a host partition.
+
+    Candidates leave the device side lightest/sparsest first — sparse
+    tasks before dense ones, then by per-task time (the schedule's LPT
+    weights when no measured ``task_times`` are given), so the
+    irregular long tail is what moves to the CPU while the dense tiles
+    keep the accelerator.  A wave's device side is never emptied unless
+    ``host_fraction >= 1``.
+
+    Policies:
+
+    * numeric ``f`` in ``(0, 1)`` — peel tasks until the host partition
+      carries at least ``f`` of the wave's time (any positive ``f``
+      peels at least one task from every multi-task wave);
+    * ``f >= 1`` — everything runs on the host;
+    * ``"auto"`` — greedy hide-behind-device rule: accept a candidate
+      only while ``host_time × host_ratio`` stays under
+      :data:`HETERO_HIDE_FACTOR` of the device time left in the wave.
+      With no measured ``task_times`` the auto split stays at zero
+      (nothing is known yet); ``min_tasks`` forces that many probe
+      tasks per multi-task wave so the executor can measure the host
+      throughput it needs to calibrate the ratio.
+
+    Device ``est_bytes`` is re-priced from ``footprints`` (host tasks
+    are never staged), so peeling can only shrink the staged slab —
+    the per-wave byte budget is preserved by construction.
+    """
+    auto = isinstance(host_fraction, str)
+    if auto and host_fraction != "auto":
+        raise ValueError(f"host_fraction must be a number or 'auto', "
+                         f"got {host_fraction!r}")
+    if auto and task_times is None:
+        # nothing measured yet — the auto split starts device-only and
+        # only activates once the executor feeds calibrated task times
+        return list(waves)
+    times = np.asarray(task_times if task_times is not None
+                       else schedule.weights, dtype=np.float64)
+    dense = schedule.dense_task_mask
+    out: list[Wave] = []
+    for wave in waves:
+        ids = np.concatenate([wave.task_ids, wave.host_task_ids]).astype(
+            np.int64)
+        if ids.size == 0:
+            continue
+        if not auto and float(host_fraction) >= 1.0:
+            out.append(Wave(task_ids=np.zeros(0, np.int64), est_bytes=0,
+                            host_task_ids=np.sort(ids)))
+            continue
+        # lightest / sparsest first: sparse tasks peel before dense,
+        # then by time, ties by id for determinism
+        cand = ids[np.lexsort((ids, times[ids], dense[ids]))]
+        total_t = float(times[ids].sum())
+        host: list[int] = []
+        host_t = 0.0
+        if auto:
+            dev_t = total_t
+            for t in cand[:-1]:             # never empty the device side
+                tt = float(times[t])
+                forced = len(host) < min_tasks
+                hides = ((host_t + tt) * float(host_ratio)
+                         <= HETERO_HIDE_FACTOR * (dev_t - tt))
+                if not (forced or hides):
+                    break
+                host.append(int(t))
+                host_t += tt
+                dev_t -= tt
+        elif float(host_fraction) > 0.0:
+            target = float(host_fraction) * total_t
+            for t in cand[:-1]:
+                if host_t >= target:
+                    break
+                host.append(int(t))
+                host_t += float(times[t])
+        host_ids = np.asarray(sorted(host), dtype=np.int64)
+        dev_ids = np.setdiff1d(ids, host_ids)
+        lead = schedule.blocklists[dev_ids, 0]
+        dev_ids = dev_ids[np.argsort(lead, kind="stable")]
+        est = (int(footprints[dev_ids].sum()) if footprints is not None
+               else wave.est_bytes)
+        out.append(Wave(task_ids=dev_ids, est_bytes=est,
+                        host_task_ids=host_ids))
+    return out
+
+
+def hetero_split_diverged(current: float, proposed: float, *,
+                          rel: float = 0.25, abs_tol: float = 0.05) -> bool:
+    """Hysteresis for the auto host/device split: re-plan only when the
+    proposed host share moved by more than ``abs_tol`` absolute or
+    ``rel`` relative to the current share — small drifts in measured
+    task times must not thrash the wave plan every iteration."""
+    return abs(float(proposed) - float(current)) > max(
+        abs_tol, rel * abs(float(current)))
 
 
 def build_waves(store: BlockStore, schedule: Schedule,
                 budget: MemoryBudget,
                 footprints: np.ndarray | None = None, *,
-                devices: int = 1) -> list[Wave]:
+                devices: int = 1,
+                host_fraction: "float | str" = 0.0,
+                task_times: np.ndarray | None = None,
+                host_ratio: float = HOST_RATIO_DEFAULT) -> list[Wave]:
     """Greedily pack LPT-ordered tasks into waves under ``budget``.
 
     Walking tasks heaviest-first (the schedule's LPT order) keeps each
@@ -393,6 +515,12 @@ def build_waves(store: BlockStore, schedule: Schedule,
     rather than silently oversubscribe.  The stream binder re-verifies
     the assembled per-device slabs and splits waves whose actual bytes
     overflow.
+
+    ``host_fraction`` (with optional measured ``task_times`` and the
+    host/device throughput ``host_ratio``) additionally peels each
+    wave's lightest tasks into a host partition via
+    :func:`peel_host_tasks` — heterogeneous co-scheduling where the
+    host CPU runs the sparse long tail while the device runs the rest.
     """
     if footprints is None:
         footprints = task_footprints(store, schedule)
@@ -415,6 +543,12 @@ def build_waves(store: BlockStore, schedule: Schedule,
         cur_bytes += b
     if cur:
         waves.append(_close_wave(cur, cur_bytes, schedule))
+    if (isinstance(host_fraction, str)
+            or float(host_fraction) > 0.0):
+        waves = peel_host_tasks(schedule, waves, host_fraction,
+                                task_times=task_times,
+                                host_ratio=host_ratio,
+                                footprints=footprints)
     obs.metrics.counter("membudget.wave_builds").inc()
     obs.metrics.counter("membudget.waves_packed").inc(len(waves))
     return waves

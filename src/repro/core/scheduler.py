@@ -102,6 +102,16 @@ class Schedule:
         """
         return lpt_assign(self.weights, max(int(num_devices), 1))
 
+    def weight_share(self, task_ids) -> float:
+        """Fraction of the schedule's total E-estimate weight carried by
+        ``task_ids`` — how the heterogeneous executor reports its
+        resolved host/device split ratio in ``schedule_stats``."""
+        total = float(self.weights.sum())
+        if total <= 0.0:
+            return 0.0
+        ids = np.asarray(task_ids, dtype=np.int64)
+        return float(self.weights[ids].sum()) / total
+
 
 def _demote_over_budget(alg: BlockAlgorithm, store: BlockStore,
                         bls: np.ndarray, fits: np.ndarray,

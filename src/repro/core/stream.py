@@ -171,11 +171,35 @@ structurally device-varying outputs are unified by the algorithm's
 ``collective_bytes``, and the mesh-wide ``overlap_efficiency``.  The
 full model is documented in ``docs/distributed.md``.
 
+Heterogeneous co-scheduling — ``host_fraction``
+-----------------------------------------------
+The host CPU is a compute resource, not just a staging engine: each
+wave splits into a *device partition* (the streamed pipeline above)
+and a *host partition* — the smallest/sparsest tasks peeled off by
+:func:`repro.core.membudget.peel_host_tasks` into host execution
+units that run the algorithm's sparse kernel eagerly on the CPU jax
+backend (:class:`_HostLane`, a ``concurrent.futures`` thread pool)
+against host-side store views.  Host tasks are never ``device_put``,
+so they do not touch the memory budget; their partials fold into the
+per-iteration state through the same ``metadata["combine"]`` contract
+as device waves and mesh shards, keeping results bit-identical to a
+device-only run for integer/boolean attributes.  ``host_fraction``
+is ``"auto"`` by default — zero split until the calibration pass
+measures per-wave times above a noise floor, then a hide-criterion
+split with probe-based host-rate measurement and hysteresis
+(:func:`repro.core.membudget.hetero_split_diverged`) — or a fixed
+float in [0, 1]; ``None`` disables the lane.  ``schedule_stats``
+gains a ``"hetero"`` block (split ratio, host/device task counts,
+per-resource makespans) and the ``host-compute`` tracer lane carries
+the per-unit spans.  Full model in ``docs/heterogeneous.md``.
+
 Entry point: ``compile_plan(alg, store, memory_budget=...)`` returns a
 :class:`StreamingPlan` instead of a :class:`~repro.core.engine.Plan`.
 """
 from __future__ import annotations
 
+import concurrent.futures
+import os
 import queue
 import threading
 import time
@@ -196,14 +220,20 @@ from .distributed import combine_fn, make_device_edge_partition
 from .functors import BlockAlgorithm
 from .graph import csr_prefix
 from .membudget import (
-    MemoryBudget, PIPELINE_DEPTH, Wave, arena_model_bytes, bucket_size,
-    build_waves, repack_waves, resident_bytes, split_wave, task_footprints,
-    tree_array_bytes,
+    HOST_RATIO_DEFAULT, MemoryBudget, PIPELINE_DEPTH, Wave,
+    arena_model_bytes, bucket_size, build_waves, hetero_split_diverged,
+    peel_host_tasks, repack_waves, resident_bytes, split_wave,
+    task_footprints, tree_array_bytes,
 )
 from .scheduler import Schedule, build_schedule
 from .engine import RunResult
 
-__all__ = ["StreamingPlan", "compile_streaming_plan"]
+__all__ = ["StreamingPlan", "compile_streaming_plan", "PHASES"]
+
+#: Per-wave pipeline phases, in execution order — also the
+#: ``stream.phase_seconds.<phase>`` metric-name suffixes.
+PHASES = ("assemble", "prepare", "device_put", "compute", "collective",
+          "host_compute")
 
 _COMBINE_KINDS = ("add", "min", "max")
 _CSR_MODES = ("resident", "slice", "none")
@@ -221,6 +251,22 @@ _CSR_MODES = ("resident", "slice", "none")
 _REBALANCE_HI = 2.0
 _REBALANCE_LO = 1.5
 _REBALANCE_NOISE_FLOOR_S = 10e-3
+
+
+def _hetero_noise_floor_s() -> float:
+    """Below this mean device-wave time the ``"auto"`` host split stays
+    at zero: dispatch jitter dominates, so peeling would be decided by
+    noise.  ``REPRO_HETERO_NOISE_FLOOR_S`` overrides (the hetero smoke
+    lowers it to exercise the split on small CI graphs)."""
+    return float(os.environ.get("REPRO_HETERO_NOISE_FLOOR_S",
+                                _REBALANCE_NOISE_FLOOR_S))
+
+
+def _hetero_host_ratio_default() -> float:
+    """Assumed host-vs-device slowdown before the host lane has been
+    measured; ``REPRO_HETERO_HOST_RATIO`` overrides."""
+    return float(os.environ.get("REPRO_HETERO_HOST_RATIO",
+                                HOST_RATIO_DEFAULT))
 
 
 def _combine_spec(alg: BlockAlgorithm):
@@ -563,6 +609,185 @@ class _StagePipeline:
 
 
 # ----------------------------------------------------------------------
+class _HostLane:
+    """The host-CPU compute lane of heterogeneous co-scheduling.
+
+    Each execution *unit* is one wave's peeled ``host_task_ids``
+    (:func:`repro.core.membudget.peel_host_tasks`).  A unit's context is
+    built once — the unit's COO slice gathered from the host store, the
+    global CSR views shared across every unit, and the algorithm's
+    ``prepare`` outputs for the unit's restricted sub-schedule — with
+    every array leaf committed to the host CPU jax backend, and the
+    sparse kernel runs *eagerly* under ``jax.default_device(cpu)`` in a
+    ``concurrent.futures`` thread pool while the device pipeline
+    streams its own waves.  Nothing here is ever ``device_put`` to the
+    accelerator: host units never touch the memory budget.
+
+    Peeled dense tasks run the sparse formulation on the host — each
+    unit's sub-schedule clears its dense routing masks, and the two
+    paths agree per block-list (the same property the dense/sparse
+    split relies on), so results stay bit-identical for integer/bool
+    attributes.  Per-unit updates fold through the identical
+    ``metadata["combine"]`` contract as device waves: ``add`` folds the
+    delta from iteration-start state, ``min``/``max`` fold elementwise,
+    and pass-through leaves are detected by the same identity test
+    :class:`_StreamStep` applies at trace time — here evaluated
+    eagerly, where it holds for exactly the same ``dict(state, k=v)``
+    kernel idiom.
+
+    ``prepare`` runs against the *global* store view (``plan=None`` —
+    the unpadded branch of staged-prepare algorithms), so
+    host-computed positions index the global CSR the host already
+    holds; nothing is sliced or rebased for the host lane.
+    """
+
+    def __init__(self, plan: "StreamingPlan",
+                 units: list[np.ndarray]) -> None:
+        self.plan = plan
+        self.units = [np.asarray(u, np.int64) for u in units]
+        self._spec = _combine_spec(plan.alg)
+        self._cpu = jax.devices("cpu")[0]
+        store = plan.store
+        t0 = time.perf_counter()
+        with jax.default_device(self._cpu):
+            # global CSR views: converted to CPU-committed jax arrays
+            # ONCE and shared by every unit context (eager lax.cond
+            # traces both kernel branches, so even csr="none"
+            # algorithms need indexable adjacency leaves — and numpy
+            # arrays indexed by tracers would fail inside the trace)
+            self._globals = {
+                k: self._put(v) for k, v in dict(
+                    indptr=store.indptr, indices=store.indices,
+                    degrees=store.degrees,
+                    row_block_ptr=store.row_block_ptr,
+                    cuts=store.layout.cuts,
+                ).items()
+            }
+            self._ctxs = [self._unit_context(ids) for ids in self.units]
+        plan._phase["prepare"] += time.perf_counter() - t0
+        self._pool = concurrent.futures.ThreadPoolExecutor(
+            max_workers=min(len(self.units),
+                            max(1, (os.cpu_count() or 2) - 1)),
+            thread_name_prefix="repro-host",
+        )
+
+    def _put(self, a):
+        """CPU-committed jax array from any array-like."""
+        return jax.device_put(np.asarray(a), self._cpu)
+
+    def _unit_context(self, ids: np.ndarray) -> Context:
+        plan = self.plan
+        store, sched = plan.store, plan.schedule
+        hsched = sched.restrict(ids)
+        # peeled dense tasks run the sparse formulation on the host:
+        # clearing the routing masks sends every edge down the sparse
+        # path and keeps prepare from bucketing dense-path work
+        hsched.dense_task_mask = np.zeros(hsched.num_tasks, bool)
+        hsched.dense_block_ids = np.zeros(0, np.int32)
+        blocks = np.unique(hsched.blocklists)
+        segments = store.edge_segments(blocks)
+        idx = (
+            np.concatenate([np.arange(s, e, dtype=np.int64)
+                            for s, e in segments])
+            if segments else np.zeros(0, np.int64)
+        )
+        extras = {}
+        if plan.alg.prepare is not None:
+            extras = _to_host(plan.alg.run_prepare(store, hsched, None))
+            extras.pop("__workspace_bytes__", None)
+        extras = jax.tree_util.tree_map(
+            lambda l: self._put(l) if _is_array_leaf(l) else l, extras
+        )
+        ne = int(idx.size)
+        return Context(
+            extras=extras,
+            n=store.n, m=store.m, p=store.p,
+            tile_dim=sched.tile_dim,
+            backend="reference",
+            src=self._put(store.src[idx]),
+            dst=self._put(store.dst[idx]),
+            edge_block=self._put(store.edge_block[idx]),
+            sparse_edge_mask=self._put(np.ones(ne, bool)),
+            dense_edge_mask=self._put(np.zeros(ne, bool)),
+            **self._globals,
+        )
+
+    def submit(self, state0, it: int) -> list:
+        """Snapshot iteration-start state to the host CPU and dispatch
+        every unit into the pool; returns futures for ``fold``."""
+        hstate = {k: self._put(v) for k, v in state0.items()}
+        iarr = self._put(np.int32(it))
+        return [self._pool.submit(self._run_unit, u, hstate, iarr)
+                for u in range(len(self.units))]
+
+    def _run_unit(self, u: int, hstate: dict, iarr):
+        alg = self.plan.alg
+        t0 = time.perf_counter()
+        with obs.span("host_compute", lane="host-compute", unit=u,
+                      tasks=int(self.units[u].size)):
+            with jax.default_device(self._cpu):
+                new = alg.kernel_sparse(self._ctxs[u], hstate, iarr)
+        added = set(new) - set(hstate)
+        if added:
+            raise ValueError(
+                f"{alg.name}: kernels added state leaves "
+                f"{sorted(added)}; streaming requires kernels to "
+                f"write only leaves present in init_state (declare "
+                f"scratch attributes there)"
+            )
+        payload = {}
+        for key, s0 in hstate.items():
+            nw = new[key]
+            if nw is s0:
+                continue
+            kind = self._spec(key)
+            if kind not in _COMBINE_KINDS:
+                raise ValueError(
+                    f"state leaf {key!r} is modified by the kernels but "
+                    f"declares no combine kind in metadata['combine'] "
+                    f"(one of {_COMBINE_KINDS}); the host lane cannot "
+                    f"fold its per-unit partial results"
+                )
+            payload[key] = (
+                kind,
+                np.asarray(nw - s0) if kind == "add" else np.asarray(nw),
+            )
+        return payload, time.perf_counter() - t0
+
+    def fold(self, results: list, acc: dict) -> tuple[dict, float]:
+        """Merge every unit's payload (in unit order — deterministic)
+        and fold ONCE into the device accumulator with the same
+        semantics as :func:`_combine_leaf`: exact for integer/boolean
+        attributes, up to summation order for floats."""
+        merged: dict[str, tuple[str, np.ndarray]] = {}
+        busy_s = 0.0
+        for payload, dt in results:
+            busy_s += dt
+            for key, (kind, val) in payload.items():
+                if key not in merged:
+                    merged[key] = (kind, val)
+                elif kind == "add":
+                    merged[key] = (kind, merged[key][1] + val)
+                elif kind == "min":
+                    merged[key] = (kind, np.minimum(merged[key][1], val))
+                else:
+                    merged[key] = (kind, np.maximum(merged[key][1], val))
+        out = dict(acc)
+        for key, (kind, val) in merged.items():
+            v = jnp.asarray(val)
+            if kind == "add":
+                out[key] = acc[key] + v
+            elif kind == "min":
+                out[key] = jnp.minimum(acc[key], v)
+            else:
+                out[key] = jnp.maximum(acc[key], v)
+        return out, busy_s
+
+    def close(self) -> None:
+        self._pool.shutdown(wait=False, cancel_futures=True)
+
+
+# ----------------------------------------------------------------------
 @dataclass
 class _WaveSlab:
     """Host-side staged form of one wave: padded numpy arrays ready for
@@ -709,8 +934,9 @@ class StreamingPlan:
                  dense_frac: float = 0.5, dense_density: float = 0.005,
                  rebalance_threshold: float | str | None = "auto",
                  pipeline_depth: int = PIPELINE_DEPTH,
-                 share: bool = True, mesh: Mesh | None = None) -> None:
-        from ..kernels.registry import resolve_backend
+                 share: bool = True, mesh: Mesh | None = None,
+                 host_fraction: float | str | None = "auto") -> None:
+        from ..kernels.registry import host_executable, resolve_backend
 
         self.alg = alg
         self.store = store
@@ -752,6 +978,56 @@ class StreamingPlan:
                 f"{rebalance_threshold!r}"
             )
         self.rebalance_threshold = rebalance_threshold
+        # -- heterogeneous co-scheduling: the host CPU as a resource ---
+        if not (host_fraction is None or host_fraction == "auto"
+                or isinstance(host_fraction, (int, float))):
+            raise ValueError(
+                "host_fraction must be 'auto' (default: calibrated "
+                "host/device split), a float in [0, 1] (fixed share of "
+                "each wave's work peeled to the host CPU), or None "
+                f"(off); got {host_fraction!r}"
+            )
+        if (isinstance(host_fraction, (int, float))
+                and not 0.0 <= float(host_fraction) <= 1.0):
+            raise ValueError(
+                f"host_fraction must lie in [0, 1]; got {host_fraction!r}"
+            )
+        host_flag = str(alg.metadata.get("host", "auto"))
+        if host_flag not in ("auto", "never"):
+            raise ValueError(
+                f"{alg.name}: metadata['host'] must be 'auto' or "
+                f"'never', got {host_flag!r}"
+            )
+        blockers = []
+        if alg.kernel_sparse is None:
+            blockers.append("the algorithm has no kernel_sparse (host "
+                            "units run the sparse formulation)")
+        if host_flag == "never":
+            blockers.append("metadata['host'] declares 'never'")
+        uncertified = [k for k in alg.metadata.get("host_kernels", ())
+                       if not host_executable(k)]
+        if uncertified:
+            blockers.append(
+                f"metadata['host_kernels'] names kernels not certified "
+                f"host-executable: {uncertified}"
+            )
+        if mesh is not None:
+            blockers.append("mesh-cooperative streaming (the mesh "
+                            "already owns the wave partition)")
+        self._host_capable = not blockers
+        if (isinstance(host_fraction, (int, float))
+                and float(host_fraction) > 0.0 and blockers):
+            raise ValueError(
+                f"{alg.name}: host_fraction={host_fraction!r} requires "
+                f"host-lane capability — " + "; ".join(blockers)
+            )
+        self._host_frac_req = host_fraction
+        # "auto" resolves to a zero split until calibration activates
+        # it; an incapable algorithm silently stays device-only there
+        self._host_frac = (
+            host_fraction
+            if self._host_capable and host_fraction is not None else 0.0
+        )
         self.pipeline_depth = max(int(pipeline_depth), 0)
         self.schedule = schedule or build_schedule(
             alg, store, num_devices=max(num_devices, self._mesh_devices),
@@ -765,8 +1041,7 @@ class StreamingPlan:
             alg.stage_plan(store, self.schedule)
             if alg.stage_plan is not None else None
         )
-        self._phase = dict(assemble=0.0, prepare=0.0, device_put=0.0,
-                           compute=0.0, collective=0.0)
+        self._phase = {p: 0.0 for p in PHASES}
         self._arena = _HostArena()
         self._arena_deferred: list[tuple] = []
         self._pipe: _StagePipeline | None = None
@@ -776,9 +1051,18 @@ class StreamingPlan:
             workspace_kernel=alg.metadata.get("workspace_kernel"),
             stage_csr=self._csr_mode == "slice",
         )
+        self._host_ratio = _hetero_host_ratio_default()
+        self._host_units: list[np.ndarray] = []
+        self._host_lane: _HostLane | None = None
+        self._host_seconds = 0.0
+        self._host_tasks_executed = 0
+        self._host_measured = False
+        self._hetero_refreshes = 0
         waves = build_waves(store, self.schedule, self.budget,
-                            self._footprints, devices=self._mesh_devices)
-        self._slabs = self._plan_recipes(waves, initial=True)
+                            self._footprints, devices=self._mesh_devices,
+                            host_fraction=self._host_frac,
+                            host_ratio=self._host_ratio)
+        self._apply_waves(waves, initial=True)
         # the one-time planning pass's host cost (per-wave prepare),
         # reported separately from the per-run phase deltas
         self._planning_phase = dict(self._phase)
@@ -857,6 +1141,37 @@ class StreamingPlan:
                 )
         return [self._recipe(s) for s in slabs]
 
+    def _apply_waves(self, waves: list[Wave], *,
+                     initial: bool = False) -> None:
+        """Install a packed wave list: device tasks stay in the
+        streaming pipeline (empty waves vanish), peeled
+        ``host_task_ids`` become host-lane execution units, and the
+        lane (thread pool + per-unit CPU contexts) is rebuilt."""
+        if self._host_lane is not None:
+            self._host_lane.close()
+            self._host_lane = None
+        self._host_units = [w.host_task_ids for w in waves
+                            if w.host_task_ids.size]
+        dev_waves = [w for w in waves if w.task_ids.size]
+        self._slabs = self._plan_recipes(dev_waves, initial=initial)
+        edge_free = int(self.alg.metadata.get("edge_free_iterations", 0))
+        if (self._host_units and not self._slabs and not self._hoisted
+                and self.alg.prepare is not None
+                and (self.alg.post is not None or edge_free > 0)):
+            # fully host-peeled plan (host_fraction=1.0): post / the
+            # edge-free phase still run against the resident context,
+            # whose extras are normally hoisted from the device waves'
+            # prepare outputs — no device wave exists here, so prepare
+            # runs once against the full store instead
+            extras = _to_host(self.alg.run_prepare(
+                self.store, self.schedule, self._plan_state))
+            extras.pop("__workspace_bytes__", None)
+            self._resident_extras = extras
+            self._hoisted = True
+        if self._host_units:
+            self._host_lane = _HostLane(self, self._host_units)
+        self.schedule.stats["waves"] = len(self._slabs)
+
     def _make_unit(self, wave: Wave) -> "_PlanUnit":
         """Assemble one wave into a planning unit (raw extras kept)."""
         if self.mesh is not None:
@@ -888,6 +1203,8 @@ class StreamingPlan:
         is abandoned for the whole plan — per-wave shapes cost extra
         jit traces but keep the ≤ budget invariant without refusing a
         runnable workload."""
+        if not units:       # fully host-peeled plan: no device waves
+            return []
         d = self._mesh_devices
         while True:
             slabs = [u.slab for u in units]
@@ -1564,13 +1881,28 @@ class StreamingPlan:
             wts = self.schedule.weights[ids].astype(np.float64)
             tot = float(wts.sum())
             task_t[ids] = (t_w * wts / tot) if tot > 0 else t_w / ids.size
+        if self._host_units:
+            # host tasks never ran on the device: give them device-
+            # equivalent times at the measured device rate so the
+            # re-pack sees the whole schedule, then re-peel to preserve
+            # the standing host/device split across the new packing
+            dev_w = float(sum(self.schedule.weights[s.wave.task_ids].sum()
+                              for s in self._slabs))
+            dev_rate = float(times.sum()) / dev_w if dev_w > 0 else 0.0
+            for ids in self._host_units:
+                task_t[ids] = self.schedule.weights[ids] * dev_rate
         new_waves = repack_waves(self.schedule, self.budget,
                                  self._footprints, task_t,
                                  devices=self._mesh_devices)
-        self._slabs = self._plan_recipes(new_waves)
+        if self._host_units:
+            new_waves = peel_host_tasks(
+                self.schedule, new_waves, self._host_frac,
+                task_times=task_t, host_ratio=self._host_ratio,
+                footprints=self._footprints,
+            )
+        self._apply_waves(new_waves)
         self._edge_free_bufs = None     # stale slab-0 reference
         self._rebalanced = True
-        self.schedule.stats["waves"] = len(self._slabs)
         obs.metrics.counter("stream.rebalances").inc()
         obs.instant("rebalance", lane="main", skew=self._last_skew,
                     waves=len(self._slabs))
@@ -1775,7 +2107,8 @@ class StreamingPlan:
         on the first executed iteration, pipelined overlap afterwards."""
         acc = state0
         nw = len(self._slabs)
-        if nw == 0:
+        lane = self._host_lane
+        if nw == 0 and lane is None:
             return acc, 0.0
         iarr = jnp.int32(it)
         if it < self._edge_free:
@@ -1795,12 +2128,18 @@ class StreamingPlan:
                 self._bytes_staged += (
                     (pptr.nbytes + pidx.nbytes) * self._mesh_devices
                 )
-            if self.mesh is not None:
+            if self.mesh is not None or nw == 0:
                 # edge-free kernels consume no per-device data, so the
                 # mesh runs them replicated — every device computes the
                 # identical full-vertex update from replicated inputs,
                 # no collectives needed (a psum here would D-multiply
-                # additive leaves); the plain per-wave fold applies
+                # additive leaves); the plain per-wave fold applies.
+                # A fully host-peeled plan (no device waves) takes the
+                # same resident-context path: the edge-free kernel is
+                # full-vertex, so running it once here is the whole
+                # iteration and the host lane correctly idles (its
+                # units would recompute the identical update, double-
+                # applying additive folds)
                 ctx = self._resident
                 if self._prefix_dev is not None:
                     ctx = with_arrays(ctx, **self._prefix_dev)
@@ -1822,8 +2161,26 @@ class StreamingPlan:
             return acc, 0.0
         self._edge_free_bufs = None     # release once edge work begins
         self._prefix_dev = None
+        # host units dispatch FIRST — they run concurrently with the
+        # whole device wave loop and are gathered after it, so host
+        # work hides behind device compute (both partitions judge the
+        # same iteration-start state; per-wave folding is partition-
+        # invariant, so the merge order cannot change results)
+        host_futs = lane.submit(state0, it) if lane is not None else None
+        if nw == 0:
+            # fully host-peeled: the host lane IS the iteration
+            acc = self._gather_host(host_futs, acc)
+            return acc, 0.0
         if self._calibration is None:
-            return self._calibrate(state0, acc, iarr, it), 0.0
+            # gather host partials BEFORE the timed calibration pass:
+            # the fold order is immaterial (partition-invariant), the
+            # host threads stop competing for CPU with the phase
+            # timings, and a rebalance fired inside _calibrate may
+            # rebuild the host lane — in-flight futures must be done
+            acc = self._gather_host(host_futs, acc)
+            acc = self._calibrate(state0, acc, iarr, it)
+            self._maybe_refresh_split(it)
+            return acc, 0.0
         t0 = time.perf_counter()
         put0 = self._phase["device_put"]
         pipe = self._pipe
@@ -1873,6 +2230,10 @@ class StreamingPlan:
                 bufs = self._put_slab(slab, wave=w + 1)
             else:
                 slab, bufs = None, None
+        # the host partition ran concurrently with the loop above; any
+        # overhang past the last device wave is waited out here (and
+        # lands in the wall clock honestly)
+        acc = self._gather_host(host_futs, acc)
         _block_tree(acc)
         self._drain_recycle(force=True)
         wall = time.perf_counter() - t0
@@ -1886,6 +2247,123 @@ class StreamingPlan:
             self._phase["assemble"] += asm
         self._phase["compute"] += max(wall - put_d - stall, 0.0)
         return acc, wall
+
+    def _gather_host(self, futs, acc):
+        """Wait on the host lane's unit futures and fold their partials
+        into the running accumulator; publishes the host metrics."""
+        if futs is None:
+            return acc
+        results = [f.result() for f in futs]
+        acc, busy_s = self._host_lane.fold(results, acc)
+        self._phase["host_compute"] += busy_s
+        self._host_seconds += busy_s
+        self._last_host_busy_s = busy_s
+        ntasks = int(sum(u.size for u in self._host_units))
+        self._host_tasks_executed += ntasks
+        obs.metrics.counter("stream.host_tasks").inc(ntasks)
+        obs.metrics.counter("stream.host_seconds").inc(busy_s)
+        return acc
+
+    def _maybe_refresh_split(self, it: int) -> None:
+        """Adapt the ``"auto"`` host/device split to measured times.
+
+        Runs right after each calibration pass.  Per-task device-
+        equivalent times come from the calibrated wave computes (device
+        tasks: wave time attributed by weight share; host tasks: their
+        weight at the device rate); the schedule is re-packed LPT
+        against them and re-peeled under the hide criterion
+        (:func:`repro.core.membudget.peel_host_tasks`).  The new split
+        is applied only when it diverged beyond the hysteresis band
+        (:func:`repro.core.membudget.hetero_split_diverged`) or flipped
+        between zero and nonzero — borderline proposals never thrash
+        the wave queue.  The first activation forces one *probe* task
+        per multi-task wave so a host rate gets measured at all; once
+        measured, the observed host/device ratio replaces the assumed
+        ``REPRO_HETERO_HOST_RATIO`` default.  Below the noise floor
+        (``REPRO_HETERO_NOISE_FLOOR_S``) the split deterministically
+        stays at its current value.  Each application invalidates the
+        calibration, so the re-packed device waves are re-timed before
+        the next evaluation."""
+        if self._host_frac != "auto" or not self._host_capable:
+            return
+        if it + 1 >= self.alg.max_iterations:
+            return                      # no later iteration would run it
+        cal = self._calibration
+        if cal is None or not self._slabs:
+            return                      # a rebalance just re-packed
+        wave_s = list(cal.get("wave_compute_s", []))
+        if not wave_s or float(np.mean(wave_s)) < _hetero_noise_floor_s():
+            return
+        dev_w = float(sum(self.schedule.weights[s.wave.task_ids].sum()
+                          for s in self._slabs))
+        if dev_w <= 0.0:
+            return
+        dev_rate = float(sum(wave_s)) / dev_w
+        busy_s = getattr(self, "_last_host_busy_s", 0.0)
+        if self._host_units and busy_s > 0.0 and dev_rate > 0.0:
+            host_w = float(sum(self.schedule.weights[u].sum()
+                               for u in self._host_units))
+            if host_w > 0.0:
+                self._host_ratio = max((busy_s / host_w) / dev_rate, 1e-6)
+                self._host_measured = True
+        task_t = np.zeros(self.schedule.num_tasks, dtype=np.float64)
+        for t_w, slab in zip(wave_s, self._slabs):
+            ids = slab.wave.task_ids
+            wts = self.schedule.weights[ids].astype(np.float64)
+            tot = float(wts.sum())
+            task_t[ids] = ((t_w * wts / tot) if tot > 0
+                           else t_w / max(ids.size, 1))
+        for ids in self._host_units:
+            task_t[ids] = self.schedule.weights[ids] * dev_rate
+        waves = repack_waves(self.schedule, self.budget,
+                             self._footprints, task_t,
+                             devices=self._mesh_devices)
+        waves = peel_host_tasks(
+            self.schedule, waves, "auto", task_times=task_t,
+            host_ratio=self._host_ratio, footprints=self._footprints,
+            min_tasks=0 if self._host_measured else 1,
+        )
+        host_ids = [w.host_task_ids for w in waves if w.host_task_ids.size]
+        new_split = (self.schedule.weight_share(np.concatenate(host_ids))
+                     if host_ids else 0.0)
+        cur_split = (self.schedule.weight_share(
+            np.concatenate(self._host_units)) if self._host_units else 0.0)
+        if not (hetero_split_diverged(cur_split, new_split)
+                or (new_split == 0.0) != (cur_split == 0.0)):
+            return
+        self._apply_waves(waves)
+        self._edge_free_bufs = None     # stale slab-0 reference
+        self._hetero_refreshes += 1
+        self._calibration = None
+        obs.instant("hetero_refresh", lane="main", split=float(new_split),
+                    host_tasks=int(sum(u.size for u in self._host_units)),
+                    waves=len(self._slabs))
+
+    def _hetero_stats(self, phase_delta: dict) -> dict:
+        """The ``schedule_stats["hetero"]`` block: the resolved
+        host/device split, executed host work, and the per-resource
+        makespans of this run."""
+        host_ids = (np.concatenate(self._host_units) if self._host_units
+                    else np.zeros(0, np.int64))
+        return dict(
+            enabled=bool(self._host_capable
+                         and self._host_frac_req is not None),
+            host_fraction=self._host_frac_req,
+            resolved_split=(float(self.schedule.weight_share(host_ids))
+                            if host_ids.size else 0.0),
+            host_tasks=int(host_ids.size),
+            device_tasks=int(self.schedule.num_tasks - host_ids.size),
+            host_units=len(self._host_units),
+            host_ratio=float(self._host_ratio),
+            host_ratio_measured=bool(self._host_measured),
+            refreshes=int(self._hetero_refreshes),
+            host_tasks_executed=int(self._host_tasks_executed),
+            host_seconds=float(self._host_seconds),
+            makespan=dict(
+                device_s=float(phase_delta.get("compute", 0.0)),
+                host_s=float(phase_delta.get("host_compute", 0.0)),
+            ),
+        )
 
     def run(self, store: BlockStore | None = None,
             state: Any | None = None) -> RunResult:
@@ -1940,11 +2418,12 @@ class StreamingPlan:
         )
         dt = time.perf_counter() - t0
         result = alg.finalize(self.store, state) if alg.finalize else state
+        phase_delta = {k: self._phase[k] - phase_before[k]
+                       for k in self._phase}
         self._publish_metrics(
             iterations=it, seconds=dt,
             staged_delta=self._bytes_staged - staged_before,
-            phase_delta={k: self._phase[k] - phase_before[k]
-                         for k in self._phase},
+            phase_delta=phase_delta,
         )
         return RunResult(
             result=result,
@@ -1956,13 +2435,11 @@ class StreamingPlan:
                 streaming=self._streaming_stats(
                     state, overlapped_wall, overlapped_iters,
                     staged_delta=self._bytes_staged - staged_before,
-                    phase_delta={
-                        k: self._phase[k] - phase_before[k]
-                        for k in self._phase
-                    },
+                    phase_delta=phase_delta,
                     asm_delta=self._assemble_overlapped_s - asm_before,
                     stall_delta=self._stall_s - stall_before,
                 ),
+                hetero=self._hetero_stats(phase_delta),
             ),
         )
 

@@ -3,6 +3,19 @@
 Each function is the mathematical definition of the corresponding kernel
 in this package; kernel tests sweep shapes/dtypes and
 ``assert_allclose`` against these.
+
+Host-compute contract
+---------------------
+The oracles double as the *host CPU* implementations for heterogeneous
+co-scheduling (:mod:`repro.core.stream`'s host lane): they are pure
+``jnp`` with no Pallas/XLA-custom-call dependency, so they execute
+eagerly on the CPU backend against host-side store views and produce
+the same integer/boolean results as the device paths (dense and sparse
+formulations of each algorithm agree per block-list).  A kernel name in
+:data:`HOST_EXECUTABLE` certifies exactly that; the registry exposes it
+via :func:`repro.kernels.registry.host_executable`, and the streaming
+executor refuses to peel tasks whose algorithm depends on a kernel
+outside the set.
 """
 from __future__ import annotations
 
@@ -10,6 +23,10 @@ import jax
 import jax.numpy as jnp
 
 INT_MAX = jnp.int32(2**31 - 1)
+
+#: Kernel names whose reference oracle is safe to run eagerly on the
+#: host CPU (pure jnp, deterministic, bit-identical int/bool results).
+HOST_EXECUTABLE = ("spmv_tiles", "frontier_tiles", "tc_tiles")
 
 
 def tc_tiles_ref(a_ik: jnp.ndarray, a_jk: jnp.ndarray, a_ij: jnp.ndarray) -> jnp.ndarray:

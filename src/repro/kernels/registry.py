@@ -31,6 +31,8 @@ __all__ = [
     "BACKENDS", "register_kernel", "get_kernel", "resolve_backend",
     "pallas_available", "registered", "register_workspace", "workspace_bytes",
     "max_workspace_bytes", "registered_workspaces",
+    "register_host_executable", "host_executable",
+    "registered_host_executable",
 ]
 
 BACKENDS = ("reference", "xla", "pallas")
@@ -100,6 +102,31 @@ def get_kernel(name: str, backend: str) -> Callable:
 def registered(name: str) -> dict[str, Callable]:
     """All registered implementations of ``name``, keyed by backend."""
     return {b: fn for (n, b), fn in _REGISTRY.items() if n == name}
+
+
+# ----------------------------------------------------------------------
+# Host-executable capability: kernel names certified safe to run
+# eagerly on the host CPU (pure jnp reference path, no Pallas/XLA
+# custom calls, bit-identical int/bool results).  The heterogeneous
+# streaming executor consults this before peeling an algorithm's tasks
+# to the host lane — an algorithm that names an uncertified kernel in
+# metadata["host_kernels"] stays device-only.
+_HOST_OK: set[str] = set()
+
+
+def register_host_executable(name: str) -> None:
+    """Certify kernel ``name`` as host-executable (see module docs)."""
+    _HOST_OK.add(str(name))
+
+
+def host_executable(name: str) -> bool:
+    """Whether ``name`` is certified to run on the host CPU lane."""
+    return str(name) in _HOST_OK
+
+
+def registered_host_executable() -> tuple[str, ...]:
+    """Sorted names currently certified host-executable."""
+    return tuple(sorted(_HOST_OK))
 
 
 # ----------------------------------------------------------------------
@@ -260,6 +287,9 @@ def _register_builtin() -> None:
         from . import ops
 
         return ops.tc_tiles(a_ik, a_jk, a_ij)
+
+    for _name in ref.HOST_EXECUTABLE:
+        register_host_executable(_name)
 
 
 _register_builtin()

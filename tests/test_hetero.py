@@ -1,0 +1,314 @@
+"""Differential host/device correctness harness (heterogeneous
+co-scheduling).
+
+The contract under test: splitting any wave into a device partition and
+a host partition — at any ``host_fraction`` — must be invisible in the
+results.  Host partials fold through the same ``metadata["combine"]``
+contract as mesh partials, so integer/bool attributes are bit-identical
+to the in-core plan and float attributes agree to tolerance, for every
+shipped algorithm.
+
+Also covered here: the forced-skew calibration unit tests for
+``peel_host_tasks`` (a 10x-slower host peels nothing, a dominant dense
+tile pushes the light tail to the host, hysteresis, the byte budget),
+and the end-to-end invariant that staged device slabs never exceed
+``memory_budget`` no matter what moved to the host.
+"""
+import numpy as np
+import pytest
+
+from repro.core import build_block_store, compile_plan, rmat
+from repro.core.membudget import (
+    MemoryBudget, build_waves, hetero_split_diverged, peel_host_tasks,
+    task_footprints,
+)
+from repro.core.scheduler import build_schedule
+from repro.algorithms import (
+    afforest_algorithm, bfs_algorithm, hits_algorithm, kcore_algorithm,
+    pagerank_algorithm, sv_algorithm, tc_algorithm,
+)
+
+# TC needs headroom for its conformal CSR slices on this graph — 64KB
+# cannot hold a single triple's staged bytes even device-only.
+ALGS = {
+    "pagerank": (pagerank_algorithm, "64KB"),
+    "afforest": (afforest_algorithm, "64KB"),
+    "tc": (tc_algorithm, "256KB"),
+    "bfs": (bfs_algorithm, "64KB"),
+    "sv": (sv_algorithm, "64KB"),
+    "kcore": (lambda: kcore_algorithm(3), "64KB"),
+    "hits": (hits_algorithm, "64KB"),
+}
+FRACTIONS = (0.0, 0.3, "auto", 1.0)
+
+_GRAPHS: dict = {}
+_BASELINES: dict = {}
+
+
+def _graph(seed: int):
+    if seed not in _GRAPHS:
+        _GRAPHS[seed] = rmat(9, 8, seed=seed)
+    return _GRAPHS[seed]
+
+
+def _baseline(name: str, seed: int):
+    """In-core (no budget, no waves, no host lane) reference result."""
+    key = (name, seed)
+    if key not in _BASELINES:
+        factory, _ = ALGS[name]
+        store = build_block_store(_graph(seed), 4)
+        plan = compile_plan(factory(), store, mode="sparse_only",
+                            share=False)
+        _BASELINES[key] = plan.run().result
+    return _BASELINES[key]
+
+
+def _leaves(tree):
+    import jax
+
+    return jax.tree_util.tree_leaves(tree)
+
+
+def _assert_matches(result, expected):
+    got, want = _leaves(result), _leaves(expected)
+    assert len(got) == len(want)
+    for g, w in zip(got, want):
+        g, w = np.asarray(g), np.asarray(w)
+        if g.dtype.kind in "biu":
+            # integer-checksum equality, then the full array
+            assert int(g.astype(np.int64).sum()) == int(
+                w.astype(np.int64).sum())
+            np.testing.assert_array_equal(g, w)
+        else:
+            np.testing.assert_allclose(g, w, rtol=1e-5, atol=1e-6)
+
+
+def _streamed(name: str, seed: int, frac):
+    factory, budget = ALGS[name]
+    store = build_block_store(_graph(seed), 4)
+    plan = compile_plan(factory(), store, mode="sparse_only", share=False,
+                        memory_budget=budget, host_fraction=frac)
+    return plan.run()
+
+
+@pytest.mark.parametrize("frac", FRACTIONS, ids=str)
+@pytest.mark.parametrize("name", sorted(ALGS))
+def test_differential_host_device(name, frac):
+    """Every algorithm x every host fraction == the in-core plan."""
+    res = _streamed(name, 3, frac)
+    _assert_matches(res.result, _baseline(name, 3))
+    het = res.schedule_stats["hetero"]
+    assert het["enabled"]          # every shipped algorithm is capable
+    if frac == 0.0 or frac == "auto":
+        # "auto" starts device-only; waves here sit under the
+        # production noise floor, so the split never activates
+        assert het["resolved_split"] == 0.0
+        assert het["host_tasks"] == 0
+    else:
+        # whenever the split is nonzero, host tasks really ran
+        assert het["resolved_split"] > 0.0
+        assert het["host_tasks"] > 0
+        assert het["host_tasks_executed"] > 0
+
+
+@pytest.mark.parametrize("name", sorted(ALGS))
+def test_differential_second_seed(name):
+    """A second randomized R-MAT instance at a fixed split."""
+    res = _streamed(name, 11, 0.3)
+    _assert_matches(res.result, _baseline(name, 11))
+    assert res.schedule_stats["hetero"]["host_tasks"] > 0
+
+
+def test_auto_activates_under_low_noise_floor(monkeypatch):
+    """Lowering the calibration noise floor makes the auto split probe
+    the host on CI-sized waves — and the result still matches."""
+    monkeypatch.setenv("REPRO_HETERO_NOISE_FLOOR_S", "0.00001")
+    res = _streamed("sv", 3, "auto")
+    _assert_matches(res.result, _baseline("sv", 3))
+    het = res.schedule_stats["hetero"]
+    assert het["host_tasks_executed"] > 0
+    assert het["host_ratio_measured"]
+
+
+def test_staged_slabs_respect_budget_with_host_split():
+    """Peeling to the host only ever shrinks the staged device slab."""
+    res = _streamed("pagerank", 3, 0.3)
+    st = res.schedule_stats["streaming"]
+    assert st["num_waves"] >= 2
+    assert max(st["bytes_per_wave"]) <= st["budget_bytes"]
+    mk = res.schedule_stats["hetero"]["makespan"]
+    assert mk["device_s"] >= 0.0 and mk["host_s"] > 0.0
+
+
+def test_hetero_stats_shape():
+    het = _streamed("sv", 3, 1.0).schedule_stats["hetero"]
+    assert het["enabled"]
+    assert het["host_fraction"] == 1.0
+    assert het["resolved_split"] == pytest.approx(1.0)
+    assert het["device_tasks"] == 0
+    assert het["host_tasks"] > 0
+    assert het["host_seconds"] > 0.0
+
+
+# ---------------------------------------------------------------------
+# validation
+
+def test_host_fraction_requires_budget(stores):
+    with pytest.raises(ValueError, match="memory_budget"):
+        compile_plan(sv_algorithm(), stores["rmat"], host_fraction=0.5)
+
+
+def test_host_fraction_rejects_bad_values(stores):
+    with pytest.raises(ValueError):
+        compile_plan(sv_algorithm(), stores["rmat"],
+                     memory_budget="64KB", host_fraction=1.5)
+    with pytest.raises(ValueError):
+        compile_plan(sv_algorithm(), stores["rmat"],
+                     memory_budget="64KB", host_fraction="sometimes")
+
+
+def test_host_never_blocks_explicit_fraction(stores):
+    alg = sv_algorithm()
+    alg.metadata = dict(alg.metadata, host="never")
+    with pytest.raises(ValueError, match="host"):
+        compile_plan(alg, stores["rmat"], memory_budget="64KB",
+                     host_fraction=0.3)
+    # but "auto" quietly stays device-only
+    plan = compile_plan(alg, stores["rmat"], memory_budget="64KB",
+                        host_fraction="auto")
+    assert not plan._host_capable
+
+
+def test_uncertified_host_kernel_blocks_peeling(stores):
+    alg = sv_algorithm()
+    alg.metadata = dict(alg.metadata, host_kernels=("not_a_real_kernel",))
+    with pytest.raises(ValueError, match="host"):
+        compile_plan(alg, stores["rmat"], memory_budget="64KB",
+                     host_fraction=0.3)
+
+
+# ---------------------------------------------------------------------
+# forced-skew calibration unit tests for the peel policy
+
+def _sched_and_waves(store, budget="64KB"):
+    sched = build_schedule(sv_algorithm(), store, mode="sparse_only",
+                           memory_budget=budget)
+    fp = task_footprints(store, sched)
+    waves = build_waves(store, sched, MemoryBudget.of(budget), fp)
+    return sched, fp, waves
+
+
+def test_auto_without_times_peels_nothing(stores):
+    """Design rule: with nothing measured the auto split stays at zero
+    (compile-time state is identical to a device-only plan)."""
+    sched, _, waves = _sched_and_waves(stores["rmat"])
+    out = peel_host_tasks(sched, waves, "auto")
+    assert all(w.host_task_ids.size == 0 for w in out)
+    assert [w.task_ids.tolist() for w in out] == \
+        [w.task_ids.tolist() for w in waves]
+
+
+def test_slow_host_peels_nothing(stores):
+    """Host 10x slower than the device on uniform tasks: no candidate
+    can hide behind the remaining device work, so the split is ~0."""
+    sched, fp, waves = _sched_and_waves(stores["rmat"])
+    times = np.ones(sched.num_tasks)
+    out = peel_host_tasks(sched, waves, "auto", task_times=times,
+                          host_ratio=10.0, footprints=fp)
+    # the hide rule caps host time at HETERO_HIDE_FACTOR/host_ratio of
+    # the device's — on uniform tasks that is under 10% of each wave
+    # (and exactly 0 for any wave smaller than ~13 tasks)
+    n_host = sum(w.host_task_ids.size for w in out)
+    n_all = sum(w.task_ids.size + w.host_task_ids.size for w in out)
+    assert n_host <= 0.1 * n_all
+    for w in out:
+        if w.task_ids.size + w.host_task_ids.size < 13:
+            assert w.host_task_ids.size == 0
+
+
+def test_dominant_task_pushes_tail_to_host(stores):
+    """One task dominates the wave: the light tail hides behind it."""
+    sched, fp, waves = _sched_and_waves(stores["rmat"])
+    times = np.full(sched.num_tasks, 0.01)
+    wave = max(waves, key=lambda w: w.task_ids.size)
+    assert wave.task_ids.size >= 2
+    times[int(wave.task_ids[0])] = 10.0        # one dense-tile-like hog
+    out = peel_host_tasks(sched, [wave], "auto", task_times=times,
+                          host_ratio=4.0, footprints=fp)
+    assert out[0].host_task_ids.size == wave.task_ids.size - 1
+    assert int(wave.task_ids[0]) in out[0].task_ids  # hog stays on device
+
+
+def test_peel_never_violates_wave_budget(stores):
+    """Device est_bytes is re-priced from footprints after the peel, so
+    a wave that fit before can only shrink."""
+    sched, fp, waves = _sched_and_waves(stores["rmat"])
+    budget = MemoryBudget.of("64KB")
+    for f in (0.3, 0.7, 1.0):
+        for w in peel_host_tasks(sched, waves, f, footprints=fp):
+            assert w.est_bytes <= budget.total_bytes
+            if w.task_ids.size:
+                assert w.est_bytes == int(fp[w.task_ids].sum())
+
+
+def test_numeric_fraction_hits_target(stores):
+    sched, fp, waves = _sched_and_waves(stores["rmat"])
+    times = np.ones(sched.num_tasks)
+    out = peel_host_tasks(sched, waves, 0.5, task_times=times,
+                          footprints=fp)
+    for before, after in zip(waves, out):
+        if before.task_ids.size >= 2:
+            assert after.host_task_ids.size >= 1
+            assert after.task_ids.size >= 1      # device side never empties
+    out = peel_host_tasks(sched, waves, 1.0, footprints=fp)
+    assert all(w.task_ids.size == 0 for w in out)
+
+
+def test_split_hysteresis():
+    """Small drifts in the measured split must not thrash the plan."""
+    assert not hetero_split_diverged(0.30, 0.33)    # under both bands
+    assert not hetero_split_diverged(0.30, 0.26)
+    assert hetero_split_diverged(0.30, 0.40)        # abs band crossed
+    assert hetero_split_diverged(0.0, 0.06)         # activation from zero
+    assert not hetero_split_diverged(0.0, 0.04)
+    assert hetero_split_diverged(0.5, 0.2)
+
+
+# ---------------------------------------------------------------------
+# property-style randomized differential (hypothesis-backed)
+
+def test_property_random_graphs_differential():
+    hypothesis = pytest.importorskip(
+        "hypothesis", reason="hypothesis not installed (pip install .[dev])"
+    )
+    from hypothesis import given, settings, strategies as st
+
+    from repro.core import from_edges
+
+    settings.register_profile("hetero", deadline=None, max_examples=10)
+    settings.load_profile("hetero")
+
+    @st.composite
+    def random_graph(draw, max_n=64, max_m=160):
+        n = draw(st.integers(8, max_n))
+        m = draw(st.integers(4, max_m))
+        src = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+        dst = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+        return from_edges(np.array(src), np.array(dst), n=n)
+
+    @given(random_graph(), st.sampled_from([0.3, 1.0]))
+    def check(g, frac):
+        store = build_block_store(g, 2)
+        want = compile_plan(sv_algorithm(), store, mode="sparse_only",
+                            share=False).run().result
+        store2 = build_block_store(g, 2)
+        try:
+            plan = compile_plan(sv_algorithm(), store2, mode="sparse_only",
+                                share=False, memory_budget="16KB",
+                                host_fraction=frac)
+        except ValueError:
+            hypothesis.assume(False)    # a task outgrew the tiny budget
+        got = plan.run().result
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+    check()

@@ -486,3 +486,56 @@ def test_mesh_streamed_trace_has_one_lane_per_device():
         assert out["per_wave"][name] == list(range(W)), name
     # a device-lane span is mirrored onto all 8 device tracks
     assert out["span_counts"]["collective"] % 8 == 0
+
+
+# ---------------------------------------------------------------------
+# metric-catalog conformance: docs/observability.md lists exactly the
+# metric names the source publishes — both directions.
+
+def test_metric_catalog_matches_source():
+    import re
+    from pathlib import Path
+
+    from repro.core.stream import PHASES
+
+    root = Path(__file__).resolve().parents[1]
+    doc = (root / "docs" / "observability.md").read_text()
+    start = doc.index("The metric catalog")
+    table = doc[start:]
+    table = table[:table.index("\n\n", table.index("| ---"))]
+    doc_names = set(re.findall(r"\| `([a-z_]+(?:\.[a-z_]+)+)` \|", table))
+    assert doc_names, "catalog table not found in docs/observability.md"
+
+    published: set = set()
+    for path in (root / "src" / "repro").rglob("*.py"):
+        src = path.read_text()
+        published |= set(re.findall(
+            r'(?:counter|gauge|histogram)\(\s*"([a-z_]+(?:\.[a-z_]+)+)"',
+            src))
+        # the per-phase counters publish through one f-string
+        if 'f"stream.phase_seconds.{' in src:
+            published |= {f"stream.phase_seconds.{p}" for p in PHASES}
+
+    missing_from_docs = sorted(published - doc_names)
+    stale_in_docs = sorted(doc_names - published)
+    assert not missing_from_docs, (
+        f"published metrics absent from the docs catalog: "
+        f"{missing_from_docs}")
+    assert not stale_in_docs, (
+        f"docs catalog names nothing in src publishes: {stale_in_docs}")
+
+    # and a live streamed + served run publishes only cataloged names
+    from repro.core import build_block_store, compile_plan, rmat
+    from repro.algorithms import sv_algorithm
+    from repro.serve import GraphServer, Query
+
+    obs.REGISTRY.reset()
+    store = build_block_store(rmat(8, 8, seed=3), 4)
+    compile_plan(sv_algorithm(), store, mode="sparse_only", share=False,
+                 memory_budget="16KB", host_fraction=0.3).run()
+    srv = GraphServer(max_batch=4)
+    srv.register_graph("g", build_block_store(rmat(8, 8, seed=3), 4))
+    srv.submit(Query("g", "pagerank", dict(seeds=[1])))
+    srv.drain()
+    live = set(obs.metrics.snapshot())
+    assert live <= doc_names, sorted(live - doc_names)

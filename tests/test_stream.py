@@ -754,7 +754,7 @@ def test_arena_and_phase_stats(graph):
     assert 0.0 <= st["host_stage_overlap"] <= 1.0
     phases = st["phase_seconds"]
     assert set(phases) == {"assemble", "prepare", "device_put", "compute",
-                           "collective"}
+                           "collective", "host_compute"}
     assert all(v >= 0.0 for v in phases.values())
     assert phases["assemble"] > 0.0
     assert phases["device_put"] > 0.0
