@@ -57,6 +57,13 @@ SMOKE_OVERLAP_FLOOR = env_float("REPRO_SMOKE_OVERLAP_FLOOR", 0.10)
 # ``REPRO_HETERO_WALL_RATIO`` (default 1.05).
 HETERO_WALL_RATIO = env_float("REPRO_HETERO_WALL_RATIO", 1.05)
 
+# CI direction-smoke gate: the direction-optimizing (auto) run's
+# best-of-repeats wall clock may be at most this multiple of the
+# fixed-push baseline on the same warm plan shape (both variants are
+# compiled up front, so auto only pays the per-iteration host decision).
+# Override with ``REPRO_DIRECTION_WALL_RATIO`` (default 1.05).
+DIRECTION_WALL_RATIO = env_float("REPRO_DIRECTION_WALL_RATIO", 1.05)
+
 
 def run(scale: str = "small", repeats: int = 3, backend: str = "xla",
         memory_budget: str | None = None,
@@ -345,6 +352,90 @@ def run_hetero_smoke(out_path: str = "BENCH_hetero.json", *,
     return payload["passed"]
 
 
+def run_direction_smoke(out_path: str = "BENCH_direction.json", *,
+                        repeats: int = 3, backend: str = "xla",
+                        direction: str = "auto") -> bool:
+    """The CI direction-smoke gate (and its ``BENCH_direction.json``
+    artifact).
+
+    BFS on a skewed R-MAT under ``direction="auto"``:
+
+    * **pull engaged**: the hysteresis controller must run ≥ 1
+      bottom-up (pull) iteration — visible in
+      ``schedule_stats["direction"]["pull_iterations"]``;
+    * **checksum-exact**: parent/dist checksums equal the fixed-push
+      run's, bit-for-bit (the direction contract);
+    * **no slowdown**: the auto best-of-``repeats`` wall must stay
+      within :data:`DIRECTION_WALL_RATIO` of the fixed-push baseline on
+      the same warm plan shape — both variants are pre-compiled, so
+      flipping direction costs one host-side density read per
+      iteration.
+    """
+    import time
+
+    import numpy as np
+
+    from repro import obs
+    from repro.core import build_block_store, compile_plan, rmat
+    from repro.algorithms import bfs_algorithm
+
+    g = rmat(12, 16, seed=5)      # skewed: hub-heavy Kronecker
+    store = build_block_store(g, 8)
+
+    def compiled(d):
+        return compile_plan(bfs_algorithm(0), store, mode="sparse_only",
+                            backend=backend, share=False, direction=d)
+
+    def timed_run(plan):
+        t0 = time.perf_counter()
+        res = plan.run()
+        return res, time.perf_counter() - t0
+
+    push_plan, auto_plan = compiled("push"), compiled(direction)
+    push_plan.run()               # warm: compile outside the timings
+    auto_plan.run()
+
+    (push_res, push_s), _ = best_of(
+        lambda: timed_run(push_plan), attempts=repeats,
+        score=lambda rs: -rs[1])
+    (auto_res, auto_s), _ = best_of(
+        lambda: timed_run(auto_plan), attempts=repeats,
+        score=lambda rs: -rs[1],
+        good_enough=lambda rs: rs[1] <= DIRECTION_WALL_RATIO * push_s)
+
+    def checksum(res):
+        return {k: int(np.asarray(v, dtype=np.int64).sum())
+                for k, v in res.result.items()}
+
+    dstats = auto_res.schedule_stats["direction"]
+    cs, push_cs = checksum(auto_res), checksum(push_res)
+    wall_ratio = auto_s / push_s if push_s > 0 else float("inf")
+    checks = dict(
+        pull_engaged=dstats["pull_iterations"] >= 1,
+        checksum_exact=cs == push_cs,
+        wall=wall_ratio <= DIRECTION_WALL_RATIO,
+    )
+    payload = obs.export.run_report("direction_smoke", dict(
+        graph="rmat(12, 16, seed=5)", direction=direction,
+        floors=dict(wall_ratio=DIRECTION_WALL_RATIO),
+        push_s=round(push_s, 5), auto_s=round(auto_s, 5),
+        wall_ratio=round(wall_ratio, 4),
+        iterations=auto_res.iterations,
+        decisions=dstats["decisions"],
+        densities=[round(d, 4) for d in dstats["densities"]],
+        switches=dstats["switches"],
+        pull_iterations=dstats["pull_iterations"],
+        beta=dstats["beta"], hysteresis=dstats["hysteresis"],
+        checksum=cs, push_checksum=push_cs,
+        checks=checks,
+        passed=all(checks.values()),
+    ))
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(json.dumps(payload, indent=2))
+    return payload["passed"]
+
+
 def run_mesh_streaming(g, *, repeats: int = 3, backend: str = "xla",
                        memory_budget: str | None = None,
                        mesh_devices: int = 8) -> list[str]:
@@ -458,7 +549,21 @@ if __name__ == "__main__":
              "forwarded as compile_plan(..., host_fraction=...)",
     )
     ap.add_argument("--hetero-out", default="BENCH_hetero.json")
+    ap.add_argument(
+        "--direction", default=None, choices=["push", "pull", "auto"],
+        help="with --smoke: run the direction-smoke gate instead — "
+             "direction-optimizing BFS on a skewed R-MAT must take ≥1 "
+             "pull iteration, stay checksum-exact vs fixed push, and "
+             "stay within REPRO_DIRECTION_WALL_RATIO of its wall — "
+             "writes BENCH_direction.json",
+    )
+    ap.add_argument("--direction-out", default="BENCH_direction.json")
     a = ap.parse_args()
+    if a.direction is not None and a.smoke:
+        sys.exit(0 if run_direction_smoke(a.direction_out,
+                                          repeats=a.repeats,
+                                          backend=a.backend,
+                                          direction=a.direction) else 1)
     if a.host_fraction is not None:
         hf: "float | str" = (a.host_fraction if a.host_fraction == "auto"
                              else float(a.host_fraction))

@@ -2,31 +2,40 @@
 
 The paper implements top-down in K_H (CPUs are better at it) and
 bottom-up in K_D (GPUs are better at it), choosing per level.  The TPU
-adaptation keeps that split:
+adaptation expresses that split through the framework's push/pull
+direction capability (:mod:`repro.core.direction`):
 
-* **top-down** (sparse path): masked scatter over the segmented COO —
-  every edge whose source is in the frontier offers itself as parent of
-  an unvisited destination (min-scatter picks a deterministic parent).
-* **bottom-up** (dense path): packed bitmap tiles — for each tile row
-  (an unvisited candidate u) find the smallest frontier neighbor via a
-  masked tile reduction (optionally the Pallas ``frontier_tile`` kernel);
-  sparse-path blocks fall back to a reversed edge scatter.
+* **push** (top-down): masked scatter over the segmented COO — every
+  edge whose source is in the frontier offers itself as parent of an
+  unvisited destination (min-scatter picks a deterministic parent).
+  The dense-path twin runs the same scatter over the dense-routed
+  edges.
+* **pull** (bottom-up): for each unvisited vertex, find the smallest
+  frontier neighbor.  The sparse twin is a reversed edge scatter; the
+  dense twin reduces the packed bitmap tiles (optionally the Pallas
+  ``frontier_tile`` kernel) — the paper's Listing 3 "if one of its
+  neighbors appears in the frontier, insert and stop", as a masked
+  row min-reduction (the deterministic TPU analog of the early exit).
 
-`before` (I_B) implements Beamer's direction heuristic host-side from
-the frontier occupancy; `after` (I_A) stops when no vertex was added —
-both exactly the paper's iteration hooks.  Activation is realized as
-masking (see DESIGN §2): inactive edges/vertices are masked out rather
-than compacted, which is the static-shape analog of composing
-block-lists from blocks with non-empty queues.
+``compile_plan(..., direction="auto")`` re-creates the paper's
+per-level Beamer switch from the device-computed frontier count ``nf``
+— the executor's hysteresis controller replaces the old host-side
+``before`` hook and its per-state ``dir_dense`` flag, and the same
+decision drives every wave, mesh shard, and host-lane unit of a level,
+so pull levels stay bit-identical to push.  The default (no
+``direction=``) is fixed push.  Activation is realized as masking (see
+DESIGN §2): inactive edges/vertices are masked out rather than
+compacted, which is the static-shape analog of composing block-lists
+from blocks with non-empty queues.
 
 Batch axis (``sources=[...]``): the state carries a leading query axis
-on ``parent``/``frontier``/``dist`` (and per-query scalars ``nf``,
-``dir_dense``), and the level kernels vmap the single-source level
-function over axis 0 against the one shared graph context.  Each row
-runs exactly the traversal its solo run would — the direction heuristic
-and termination are evaluated per query — so batched results are
-bit-identical to single-source runs.  The single-source path is the
-unbatched code path, unchanged.
+on ``parent``/``frontier``/``dist`` (and the per-query count ``nf``),
+and the level kernels vmap the single-source level function over axis 0
+against the one shared graph context.  Each row runs exactly the
+traversal its solo run would, so batched results are bit-identical to
+single-source runs; the direction decision is per *iteration* (the
+controller sums the batched ``nf`` against ``n`` per query).  The
+single-source path is the unbatched code path, unchanged.
 """
 from __future__ import annotations
 
@@ -53,7 +62,6 @@ def _init_factory(source: int):
             frontier=frontier,
             dist=dist,
             nf=jnp.asarray(1, jnp.int32),
-            dir_dense=jnp.asarray(False),  # False = top-down
         )
 
     return _init
@@ -82,7 +90,6 @@ def _init_multi_factory(sources):
             frontier=jnp.asarray(frontier),
             dist=jnp.asarray(dist),
             nf=jnp.ones((b,), jnp.int32),
-            dir_dense=jnp.zeros((b,), bool),
         )
 
     return _init
@@ -105,7 +112,10 @@ def _top_down(ctx, state, edge_mask):
 
 
 def _bottom_up_edges(ctx, state, edge_mask):
-    # reversed roles: unvisited src looks for any frontier dst neighbor
+    # reversed roles: unvisited src looks for any frontier dst neighbor.
+    # On the symmetrized arc multiset this scatters the same
+    # (target, candidate) pairs as _top_down, so the level's min-fold
+    # is bit-identical — the pull contract.
     src, dst = ctx.src, ctx.dst
     parent, frontier = state["parent"], state["frontier"]
     n = parent.shape[0]
@@ -121,25 +131,22 @@ def _bottom_up_edges(ctx, state, edge_mask):
 # exactly these so untouched leaves pass through by identity (the
 # streaming executor's per-wave fold relies on that to tell written
 # leaves from carried ones)
-_LEVEL_KEYS = ("parent", "frontier", "dist", "dir_dense")
+_LEVEL_KEYS = ("parent", "frontier", "dist")
 
 
-def _level_sparse(ctx, sub):
-    msk = ctx.sparse_edge_mask
-    return jax.lax.cond(
-        sub["dir_dense"],
-        lambda: _bottom_up_edges(ctx, sub, msk),
-        lambda: _top_down(ctx, sub, msk),
-    )
+def _level_kernel(level_fn):
+    """Lift a per-query level function into a (ctx, state, it) kernel
+    that vmaps over the batch axis when one is present."""
 
+    def kernel(ctx, state, it):
+        sub = {k: state[k] for k in _LEVEL_KEYS}
+        if state["parent"].ndim == 2:
+            parent = jax.vmap(lambda s: level_fn(ctx, s))(sub)
+        else:
+            parent = level_fn(ctx, sub)
+        return dict(state, parent=parent)
 
-def _kernel_sparse(ctx, state, it):
-    sub = {k: state[k] for k in _LEVEL_KEYS}
-    if state["parent"].ndim == 2:
-        parent = jax.vmap(lambda s: _level_sparse(ctx, s))(sub)
-    else:
-        parent = _level_sparse(ctx, sub)
-    return dict(state, parent=parent)
+    return kernel
 
 
 def _bottom_up_tiles(ctx, state):
@@ -168,22 +175,13 @@ def _bottom_up_tiles(ctx, state):
     return ppad.at[rows].min(cand)[:n]
 
 
-def _level_dense(ctx, sub):
-    msk = ctx.dense_edge_mask
-    return jax.lax.cond(
-        sub["dir_dense"],
-        lambda: _bottom_up_tiles(ctx, sub),
-        lambda: _top_down(ctx, sub, msk),
-    )
-
-
-def _kernel_dense(ctx, state, it):
-    sub = {k: state[k] for k in _LEVEL_KEYS}
-    if state["parent"].ndim == 2:
-        parent = jax.vmap(lambda s: _level_dense(ctx, s))(sub)
-    else:
-        parent = _level_dense(ctx, sub)
-    return dict(state, parent=parent)
+_kernel_sparse = _level_kernel(
+    lambda ctx, s: _top_down(ctx, s, ctx.sparse_edge_mask))
+_kernel_dense = _level_kernel(
+    lambda ctx, s: _top_down(ctx, s, ctx.dense_edge_mask))
+_kernel_sparse_pull = _level_kernel(
+    lambda ctx, s: _bottom_up_edges(ctx, s, ctx.sparse_edge_mask))
+_kernel_dense_pull = _level_kernel(_bottom_up_tiles)
 
 
 def _post(ctx, state, it):
@@ -200,15 +198,11 @@ def bfs_algorithm(source: int = 0, *, sources=None, max_iters: int = 10_000,
                   beta: int = 24) -> BlockAlgorithm:
     """Single-source BFS from ``source``, or — with ``sources=[...]`` —
     a batched multi-source BFS whose state carries a leading query axis
-    (one independent traversal per source; see module docstring)."""
-    def before(host, state, it):
-        # Beamer heuristic, host side (I_B): go bottom-up while the
-        # frontier is a large fraction of the graph — elementwise, so
-        # a batched state gets one direction decision per query
-        nf = np.asarray(jax.device_get(state["nf"]))
-        dense = nf * beta > host.n
-        return dict(state, dir_dense=jnp.asarray(dense))
+    (one independent traversal per source; see module docstring).
 
+    ``beta`` is the Beamer cost ratio the direction controller applies
+    under ``compile_plan(..., direction="auto")`` (pull once
+    ``nf * beta > n``, hysteresis on the way back)."""
     def after(host, state, it):
         return state, bool(np.any(np.asarray(
             jax.device_get(state["nf"])) > 0))
@@ -218,10 +212,11 @@ def bfs_algorithm(source: int = 0, *, sources=None, max_iters: int = 10_000,
         mode=Mode.ACTIVATION,
         kernel_sparse=_kernel_sparse,
         kernel_dense=_kernel_dense,
+        kernel_sparse_pull=_kernel_sparse_pull,
+        kernel_dense_pull=_kernel_dense_pull,
         post=_post,
         init_state=(_init_factory(source) if sources is None
                     else _init_multi_factory(sources)),
-        before=before,
         after=after,
         max_iterations=max_iters,
         finalize=lambda store, state: dict(
@@ -232,8 +227,10 @@ def bfs_algorithm(source: int = 0, *, sources=None, max_iters: int = 10_000,
         # post-written `dist`, so any edge/tile partition over mesh
         # devices pmin-folds to the identical (deterministic) parents
         metadata=dict(combine=dict(parent="min", dist="min"),
-                      workspace_kernel="frontier_tiles", csr="none",
-                      mesh="shard", batch="query"),
+                      workspace_kernel="frontier_tiles",
+                      workspace_kernel_pull="frontier_tiles",
+                      direction=dict(frontier="nf", beta=float(beta)),
+                      csr="none", mesh="shard", batch="query"),
     )
 
 

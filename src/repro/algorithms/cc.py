@@ -59,7 +59,7 @@ def _init(store):
     )
 
 
-def _make_kernel(k_rounds: int):
+def _make_kernel(k_rounds: int, pull: bool = False):
     def kernel(ctx, state, it):
         indptr, indices, degrees = ctx.indptr, ctx.indices, ctx.degrees
         src, dst, msk = ctx.src, ctx.dst, ctx.sparse_edge_mask
@@ -67,6 +67,8 @@ def _make_kernel(k_rounds: int):
         n = C.shape[0]
 
         def sample_round(C):
+            # direction-agnostic: reads each vertex's own CSR row, no
+            # scatter orientation to flip — shared by push and pull
             r = it.astype(indptr.dtype)
             u = jnp.arange(n, dtype=jnp.int32)
             idx = jnp.minimum(indptr[:-1] + r, jnp.maximum(indices.shape[0] - 1, 0))
@@ -74,7 +76,13 @@ def _make_kernel(k_rounds: int):
             return _hook(C, u, v, r < degrees)
 
         def final_round(C):
+            # the skip predicate and the root-normalizing hook are both
+            # endpoint-symmetric, so the pull orientation (reversed
+            # arcs) min-folds to bit-identical C on the symmetrized
+            # arc multiset
             skip = (C[src] == state["c_skip"]) & (C[dst] == state["c_skip"])
+            if pull:
+                return _hook(C, dst, src, msk & ~skip)
             return _hook(C, src, dst, msk & ~skip)
 
         return dict(
@@ -111,6 +119,7 @@ def afforest_algorithm(*, k_rounds: int = 2, sample_size: int = 1024,
         name="afforest",
         mode=Mode.BULK,
         kernel_sparse=_make_kernel(k_rounds),
+        kernel_sparse_pull=_make_kernel(k_rounds, pull=True),
         post=_post,
         init_state=_init,
         before=before,
@@ -120,6 +129,9 @@ def afforest_algorithm(*, k_rounds: int = 2, sample_size: int = 1024,
         metadata=dict(
             combine=dict(C="min", C_prev="min", H="add", c_skip="max"),
             params=dict(k_rounds=k_rounds),
+            # H counts hooks per round — high right after sampling
+            # (pull), decaying as finalization converges (push)
+            direction=dict(frontier="H"),
             # sampling rounds read only each vertex's first k_rounds
             # neighbors — the streaming executor runs one representative
             # wave for them against the first-k prefix CSR; the

@@ -39,6 +39,18 @@ def _kernel(ctx, state, it):
     return dict(state, deg=state["deg"].at[dst].add(contrib))
 
 
+def _kernel_pull(ctx, state, it):
+    # pull orientation: each vertex accumulates over its out-arcs
+    # (``src`` side) instead of receiving on its in-arcs.  The edge
+    # predicate is symmetric and the arc multiset is symmetrized, so the
+    # add-fold lands bit-identical degrees — contributions just arrive
+    # grouped by owner, the gather-friendly shape.
+    src, dst, msk = ctx.src, ctx.dst, ctx.sparse_edge_mask
+    alive = state["alive"]
+    contrib = (msk & alive[src] & alive[dst]).astype(jnp.int32)
+    return dict(state, deg=state["deg"].at[src].add(contrib))
+
+
 def _make_post(k: int):
     def post(ctx, state, it):
         alive = state["alive"]
@@ -60,6 +72,7 @@ def kcore_algorithm(k: int, *, max_iters: int = 10_000) -> BlockAlgorithm:
         name=f"kcore_{k}",
         mode=Mode.ACTIVATION,
         kernel_sparse=_kernel,
+        kernel_sparse_pull=_kernel_pull,
         post=_make_post(k),
         init_state=_init,
         after=after,
@@ -69,6 +82,9 @@ def kcore_algorithm(k: int, *, max_iters: int = 10_000) -> BlockAlgorithm:
         # from iteration-start alive — psum over any edge partition;
         # alive/peeled are post-written
         metadata=dict(combine=dict(deg="add", alive="min", peeled="add"),
+                      # nearly everything is alive early, so "auto" pulls
+                      # until peeling thins the subgraph out
+                      direction=dict(frontier="alive"),
                       csr="none", mesh="shard"),
     )
 

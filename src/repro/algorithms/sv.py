@@ -72,6 +72,37 @@ def _kernel_sparse(ctx, state, it):
     )
 
 
+def _hook_pull(ctx, state):
+    # pull orientation: each vertex inspects its reversed arcs
+    # (dst, src) instead of (src, dst).  The hook normalizes both
+    # endpoints through max/min before scattering, so on the
+    # symmetrized arc multiset the min-fold lands bit-identical C —
+    # which is exactly the pull contract.
+    src, dst, msk = ctx.src, ctx.dst, ctx.sparse_edge_mask
+    C = state["C"]
+    n = C.shape[0]
+    cu, cv = C[dst], C[src]
+    r1 = jnp.maximum(cu, cv)
+    r2 = jnp.minimum(cu, cv)
+    is_root = C[r1] == r1
+    do = msk & (r1 != r2) & is_root
+    tgt = jnp.where(do, r1, n)            # sentinel row n = no-op
+    C_pad = jnp.concatenate([C, jnp.asarray([n], jnp.int32)])
+    C_new_pad = C_pad.at[tgt].min(r2)
+    C_new = C_new_pad[:n]
+    h = jnp.sum((C_new != C).astype(jnp.int32))
+    return dict(C=C_new, H=state["H"] + h)
+
+
+def _kernel_sparse_pull(ctx, state, it):
+    return jax.lax.cond(
+        it % 2 == 0,
+        lambda s: _hook_pull(ctx, s),
+        lambda s: _link(s),
+        state,
+    )
+
+
 def sv_algorithm(*, max_iters: int = 200) -> BlockAlgorithm:
     def before(host, state, it):
         if it % 2 == 0:  # I_B: reset H before each hooking iteration
@@ -88,6 +119,7 @@ def sv_algorithm(*, max_iters: int = 200) -> BlockAlgorithm:
         name="shiloach_vishkin",
         mode=Mode.BULK,
         kernel_sparse=_kernel_sparse,
+        kernel_sparse_pull=_kernel_sparse_pull,
         init_state=_init,
         before=before,
         after=after,
@@ -96,8 +128,11 @@ def sv_algorithm(*, max_iters: int = 200) -> BlockAlgorithm:
         # mesh="shard": hooks judge roots on iteration-start C, so the
         # min-scatter pmin-folds over any edge partition; H psums the
         # per-device hook counts (same fold streaming already uses)
-        metadata=dict(combine=dict(C="min", H="add"), csr="none",
-                      mesh="shard"),
+        metadata=dict(combine=dict(C="min", H="add"),
+                      # H counts hooks: large early (pull), tapering to
+                      # zero as components settle (back to push)
+                      direction=dict(frontier="H"),
+                      csr="none", mesh="shard"),
     )
 
 

@@ -47,6 +47,9 @@ from .blocks import BlockStore, build_block_store
 from .functors import BlockAlgorithm, Mode, default_estimate
 from .scheduler import Schedule, build_schedule, lpt_assign
 from .context import Context, HostCtx, build_context, build_host_ctx
+from .direction import (
+    DIRECTIONS, DirectionController, direction_spec, resolve_direction,
+)
 from .engine import (
     Plan, compile_plan, RunResult, Engine, run, batch_states, unbatch_state,
 )
@@ -70,6 +73,8 @@ __all__ = [
     "BlockAlgorithm", "Mode", "default_estimate",
     "Schedule", "build_schedule", "lpt_assign",
     "Context", "HostCtx", "build_context", "build_host_ctx",
+    "DIRECTIONS", "DirectionController", "direction_spec",
+    "resolve_direction",
     "Plan", "compile_plan", "RunResult", "batch_states", "unbatch_state",
     "MemoryBudget", "PIPELINE_DEPTH", "arena_model_bytes",
     "task_footprints", "task_csr_edge_counts",

@@ -28,15 +28,21 @@ __all__ = ["alg_cache_key", "shared_entry"]
 T = TypeVar("T")
 
 
-def alg_cache_key(alg: "BlockAlgorithm", backend: str) -> tuple:
-    """Algorithms are identified by (name, trace-affecting params, backend).
+def alg_cache_key(alg: "BlockAlgorithm", backend: str,
+                  direction: str = "push") -> tuple:
+    """Algorithms are identified by (name, trace-affecting params,
+    backend, kernel direction).
 
     Factories record trace-affecting parameters under
     ``metadata["params"]``; two factory calls with equal params produce
-    behaviourally identical kernels and may share a compiled step.
+    behaviourally identical kernels and may share a compiled step.  The
+    ``direction`` component keys the push/pull kernel variant
+    (:mod:`repro.core.direction`) so each direction traces exactly once
+    and an auto plan's two steps never collide in the cache.
     """
     params = alg.metadata.get("params")
-    return (alg.name, repr(sorted(params.items())) if params else None, backend)
+    return (alg.name, repr(sorted(params.items())) if params else None,
+            backend, direction)
 
 
 def shared_entry(cache: dict, key: tuple, factory: Callable[[], T], *,

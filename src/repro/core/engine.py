@@ -47,6 +47,7 @@ from .. import obs
 from .blocks import BlockStore
 from .compilecache import alg_cache_key, shared_entry
 from .context import Context, HostCtx, build_context, build_host_ctx
+from .direction import DirectionController, kernels_for, resolve_direction
 from .functors import BlockAlgorithm
 from .scheduler import Schedule, build_schedule
 
@@ -105,16 +106,17 @@ class RunResult:
 # same-shape graphs — or two Plans for the same algorithm — share one
 # compilation.
 class _CompiledStep:
-    def __init__(self, alg: BlockAlgorithm) -> None:
+    def __init__(self, alg: BlockAlgorithm, direction: str = "push") -> None:
         self.traces = 0
+        kernel_sparse, kernel_dense = kernels_for(alg, direction)
 
         def step(ctx: Context, state, it, run_dense: bool):
             self.traces += 1  # trace-time side effect == compile counter
             obs.metrics.counter("compile.traces").inc()
-            if alg.kernel_sparse is not None:
-                state = alg.kernel_sparse(ctx, state, it)
-            if alg.kernel_dense is not None and run_dense:
-                state = alg.kernel_dense(ctx, state, it)
+            if kernel_sparse is not None:
+                state = kernel_sparse(ctx, state, it)
+            if kernel_dense is not None and run_dense:
+                state = kernel_dense(ctx, state, it)
             if alg.post is not None:
                 state = alg.post(ctx, state, it)
             return state
@@ -135,9 +137,10 @@ _shared_entry = shared_entry
 
 
 def _compiled_step_for(alg: BlockAlgorithm, backend: str, *,
-                       share: bool = True) -> _CompiledStep:
-    return shared_entry(_STEP_CACHE, alg_cache_key(alg, backend),
-                        lambda: _CompiledStep(alg), share=share)
+                       share: bool = True,
+                       direction: str = "push") -> _CompiledStep:
+    return shared_entry(_STEP_CACHE, alg_cache_key(alg, backend, direction),
+                        lambda: _CompiledStep(alg, direction), share=share)
 
 
 # ----------------------------------------------------------------------
@@ -165,16 +168,26 @@ class Plan:
                  schedule: Schedule | None, *, backend: str,
                  num_devices: int, mode: str, tile_dim: int,
                  dense_frac: float, dense_density: float,
-                 share: bool = True) -> None:
+                 share: bool = True, direction: str | None = None) -> None:
         from ..kernels.registry import resolve_backend
 
         self.alg = alg
         self.backend = resolve_backend(backend)
+        self.direction = resolve_direction(alg, direction)
+        # None keeps the pre-direction contract: plain push, no
+        # controller, no schedule_stats["direction"] block
+        self._direction_requested = direction is not None
         self._sched_kw = dict(
             num_devices=num_devices, mode=mode, tile_dim=tile_dim,
             dense_frac=dense_frac, dense_density=dense_density,
         )
-        self._step = _compiled_step_for(alg, self.backend, share=share)
+        self._steps = {
+            "push": _compiled_step_for(alg, self.backend, share=share),
+        }
+        if self.direction in ("pull", "auto"):
+            self._steps["pull"] = _compiled_step_for(
+                alg, self.backend, share=share, direction="pull")
+        self._step = self._steps["push"]
         self._bindings: dict[int, _Binding] = {}
         self._default = self.bind(store, schedule)
 
@@ -243,9 +256,11 @@ class Plan:
         """Number of times the step has been traced (≈ jit compilations).
 
         Shared across every Plan using the same cached step; the reuse
-        tests assert this stays at 1 across same-shape graphs.
+        tests assert this stays at 1 across same-shape graphs.  With a
+        direction-optimizing plan this sums the push and pull steps —
+        each variant traces once.
         """
-        return self._step.traces
+        return sum(step.traces for step in self._steps.values())
 
     @property
     def resident_device_bytes(self) -> int:
@@ -271,6 +286,8 @@ class Plan:
         if state is None:
             assert alg.init_state is not None, f"{alg.name}: init_state required"
             state = alg.init_state(b.store)
+        ctrl = (DirectionController(alg, self.direction, b.store.n)
+                if self._direction_requested else None)
         t0 = time.perf_counter()
         it = 0
         cont = True
@@ -278,9 +295,11 @@ class Plan:
             with obs.span("iteration", lane="main", it=it, alg=alg.name):
                 if alg.before is not None:
                     state = alg.before(b.host, state, it)
+                step = (self._steps[ctrl.decide(state, it)]
+                        if ctrl is not None else self._step)
                 with obs.span("compute", lane="device", it=it):
-                    state = self._step(b.context, state, jnp.int32(it),
-                                       b.run_dense)
+                    state = step(b.context, state, jnp.int32(it),
+                                 b.run_dense)
                 if alg.after is not None:
                     state, cont = alg.after(b.host, state, it)
             it += 1
@@ -294,12 +313,15 @@ class Plan:
         m.counter("engine.iterations").inc(it)
         m.histogram("engine.run_seconds").observe(dt)
         result = alg.finalize(b.store, state) if alg.finalize else state
+        stats = b.schedule.stats
+        if ctrl is not None:
+            stats = dict(stats, direction=ctrl.stats())
         return RunResult(
             result=result,
             state=state,
             iterations=it,
             seconds=dt,
-            schedule_stats=b.schedule.stats,
+            schedule_stats=stats,
         )
 
 
@@ -316,6 +338,7 @@ def compile_plan(
     dense_density: float = 0.005,
     share: bool = True,
     use_pallas: bool = False,
+    direction: str | None = None,
     memory_budget: "int | str | None" = None,
     rebalance_threshold: "float | str | None" = "auto",
     pipeline_depth: int | None = None,
@@ -331,6 +354,18 @@ def compile_plan(
     ``backend="pallas"`` (an explicit ``backend`` wins).  ``share=False``
     opts out of the process-wide compiled-step cache (use it for ad-hoc
     algorithms that reuse a registered name with different kernels).
+
+    ``direction`` selects the kernel direction for algorithms that
+    declare the ``metadata["direction"]`` capability
+    (:mod:`repro.core.direction`): ``"push"`` / ``"pull"`` pin one
+    variant, ``"auto"`` decides per iteration from the frontier density
+    behind a hysteresis band — one direction per iteration across
+    waves, mesh shards, and the host lane, so results stay
+    bit-identical to fixed push for integer/bool attributes.  Each
+    variant's step traces once (the compiled-step cache keys the
+    direction) and every decision is recorded in
+    ``schedule_stats["direction"]``.  ``None`` (the default) keeps the
+    plain push step with no controller.
 
     ``memory_budget`` (bytes, or a string like ``"64MB"``) switches to
     the out-of-core streaming executor: the result is a
@@ -419,6 +454,7 @@ def compile_plan(
             backend=backend, num_devices=num_devices, mode=mode,
             tile_dim=tile_dim, dense_frac=dense_frac,
             dense_density=dense_density, share=share,
+            direction=direction,
             rebalance_threshold=rebalance_threshold,
             pipeline_depth=(PIPELINE_DEPTH if pipeline_depth is None
                             else pipeline_depth),
@@ -429,7 +465,7 @@ def compile_plan(
         alg, store, schedule,
         backend=backend, num_devices=num_devices, mode=mode,
         tile_dim=tile_dim, dense_frac=dense_frac,
-        dense_density=dense_density, share=share,
+        dense_density=dense_density, share=share, direction=direction,
     )
 
 

@@ -72,6 +72,14 @@ loop continues while it returns ``True``, bounded by
     pass :func:`repro.kernels.registry.host_executable` for the host
     lane to engage.  Pure-``jnp`` sparse kernels (every shipped
     algorithm) leave it empty.  See ``docs/heterogeneous.md``.
+``direction``
+    push/pull capability: ``dict(frontier=<state leaf>, beta=...)``
+    together with the ``kernel_sparse_pull``/``kernel_dense_pull``
+    twins enables ``compile_plan(..., direction="pull" | "auto")`` —
+    per-iteration direction optimization (:mod:`repro.core.direction`).
+``workspace_kernel_pull``
+    workspace estimator for the pull dense path when it differs from
+    the push one; ``"auto"`` plans price the max over both variants.
 """
 from __future__ import annotations
 
@@ -104,6 +112,14 @@ class BlockAlgorithm:
     # kernels — at least one required
     kernel_sparse: Callable[..., Any] | None = None   # K_H analog
     kernel_dense: Callable[..., Any] | None = None    # K_D analog
+    # pull-direction twins (same signature/contract), read only when
+    # metadata["direction"] declares the capability: a pull variant must
+    # produce bit-identical int/bool results to its push twin from the
+    # same iteration-start state on any edge sub-partition — the
+    # executor substitutes one for the other per iteration (see
+    # repro.core.direction and docs/writing-algorithms.md)
+    kernel_sparse_pull: Callable[..., Any] | None = None
+    kernel_dense_pull: Callable[..., Any] | None = None
     # block-list composition — P_C (explicit) or P_G (predicate)
     make_blocklists: Callable[..., np.ndarray] | None = None
     blocklist_predicate: Callable[..., bool] | None = None

@@ -151,7 +151,7 @@ def task_csr_edge_counts(store: BlockStore, schedule: Schedule) -> np.ndarray:
 
 
 def task_footprints(store: BlockStore, schedule: Schedule, *,
-                    workspace_kernel: str | None = None,
+                    workspace_kernel: "str | tuple | None" = None,
                     stage_csr: bool = False) -> np.ndarray:
     """(t,) bytes: the streamed working set of each task, per the model.
 
@@ -159,7 +159,9 @@ def task_footprints(store: BlockStore, schedule: Schedule, *,
     workspace + (``stage_csr=True``) the task's conformal CSR row
     slices.  ``workspace_kernel`` names the registry kernel whose
     workspace estimator prices the dense path (algorithms declare it in
-    ``metadata["workspace_kernel"]``); when unknown, the *maximum* over
+    ``metadata["workspace_kernel"]``) — or a tuple of names, charged at
+    the max over them (how ``direction="auto"`` plans price both the
+    push and pull dense variants); when unknown, the *maximum* over
     all registered estimators is charged — conservative by design.
     ``stage_csr`` mirrors the algorithm's ``metadata["csr"] == "slice"``
     declaration: per-wave sliced ``indices`` are staged device memory
@@ -170,13 +172,13 @@ def task_footprints(store: BlockStore, schedule: Schedule, *,
     """
     from ..kernels.registry import registered_workspaces, workspace_bytes
 
-    if (workspace_kernel is not None
-            and workspace_kernel not in registered_workspaces()):
-        raise ValueError(
-            f"workspace_kernel {workspace_kernel!r} has no registered "
-            f"estimator (known: {sorted(registered_workspaces())}); a "
-            f"typo here would silently under-price dense tasks"
-        )
+    for wk in _workspace_names(workspace_kernel):
+        if wk not in registered_workspaces():
+            raise ValueError(
+                f"workspace_kernel {wk!r} has no registered "
+                f"estimator (known: {sorted(registered_workspaces())}); a "
+                f"typo here would silently under-price dense tasks"
+            )
     edges = task_edge_counts(store, schedule)
     out = edges * COO_EDGE_BYTES
     if stage_csr:
@@ -192,11 +194,22 @@ def task_footprints(store: BlockStore, schedule: Schedule, *,
     return out.astype(np.int64)
 
 
+def _workspace_names(workspace_kernel) -> tuple:
+    """Normalize a workspace declaration (name | tuple of variant
+    names | None) to a tuple for validation and pricing loops."""
+    if workspace_kernel is None:
+        return ()
+    if isinstance(workspace_kernel, str):
+        return (workspace_kernel,)
+    return tuple(workspace_kernel)
+
+
 def dense_extra_bytes(nd: int, tile_dim: int,
-                      workspace_kernel: str | None = None) -> int:
+                      workspace_kernel: "str | tuple | None" = None) -> int:
     """Dense-path surcharge for one task: ``nd`` staged bitmap tiles
     plus the kernel workspace estimate (worst case over the registry
-    when the algorithm names no kernel).
+    when the algorithm names no kernel; max over the named variants
+    when a direction-capable algorithm names several).
 
     Deliberately *not* mesh-aware: a task is atomic on one device, so
     its footprint never shrinks with mesh size.  Per-device pricing of
@@ -206,14 +219,15 @@ def dense_extra_bytes(nd: int, tile_dim: int,
     from ..kernels.registry import max_workspace_bytes, workspace_bytes
 
     extra = nd * tile_bytes(tile_dim)
-    extra += (workspace_bytes(workspace_kernel, nd=nd, tile_dim=tile_dim)
-              if workspace_kernel is not None
+    names = _workspace_names(workspace_kernel)
+    extra += (workspace_bytes(names, nd=nd, tile_dim=tile_dim)
+              if names
               else max_workspace_bytes(nd=nd, tile_dim=tile_dim))
     return int(extra)
 
 
 def single_task_bytes(store: BlockStore, blocklist, *, tile_dim: int = 0,
-                      workspace_kernel: str | None = None,
+                      workspace_kernel: "str | tuple | None" = None,
                       stage_csr: bool = False, dense: bool = False) -> int:
     """Model bytes for one task's staged working set — the canonical
     single-task pricing shared by :func:`task_footprints` (vectorized

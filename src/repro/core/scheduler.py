@@ -115,7 +115,8 @@ class Schedule:
 
 def _demote_over_budget(alg: BlockAlgorithm, store: BlockStore,
                         bls: np.ndarray, fits: np.ndarray,
-                        tile_dim: int, budget_bytes: int) -> int:
+                        tile_dim: int, budget_bytes: int,
+                        direction: str | None = None) -> int:
     """Clear ``fits`` for tasks whose dense-path staged working set
     cannot fit the budget; they run on the sparse path instead.
 
@@ -123,9 +124,10 @@ def _demote_over_budget(alg: BlockAlgorithm, store: BlockStore,
     model :func:`~repro.core.membudget.task_footprints` applies, so a
     task this check keeps is one the wave builder accepts.  Returns the
     number of demoted tasks (for ``stats``)."""
+    from .direction import workspace_kernels
     from .membudget import single_task_bytes
 
-    wk = alg.metadata.get("workspace_kernel")
+    wk = workspace_kernels(alg, direction)
     stage_csr = alg.metadata.get("csr") == "slice"
     demoted = 0
     for i in np.nonzero(fits)[0]:
@@ -151,7 +153,8 @@ def lpt_assign(weights: np.ndarray, num_devices: int) -> np.ndarray:
 
 
 def _budget_tile_dim(alg: BlockAlgorithm, tile_dim: int,
-                     budget_bytes: int) -> int:
+                     budget_bytes: int,
+                     direction: str | None = None) -> int:
     """Budget-aware tile cut-off: halve ``tile_dim`` until one staged
     bitmap tile plus its kernel workspace fits the budget.
 
@@ -160,9 +163,10 @@ def _budget_tile_dim(alg: BlockAlgorithm, tile_dim: int,
     wave builder must immediately split (or reject).  Blocks wider than
     the shrunken tile simply stay on the sparse path."""
     from ..kernels.registry import max_workspace_bytes, workspace_bytes
+    from .direction import workspace_kernels
     from .membudget import tile_bytes
 
-    wk = alg.metadata.get("workspace_kernel")
+    wk = workspace_kernels(alg, direction)
 
     def cost(td: int) -> int:
         ws = (workspace_bytes(wk, nd=1, tile_dim=td) if wk is not None
@@ -184,6 +188,7 @@ def build_schedule(
     tile_dim: int = 512,
     mode: str = "hybrid",          # "hybrid" | "sparse_only" | "dense_only"
     memory_budget=None,            # int | str | MemoryBudget | None
+    direction: str | None = None,  # push | pull | auto | None — pricing only
 ) -> Schedule:
     """Compose block-lists, estimate, sort, split paths, pack devices.
 
@@ -195,6 +200,10 @@ def build_schedule(
     slab, bitmap tiles, kernel workspace, CSR slices when the algorithm
     declares ``metadata["csr"] == "slice"`` — fits the budget, so the
     planner stops producing dense waves that must immediately be split.
+    ``direction`` feeds the workspace pricing only: ``"auto"`` charges
+    the max over the push/pull dense variants' estimators
+    (:func:`repro.core.direction.workspace_kernels`), so either variant
+    the runtime later picks fits the budget it planned against.
     """
     budget_bytes = None
     if memory_budget is not None:
@@ -202,7 +211,8 @@ def build_schedule(
 
         budget_bytes = MemoryBudget.of(memory_budget).total_bytes
         if mode != "sparse_only" and alg.kernel_dense is not None:
-            tile_dim = _budget_tile_dim(alg, tile_dim, budget_bytes)
+            tile_dim = _budget_tile_dim(alg, tile_dim, budget_bytes,
+                                        direction)
 
     bls = alg.compose_blocklists(store)
     t = bls.shape[0]
@@ -226,7 +236,7 @@ def build_schedule(
             fits[i] = ranges_ok and (dens_ok or mode == "dense_only")
         if budget_bytes is not None and alg.kernel_sparse is not None:
             dense_demoted = _demote_over_budget(
-                alg, store, bls, fits, tile_dim, budget_bytes
+                alg, store, bls, fits, tile_dim, budget_bytes, direction
             )
         if mode == "dense_only":
             dense_task_mask = fits

@@ -216,6 +216,9 @@ from .. import obs
 from .blocks import BlockStore
 from .compilecache import alg_cache_key, shared_entry
 from .context import _TRACED, Context, build_host_ctx, with_arrays
+from .direction import (
+    DirectionController, kernels_for, resolve_direction, workspace_kernels,
+)
 from .distributed import combine_fn, make_device_edge_partition
 from .functors import BlockAlgorithm
 from .graph import csr_prefix
@@ -302,9 +305,10 @@ class _StreamStep:
     tracer objects, which is exactly the contract "this wave did not
     touch that attribute"."""
 
-    def __init__(self, alg: BlockAlgorithm) -> None:
+    def __init__(self, alg: BlockAlgorithm, direction: str = "push") -> None:
         self.traces = 0
         spec = _combine_spec(alg)
+        kernel_sparse, kernel_dense = kernels_for(alg, direction)
 
         def step(ctx: Context, state0, acc, it, run_dense: bool):
             self.traces += 1
@@ -313,10 +317,10 @@ class _StreamStep:
                     f"{alg.name}: streaming requires a dict state pytree"
                 )
             new = state0
-            if alg.kernel_sparse is not None:
-                new = alg.kernel_sparse(ctx, new, it)
-            if alg.kernel_dense is not None and run_dense:
-                new = alg.kernel_dense(ctx, new, it)
+            if kernel_sparse is not None:
+                new = kernel_sparse(ctx, new, it)
+            if kernel_dense is not None and run_dense:
+                new = kernel_dense(ctx, new, it)
             added = set(new) - set(state0)
             if added:  # the in-core step would forward these to post;
                 # per-wave there is no baseline to combine them against
@@ -398,10 +402,12 @@ class _MeshStreamStep:
     ``collective_bytes`` accounting in ``schedule_stats``.
     """
 
-    def __init__(self, alg: BlockAlgorithm, mesh: Mesh) -> None:
+    def __init__(self, alg: BlockAlgorithm, mesh: Mesh,
+                 direction: str = "push") -> None:
         self.traces = 0
         self.combined_keys: tuple[str, ...] = ()
         spec = _combine_spec(alg)
+        kernel_sparse, kernel_dense = kernels_for(alg, direction)
         axis = mesh.axis_names[0]
 
         def step(res_ctx, slab, ex_leaves, state0, acc, it,
@@ -422,10 +428,10 @@ class _MeshStreamStep:
                     ))
                 ctx = with_arrays(res_ctx, extras=extras, **arrays)
                 new = state0
-                if alg.kernel_sparse is not None:
-                    new = alg.kernel_sparse(ctx, new, it)
-                if alg.kernel_dense is not None and run_dense:
-                    new = alg.kernel_dense(ctx, new, it)
+                if kernel_sparse is not None:
+                    new = kernel_sparse(ctx, new, it)
+                if kernel_dense is not None and run_dense:
+                    new = kernel_dense(ctx, new, it)
                 added = set(new) - set(state0)
                 if added:
                     raise ValueError(
@@ -483,9 +489,11 @@ _POST_STEP_CACHE: dict[tuple, _PostStep] = {}
 
 
 def _stream_step_for(alg: BlockAlgorithm, backend: str, *,
-                     share: bool = True) -> _StreamStep:
-    return shared_entry(_STREAM_STEP_CACHE, alg_cache_key(alg, backend),
-                        lambda: _StreamStep(alg), share=share)
+                     share: bool = True,
+                     direction: str = "push") -> _StreamStep:
+    return shared_entry(_STREAM_STEP_CACHE,
+                        alg_cache_key(alg, backend, direction),
+                        lambda: _StreamStep(alg, direction), share=share)
 
 
 def _post_step_for(alg: BlockAlgorithm, backend: str, *,
@@ -712,21 +720,27 @@ class _HostLane:
             **self._globals,
         )
 
-    def submit(self, state0, it: int) -> list:
+    def submit(self, state0, it: int, direction: str = "push") -> list:
         """Snapshot iteration-start state to the host CPU and dispatch
-        every unit into the pool; returns futures for ``fold``."""
+        every unit into the pool; returns futures for ``fold``.
+
+        ``direction`` selects the sparse kernel variant — the host lane
+        must run the *same* direction as the device waves within one
+        iteration, or the push/pull bit-identity contract (which holds
+        per direction, not across a mix) breaks."""
         hstate = {k: self._put(v) for k, v in state0.items()}
         iarr = self._put(np.int32(it))
-        return [self._pool.submit(self._run_unit, u, hstate, iarr)
+        kernel, _ = kernels_for(self.plan.alg, direction)
+        return [self._pool.submit(self._run_unit, u, hstate, iarr, kernel)
                 for u in range(len(self.units))]
 
-    def _run_unit(self, u: int, hstate: dict, iarr):
+    def _run_unit(self, u: int, hstate: dict, iarr, kernel):
         alg = self.plan.alg
         t0 = time.perf_counter()
         with obs.span("host_compute", lane="host-compute", unit=u,
                       tasks=int(self.units[u].size)):
             with jax.default_device(self._cpu):
-                new = alg.kernel_sparse(self._ctxs[u], hstate, iarr)
+                new = kernel(self._ctxs[u], hstate, iarr)
         added = set(new) - set(hstate)
         if added:
             raise ValueError(
@@ -935,12 +949,18 @@ class StreamingPlan:
                  rebalance_threshold: float | str | None = "auto",
                  pipeline_depth: int = PIPELINE_DEPTH,
                  share: bool = True, mesh: Mesh | None = None,
-                 host_fraction: float | str | None = "auto") -> None:
+                 host_fraction: float | str | None = "auto",
+                 direction: str | None = None) -> None:
         from ..kernels.registry import host_executable, resolve_backend
 
         self.alg = alg
         self.store = store
         self.backend = resolve_backend(backend)
+        self.direction = resolve_direction(alg, direction)
+        # None keeps the pre-direction contract (plain push, no
+        # controller, no schedule_stats["direction"] block)
+        self._direction_requested = direction is not None
+        self._direction_now = "push"    # the current iteration's choice
         self.budget = MemoryBudget.of(memory_budget)
         self._csr_mode = str(alg.metadata.get("csr", "resident"))
         if self._csr_mode not in _CSR_MODES:
@@ -1033,6 +1053,7 @@ class StreamingPlan:
             alg, store, num_devices=max(num_devices, self._mesh_devices),
             mode=mode, tile_dim=tile_dim, dense_frac=dense_frac,
             dense_density=dense_density, memory_budget=self.budget,
+            direction=self.direction,
         )
         self.host = build_host_ctx(store, self.schedule, backend=self.backend)
         # the cross-wave staging plan: shape-driving prepare decisions
@@ -1046,9 +1067,12 @@ class StreamingPlan:
         self._arena_deferred: list[tuple] = []
         self._pipe: _StagePipeline | None = None
 
+        # "auto" prices the max over the push/pull dense variants, so
+        # whichever direction an iteration picks fits the planned budget
+        self._workspace_decl = workspace_kernels(alg, self.direction)
         self._footprints = task_footprints(
             store, self.schedule,
-            workspace_kernel=alg.metadata.get("workspace_kernel"),
+            workspace_kernel=self._workspace_decl,
             stage_csr=self._csr_mode == "slice",
         )
         self._host_ratio = _hetero_host_ratio_default()
@@ -1070,6 +1094,17 @@ class StreamingPlan:
         self._step = _stream_step_for(alg, self.backend, share=share)
         self._mesh_step = (
             _MeshStreamStep(alg, mesh) if mesh is not None else None
+        )
+        # pull twins, built only when the plan may take a pull
+        # iteration; each direction traces once (cache keys the variant)
+        want_pull = self.direction in ("pull", "auto")
+        self._step_pull = (
+            _stream_step_for(alg, self.backend, share=share,
+                             direction="pull") if want_pull else None
+        )
+        self._mesh_step_pull = (
+            _MeshStreamStep(alg, mesh, "pull")
+            if want_pull and mesh is not None else None
         )
         self._post = _post_step_for(alg, self.backend, share=share)
         self._calibration: dict | None = None
@@ -1479,7 +1514,7 @@ class StreamingPlan:
                     max_workspace_bytes, workspace_bytes,
                 )
 
-                wk = self.alg.metadata.get("workspace_kernel")
+                wk = self._workspace_decl
                 hints = dict(nd=int(tiles.shape[0]), tile_dim=sched.tile_dim)
                 ws += (workspace_bytes(wk, **hints) if wk is not None
                        else max_workspace_bytes(**hints))
@@ -1607,7 +1642,7 @@ class StreamingPlan:
         if planning and run_dense:
             from ..kernels.registry import max_workspace_bytes, workspace_bytes
 
-            wk = self.alg.metadata.get("workspace_kernel")
+            wk = self._workspace_decl
             hints = dict(nd=tb, tile_dim=t)   # per-device padded count
             ws += (workspace_bytes(wk, **hints) if wk is not None
                    else max_workspace_bytes(**hints))
@@ -1910,8 +1945,17 @@ class StreamingPlan:
 
     @property
     def compile_count(self) -> int:
-        return (self._mesh_step.traces if self._mesh_step is not None
-                else self._step.traces)
+        steps = ((self._mesh_step, self._mesh_step_pull)
+                 if self._mesh_step is not None
+                 else (self._step, self._step_pull))
+        return sum(s.traces for s in steps if s is not None)
+
+    def _active_steps(self):
+        """The (single-device, mesh) step pair for the direction the
+        controller picked for the current iteration."""
+        if self._direction_now == "pull":
+            return self._step_pull, self._mesh_step_pull
+        return self._step, self._mesh_step
 
     # -- arena recycling ------------------------------------------------
     # ``jax.device_put`` of a numpy array may alias the host memory
@@ -1989,20 +2033,21 @@ class StreamingPlan:
     def _step_wave(self, w: int, bufs, state0, acc, iarr):
         """Stage 3: dispatch one staged wave into the right jitted step."""
         run_dense = self._slabs[w].run_dense
+        step, mesh_step = self._active_steps()
         if self.mesh is None:
             with obs.span("compute", lane="device", wave=w,
                           devices=self._mesh_devices):
-                return self._step(self._wave_context(bufs), state0, acc,
-                                  iarr, run_dense)
+                return step(self._wave_context(bufs), state0, acc,
+                            iarr, run_dense)
         with obs.span("compute", lane="device", wave=w,
                       devices=self._mesh_devices):
             slab_bufs, ex_leaves, ex_aux = bufs
-            out = self._mesh_step(self._resident, slab_bufs, ex_leaves,
-                                  state0, acc, iarr, run_dense, ex_aux)
+            out = mesh_step(self._resident, slab_bufs, ex_leaves,
+                            state0, acc, iarr, run_dense, ex_aux)
         # per-device collective payload: each combined leaf crosses one
         # all-reduce per wave step (trace-time combined_keys is exact)
         cbytes = sum(
-            int(state0[k].nbytes) for k in self._mesh_step.combined_keys
+            int(state0[k].nbytes) for k in mesh_step.combined_keys
             if hasattr(state0[k], "nbytes")
         )
         self._collective_bytes += cbytes
@@ -2143,7 +2188,7 @@ class StreamingPlan:
                 ctx = self._resident
                 if self._prefix_dev is not None:
                     ctx = with_arrays(ctx, **self._prefix_dev)
-                acc = self._step(ctx, state0, acc, iarr, False)
+                acc = self._active_steps()[0](ctx, state0, acc, iarr, False)
                 return acc, 0.0
             if self._edge_free_bufs is None:
                 slab = self._assemble_runtime(self._slabs[0], wave=0)
@@ -2156,8 +2201,8 @@ class StreamingPlan:
                 # adjacency sampling reads the first-k-neighbors CSR,
                 # not the (unbounded) global one
                 ctx = with_arrays(ctx, **self._prefix_dev)
-            acc = self._step(ctx, state0, acc, iarr,
-                             self._slabs[0].run_dense)
+            acc = self._active_steps()[0](ctx, state0, acc, iarr,
+                                          self._slabs[0].run_dense)
             return acc, 0.0
         self._edge_free_bufs = None     # release once edge work begins
         self._prefix_dev = None
@@ -2166,7 +2211,8 @@ class StreamingPlan:
         # work hides behind device compute (both partitions judge the
         # same iteration-start state; per-wave folding is partition-
         # invariant, so the merge order cannot change results)
-        host_futs = lane.submit(state0, it) if lane is not None else None
+        host_futs = (lane.submit(state0, it, self._direction_now)
+                     if lane is not None else None)
         if nw == 0:
             # fully host-peeled: the host lane IS the iteration
             acc = self._gather_host(host_futs, acc)
@@ -2378,6 +2424,9 @@ class StreamingPlan:
         if state is None:
             assert alg.init_state is not None, f"{alg.name}: init_state required"
             state = alg.init_state(self.store)
+        ctrl = (DirectionController(alg, self.direction, self.store.n)
+                if self._direction_requested else None)
+        self._direction_now = "push"
         t0 = time.perf_counter()
         it = 0
         cont = True
@@ -2392,6 +2441,12 @@ class StreamingPlan:
                 with obs.span("iteration", lane="main", it=it, alg=alg.name):
                     if alg.before is not None:
                         state = alg.before(self.host, state, it)
+                    if ctrl is not None:
+                        # one direction per iteration, across device
+                        # waves, mesh shards, AND the host lane — the
+                        # bit-identity contract holds per direction,
+                        # never across a mix
+                        self._direction_now = ctrl.decide(state, it)
                     if self.mesh is not None:
                         # the state is replicated on every mesh device
                         # (writes are reduced by the step's collectives;
@@ -2425,22 +2480,25 @@ class StreamingPlan:
             staged_delta=self._bytes_staged - staged_before,
             phase_delta=phase_delta,
         )
+        stats = dict(
+            self.schedule.stats,
+            streaming=self._streaming_stats(
+                state, overlapped_wall, overlapped_iters,
+                staged_delta=self._bytes_staged - staged_before,
+                phase_delta=phase_delta,
+                asm_delta=self._assemble_overlapped_s - asm_before,
+                stall_delta=self._stall_s - stall_before,
+            ),
+            hetero=self._hetero_stats(phase_delta),
+        )
+        if ctrl is not None:
+            stats["direction"] = ctrl.stats()
         return RunResult(
             result=result,
             state=state,
             iterations=it,
             seconds=dt,
-            schedule_stats=dict(
-                self.schedule.stats,
-                streaming=self._streaming_stats(
-                    state, overlapped_wall, overlapped_iters,
-                    staged_delta=self._bytes_staged - staged_before,
-                    phase_delta=phase_delta,
-                    asm_delta=self._assemble_overlapped_s - asm_before,
-                    stall_delta=self._stall_s - stall_before,
-                ),
-                hetero=self._hetero_stats(phase_delta),
-            ),
+            schedule_stats=stats,
         )
 
     def _publish_metrics(self, *, iterations: int, seconds: float,

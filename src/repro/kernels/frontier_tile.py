@@ -36,8 +36,15 @@ def _kernel(a_ref, f_ref, out_ref):
 def frontier_tiles(tiles, fcols, *, block_t: int = 128, interpret: bool = True):
     """(nd,T,T) tiles × (nd,T) frontier → (nd,T) i32 min frontier column."""
     nb, t, _ = tiles.shape
-    bt = min(block_t, t)
-    assert t % bt == 0
+    if block_t <= 0:
+        raise ValueError(f"block_t must be a positive int; got {block_t!r}")
+    # the row-panel height must divide T exactly or the BlockSpec grid
+    # misses rows; shrink to the largest divisor of T ≤ block_t so
+    # non-power-of-two tile dims (192, 96, ...) run correctly instead
+    # of tripping a bare assert (which vanishes under ``python -O``)
+    bt = max(min(block_t, t), 1)
+    while t % bt:
+        bt -= 1
     return pl.pallas_call(
         _kernel,
         grid=(nb, t // bt),

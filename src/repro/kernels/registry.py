@@ -165,8 +165,16 @@ def registered_workspaces() -> tuple[str, ...]:
     return tuple(_WORKSPACE)
 
 
-def workspace_bytes(name: str, **shape_hints) -> int:
-    """Estimated scratch bytes for ``name`` given shape hints (0 if none)."""
+def workspace_bytes(name, **shape_hints) -> int:
+    """Estimated scratch bytes for ``name`` given shape hints (0 if none).
+
+    ``name`` may be a sequence of kernel names, priced as the *maximum*
+    over them — how a direction-optimizing plan charges for whichever
+    of its push/pull dense variants is costlier, so a mid-stream switch
+    never exceeds a budget the planner verified."""
+    if not isinstance(name, str):
+        return max((workspace_bytes(nm, **shape_hints) for nm in name),
+                   default=0)
     fn = _WORKSPACE.get(name)
     return int(fn(**shape_hints)) if fn is not None else 0
 

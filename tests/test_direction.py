@@ -1,0 +1,359 @@
+"""Per-iteration direction optimization (push/pull/auto).
+
+Three layers of coverage:
+
+* unit tests for the density controller — Beamer threshold, hysteresis
+  band (both edges and the hold inside it), env-knob overrides, fixed
+  modes, and capability/declaration validation;
+* a differential harness: every direction-capable algorithm ×
+  {push, pull, auto} × {in-core, streamed (≥ 4 waves), host lane} must
+  land integer-checksum-exact on the fixed-push in-core baseline, on
+  two R-MAT seeds;
+* an 8-device host-platform mesh subprocess (slow lane) running the
+  same differential through ``shard_map``.
+"""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import build_block_store, compile_plan, rmat
+from repro.core.direction import (
+    DirectionController, direction_spec, frontier_count, resolve_direction,
+    workspace_kernels,
+)
+from repro.core.functors import BlockAlgorithm, Mode
+from repro.core.stream import compile_streaming_plan
+from repro.algorithms import (
+    afforest_algorithm, bfs_algorithm, kcore_algorithm, pagerank_algorithm,
+    sv_algorithm,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+SEEDS = (3, 11)
+
+# (name, factory, plan kwargs, streaming budget tuned to ≥4 waves)
+ALGS = [
+    ("bfs", lambda: bfs_algorithm(0), {}, "256KB"),
+    ("kcore3", lambda: kcore_algorithm(3), dict(mode="sparse_only"), "24KB"),
+    ("sv", sv_algorithm, {}, "24KB"),
+    ("afforest", afforest_algorithm, {}, "24KB"),
+]
+
+
+def _flat(res):
+    if isinstance(res, dict):
+        return {k: np.asarray(v) for k, v in res.items()}
+    return {"result": np.asarray(res)}
+
+
+def _assert_exact(name, base, got):
+    assert base.keys() == got.keys(), name
+    for k in base:
+        a, b = base[k], got[k]
+        assert a.dtype.kind not in "fc", (name, k)  # int/bool contract
+        np.testing.assert_array_equal(a, b, err_msg=f"{name}.{k}")
+        assert int(a.astype(np.int64).sum()) == int(b.astype(np.int64).sum())
+
+
+@pytest.fixture(scope="module", params=SEEDS, ids=lambda s: f"seed{s}")
+def graph(request):
+    return rmat(8, 8, seed=request.param)
+
+
+@pytest.fixture(scope="module")
+def store(graph):
+    return build_block_store(graph, 4)
+
+
+@pytest.fixture(scope="module")
+def push_baselines(store):
+    """Fixed-push in-core results, computed once per seed."""
+    out = {}
+    for name, alg_f, kw, _ in ALGS:
+        out[name] = _flat(
+            compile_plan(alg_f(), store, direction="push", **kw).run().result)
+    return out
+
+
+# ------------------------------------------------------------ controller
+def test_decide_density_threshold():
+    alg = bfs_algorithm(0)
+    c = DirectionController(alg, "auto", n=1000)  # beta=24
+    # push → pull exactly when count*beta > population (rule is pure —
+    # it never mutates c.current, so one controller probes both sides)
+    assert c.decide_density(42, 1000) == "pull"      # 42*24 = 1008 > 1000
+    assert c.decide_density(41, 1000) == "push"      # 41*24 = 984 ≤ 1000
+
+
+def test_hysteresis_band_holds_current_direction():
+    alg = bfs_algorithm(0)
+    c = DirectionController(alg, "auto", n=1000)  # hysteresis=0.75
+    assert c.decide_density(50, 1000) == "pull"      # 1200 > 1000
+    c.current = "pull"
+    # inside the band [750, 1000]: hold pull
+    assert c.decide_density(35, 1000) == "pull"      # 840 ∈ band
+    # below population*hysteresis: release back to push
+    assert c.decide_density(31, 1000) == "push"      # 744 < 750
+    # a controller still in push with the same in-band density stays push
+    c2 = DirectionController(alg, "auto", n=1000)
+    assert c2.decide_density(35, 1000) == "push"
+
+
+def test_fixed_modes_never_switch():
+    alg = bfs_algorithm(0)
+    for mode in ("push", "pull"):
+        c = DirectionController(alg, mode, n=100)
+        for count in (0, 10, 100):
+            assert c.decide_density(count, 100) == mode
+        state = dict(nf=np.asarray(100, np.int32))
+        for it in range(3):
+            assert c.decide(state, it) == mode
+        assert c.switches == 0
+        assert c.stats()["switches"] == 0
+
+
+def test_env_knobs_override_beta_and_hysteresis(monkeypatch):
+    alg = bfs_algorithm(0)
+    monkeypatch.setenv("REPRO_DIRECTION_BETA", "2.0")
+    monkeypatch.setenv("REPRO_DIRECTION_HYSTERESIS", "0.5")
+    c = DirectionController(alg, "auto", n=1000)
+    assert c.beta == 2.0 and c.hysteresis == 0.5
+    assert c.decide_density(501, 1000) == "pull"     # 1002 > 1000
+    c.current = "pull"
+    assert c.decide_density(300, 1000) == "pull"     # 600 ∈ [500, 1000]
+    assert c.decide_density(249, 1000) == "push"     # 498 < 500
+    monkeypatch.setenv("REPRO_DIRECTION_BETA", "-1")
+    with pytest.raises(ValueError, match="beta must be > 0"):
+        DirectionController(alg, "auto", n=10)
+
+
+def test_frontier_count_bool_and_numeric_leaves():
+    n = 100
+    cnt, pop = frontier_count(dict(f=np.zeros(n, bool)), "f", n)
+    assert (cnt, pop) == (0, n)
+    cnt, pop = frontier_count(dict(H=np.asarray(7, np.int32)), "H", n)
+    assert (cnt, pop) == (7, n)
+    cnt, pop = frontier_count(dict(nf=np.asarray([3, 4], np.int32)), "nf", n)
+    assert (cnt, pop) == (7, 2 * n)
+    with pytest.raises(KeyError):
+        frontier_count(dict(), "missing", n)
+
+
+def test_direction_capability_validation():
+    # pull/auto on an algorithm without the declaration is an error
+    pr = pagerank_algorithm()
+    assert direction_spec(pr) is None
+    assert resolve_direction(pr, None) == "push"
+    assert resolve_direction(pr, "push") == "push"
+    with pytest.raises(ValueError, match="direction"):
+        resolve_direction(pr, "pull")
+    with pytest.raises(ValueError, match="direction"):
+        resolve_direction(pr, "auto")
+    with pytest.raises(ValueError, match="'push', 'pull', 'auto'"):
+        resolve_direction(pr, "sideways")
+
+    # a dense push kernel without its pull twin cannot honor a pull
+    # iteration — declaring the capability anyway must be rejected
+    lopsided = BlockAlgorithm(
+        name="lopsided", mode=Mode.BULK,
+        kernel_sparse=lambda ctx, s, it: s,
+        kernel_sparse_pull=lambda ctx, s, it: s,
+        kernel_dense=lambda ctx, s, it: s,
+        init_state=lambda store: dict(x=np.zeros(1)),
+        metadata=dict(direction=dict(frontier="x")),
+    )
+    with pytest.raises(ValueError, match="kernel_dense_pull"):
+        direction_spec(lopsided)
+
+
+def test_workspace_kernels_prices_both_variants():
+    alg = bfs_algorithm(0)
+    assert workspace_kernels(alg, None) == "frontier_tiles"
+    assert workspace_kernels(alg, "push") == "frontier_tiles"
+    assert workspace_kernels(alg, "pull") == "frontier_tiles"
+    # auto dedupes identical names back to a single str
+    assert workspace_kernels(alg, "auto") == "frontier_tiles"
+    two = BlockAlgorithm(
+        name="two", mode=Mode.BULK,
+        kernel_sparse=lambda ctx, s, it: s,
+        kernel_sparse_pull=lambda ctx, s, it: s,
+        init_state=lambda store: dict(x=np.zeros(1)),
+        metadata=dict(direction=dict(frontier="x"),
+                      workspace_kernel="spmv_tiles",
+                      workspace_kernel_pull="frontier_tiles"),
+    )
+    assert set(workspace_kernels(two, "auto")) == {
+        "spmv_tiles", "frontier_tiles"}
+
+
+# ---------------------------------------------------------- differential
+@pytest.mark.parametrize("name,alg_f,kw,budget", ALGS,
+                         ids=[a[0] for a in ALGS])
+@pytest.mark.parametrize("direction", ["push", "pull", "auto"])
+def test_incore_matches_fixed_push(name, alg_f, kw, budget, direction,
+                                   store, push_baselines):
+    rr = compile_plan(alg_f(), store, direction=direction, **kw).run()
+    _assert_exact(name, push_baselines[name], _flat(rr.result))
+    stats = rr.schedule_stats["direction"]
+    assert stats["mode"] == direction
+    assert len(stats["decisions"]) == rr.iterations
+    if direction == "pull":
+        assert stats["pull_iterations"] == rr.iterations
+    if direction in ("push", "pull"):
+        assert stats["switches"] == 0
+        assert all(d == direction for d in stats["decisions"])
+
+
+@pytest.mark.parametrize("name,alg_f,kw,budget", ALGS,
+                         ids=[a[0] for a in ALGS])
+@pytest.mark.parametrize("direction", ["pull", "auto"])
+def test_streamed_matches_fixed_push(name, alg_f, kw, budget, direction,
+                                     store, push_baselines):
+    sp = compile_streaming_plan(alg_f(), store, memory_budget=budget,
+                                direction=direction, **kw)
+    rr = sp.run()
+    assert rr.schedule_stats["streaming"]["num_waves"] >= 4, name
+    _assert_exact(name, push_baselines[name], _flat(rr.result))
+    stats = rr.schedule_stats["direction"]
+    assert len(stats["decisions"]) == rr.iterations
+
+
+@pytest.mark.parametrize("name,alg_f,kw,budget", ALGS,
+                         ids=[a[0] for a in ALGS])
+def test_host_lane_matches_fixed_push(name, alg_f, kw, budget,
+                                      store, push_baselines):
+    sp = compile_streaming_plan(alg_f(), store, memory_budget=budget,
+                                host_fraction=0.3, direction="auto", **kw)
+    rr = sp.run()
+    _assert_exact(name, push_baselines[name], _flat(rr.result))
+
+
+def test_auto_takes_pull_iterations_on_skewed_rmat(store):
+    """Acceptance: BFS, k-core, and CC under direction="auto" run ≥ 1
+    bottom-up (pull) iteration on a skewed R-MAT, visibly in
+    ``schedule_stats["direction"]``."""
+    for name, alg_f, kw, _ in ALGS:
+        if name == "sv":
+            continue  # SV's hook counter resets before each decision
+        rr = compile_plan(alg_f(), store, direction="auto", **kw).run()
+        stats = rr.schedule_stats["direction"]
+        assert stats["pull_iterations"] >= 1, (name, stats)
+        assert stats["pull_iterations"] == sum(
+            1 for d in stats["decisions"] if d == "pull")
+        assert len(stats["densities"]) == len(stats["decisions"])
+
+
+def test_default_direction_keeps_legacy_contract(store):
+    """No ``direction=`` → plain push: no controller, no stats block."""
+    rr = compile_plan(bfs_algorithm(0), store).run()
+    assert "direction" not in rr.schedule_stats
+    srr = compile_streaming_plan(bfs_algorithm(0), store,
+                                 memory_budget="256KB").run()
+    assert "direction" not in srr.schedule_stats
+
+
+def test_direction_switch_metric_increments(store):
+    from repro import obs
+
+    obs.REGISTRY.reset()
+    try:
+        rr = compile_plan(bfs_algorithm(0), store, direction="auto").run()
+        stats = rr.schedule_stats["direction"]
+        assert obs.metrics.counter(
+            "stream.direction_switches").value == stats["switches"]
+        assert stats["switches"] >= 1  # skewed R-MAT crosses the band
+    finally:
+        obs.REGISTRY.reset()
+
+
+def test_compiled_step_cache_keyed_by_direction(store):
+    """push and pull variants of one algorithm must not collide in the
+    shared compiled-step cache; two same-direction plans must share."""
+    a = compile_plan(bfs_algorithm(0), store, direction="push")
+    b = compile_plan(bfs_algorithm(0), store, direction="pull")
+    c = compile_plan(bfs_algorithm(0), store, direction="push")
+    ra, rb, rc = a.run(), b.run(), c.run()
+    _assert_exact("bfs", _flat(ra.result), _flat(rb.result))
+    _assert_exact("bfs", _flat(ra.result), _flat(rc.result))
+
+
+# ------------------------------------------------- 8-device mesh (slow)
+def _run_py(code: str, devices: int = 8, timeout: int = 500):
+    env = dict(
+        os.environ,
+        XLA_FLAGS=f"--xla_force_host_platform_device_count={devices}",
+        PYTHONPATH=os.path.join(REPO, "src"),
+        JAX_PLATFORMS="cpu",
+    )
+    return subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+
+
+@pytest.mark.slow
+@pytest.mark.subprocess
+def test_mesh_streamed_direction_differential():
+    """All direction-capable algorithms × {pull, auto} through an
+    8-device host-platform mesh land checksum-exact on the in-core
+    fixed-push baseline (XLA locks the device count at first init,
+    hence the subprocess)."""
+    r = _run_py("""
+        import json
+        import numpy as np, jax
+        from jax.sharding import Mesh
+        from repro.core import build_block_store, compile_plan, rmat
+        from repro.algorithms import (
+            afforest_algorithm, bfs_algorithm, kcore_algorithm, sv_algorithm,
+        )
+
+        assert len(jax.devices()) == 8, jax.devices()
+        mesh = Mesh(np.array(jax.devices()), ("blocks",))
+        store = build_block_store(rmat(8, 8, seed=3), 4)
+
+        ALGS = [
+            ("bfs", lambda: bfs_algorithm(0), {}, "256KB"),
+            ("kcore3", lambda: kcore_algorithm(3),
+             dict(mode="sparse_only"), "24KB"),
+            ("sv", sv_algorithm, {}, "24KB"),
+            ("afforest", afforest_algorithm, {}, "24KB"),
+        ]
+
+        def flat(res):
+            if isinstance(res, dict):
+                return {k: np.asarray(v) for k, v in res.items()}
+            return {"result": np.asarray(res)}
+
+        report = {}
+        for name, alg_f, kw, budget in ALGS:
+            base = flat(compile_plan(alg_f(), store, direction="push",
+                                     **kw).run().result)
+            for direction in ("pull", "auto"):
+                rr = compile_plan(alg_f(), store, memory_budget=budget,
+                                  mesh=mesh, direction=direction, **kw).run()
+                got = flat(rr.result)
+                assert base.keys() == got.keys(), name
+                for k in base:
+                    np.testing.assert_array_equal(base[k], got[k])
+                    assert (int(base[k].astype(np.int64).sum())
+                            == int(got[k].astype(np.int64).sum()))
+                st = rr.schedule_stats
+                assert st["streaming"]["mesh_devices"] == 8
+                report[f"{name}:{direction}"] = dict(
+                    waves=st["streaming"]["num_waves"],
+                    pull=st["direction"]["pull_iterations"],
+                )
+        print("DIR_MESH_OK", json.dumps(report))
+    """)
+    assert "DIR_MESH_OK" in r.stdout, r.stdout + r.stderr
+    report = json.loads(r.stdout.split("DIR_MESH_OK", 1)[1])
+    for key, row in report.items():
+        name, direction = key.split(":")
+        if direction == "pull":
+            assert row["pull"] >= 1, (key, row)

@@ -1,0 +1,118 @@
+"""Property-based tests (hypothesis) for direction optimization.
+
+Three invariants the differential harness cannot sweep by hand:
+
+* the controller is a pure function of its density trace — replaying a
+  trace replays the decisions (and the switch count) exactly;
+* an ``auto`` streamed run never stages a wave above its memory
+  budget, whatever the budget — the planner prices the max over both
+  variants' workspaces, so the mid-run switch cannot blow it;
+* pull lands bit-identical to push under randomized graphs *and*
+  randomized schedules (partition count, dense split, tile size).
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (pip install .[dev])"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import build_block_store, compile_plan, from_edges
+from repro.core.direction import DirectionController
+from repro.core.stream import compile_streaming_plan
+from repro.algorithms import bfs_algorithm, kcore_algorithm, sv_algorithm
+
+settings.register_profile("ci", deadline=None, max_examples=20)
+settings.load_profile("ci")
+
+
+@st.composite
+def random_graph(draw, max_n=64, max_m=160):
+    n = draw(st.integers(4, max_n))
+    m = draw(st.integers(1, max_m))
+    src = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+    dst = draw(st.lists(st.integers(0, n - 1), min_size=m, max_size=m))
+    # from_edges symmetrizes — the arc-multiset symmetry the pull
+    # contract rides on
+    return from_edges(np.array(src), np.array(dst), n=n)
+
+
+density_traces = st.lists(
+    st.tuples(st.integers(0, 10_000), st.integers(1, 10_000)),
+    min_size=1, max_size=50,
+)
+
+
+@given(density_traces, st.floats(1.0, 64.0), st.floats(0.1, 1.0))
+def test_auto_is_deterministic_given_density_trace(trace, beta, hysteresis):
+    """Same trace + same knobs ⇒ same decisions, densities, switches."""
+    alg = bfs_algorithm(0)
+
+    def replay():
+        c = DirectionController(alg, "auto", n=1)
+        c.beta, c.hysteresis = beta, hysteresis
+        out = []
+        for count, pop in trace:
+            d = c.decide_density(count, pop)
+            c.current = d
+            out.append(d)
+        return out, c.current
+
+    a = replay()
+    b = replay()
+    assert a == b
+
+
+@given(st.lists(st.integers(0, 2000), min_size=1, max_size=50))
+def test_switch_count_matches_decision_flips(counts):
+    """decide() over a real frontier leaf: switches ≡ adjacent decision
+    flips, pull_iterations ≡ pull decisions, one density per call."""
+    alg = bfs_algorithm(0)
+    c = DirectionController(alg, "auto", n=1000)
+    for it, count in enumerate(counts):
+        c.decide(dict(nf=np.asarray(count, np.int32)), it)
+    s = c.stats()
+    flips = sum(1 for a, b in zip(c.decisions, c.decisions[1:]) if a != b)
+    assert s["switches"] == flips
+    assert s["pull_iterations"] == sum(d == "pull" for d in c.decisions)
+    assert len(s["densities"]) == len(counts)
+
+
+@given(random_graph(), st.sampled_from(["6KB", "12KB", "32KB"]),
+       st.integers(1, 4))
+@settings(max_examples=10, deadline=None)
+def test_auto_never_exceeds_memory_budget(g, budget, p):
+    store = build_block_store(g, p)
+    sp = compile_streaming_plan(sv_algorithm(), store, memory_budget=budget,
+                                direction="auto")
+    rr = sp.run()
+    st_ = rr.schedule_stats["streaming"]
+    assert all(b <= st_["budget_bytes"] for b in st_["bytes_per_wave"]), st_
+    # and the decisions were actually made (one per iteration)
+    assert len(rr.schedule_stats["direction"]["decisions"]) == rr.iterations
+
+
+@given(random_graph(), st.integers(1, 4),
+       st.sampled_from([0.0, 0.5, 1.0]),
+       st.sampled_from([64, 128, 512]))
+@settings(max_examples=10, deadline=None)
+def test_pull_matches_push_under_randomized_schedules(g, p, dense_frac,
+                                                      tile_dim):
+    store = build_block_store(g, p)
+    kw = dict(dense_frac=dense_frac, tile_dim=tile_dim)
+    for alg_f, pkw in [(lambda: bfs_algorithm(0), {}),
+                       (lambda: kcore_algorithm(2),
+                        dict(mode="sparse_only")),
+                       (sv_algorithm, {})]:
+        push = compile_plan(alg_f(), store, direction="push",
+                            **kw, **pkw).run().result
+        pull = compile_plan(alg_f(), store, direction="pull",
+                            **kw, **pkw).run().result
+        if isinstance(push, dict):
+            for k in push:
+                np.testing.assert_array_equal(
+                    np.asarray(push[k]), np.asarray(pull[k]), err_msg=k)
+        else:
+            np.testing.assert_array_equal(np.asarray(push),
+                                          np.asarray(pull))

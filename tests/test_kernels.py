@@ -60,6 +60,27 @@ def test_frontier_tiles_empty_frontier():
     assert np.all(np.asarray(got) == 2**31 - 1)
 
 
+@pytest.mark.parametrize("nb,t,block_t", [(2, 192, 128), (1, 96, 64),
+                                          (2, 160, 128), (1, 48, 128)])
+def test_frontier_tiles_non_power_of_two_tile_dim(nb, t, block_t):
+    """Regression: a tile dim the requested row-panel height does not
+    divide used to trip a bare ``assert`` (gone under ``python -O``);
+    the kernel now shrinks the panel to the largest divisor and still
+    matches the oracle."""
+    tiles = _tiles(nb, t, 0.05, np.float32)
+    f = jnp.asarray((RNG.random((nb, t)) < 0.3).astype(np.float32))
+    got = frontier_tiles(tiles, f, block_t=block_t, interpret=True)
+    want = ref.frontier_tiles_ref(tiles, f)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_frontier_tiles_rejects_non_positive_block_t():
+    tiles = _tiles(1, 128, 0.05, np.float32)
+    f = jnp.zeros((1, 128), jnp.float32)
+    with pytest.raises(ValueError, match="block_t must be a positive int"):
+        frontier_tiles(tiles, f, block_t=0, interpret=True)
+
+
 @pytest.mark.parametrize(
     "b,h,sq,sk,d,causal",
     [

@@ -249,6 +249,8 @@ def _run_py(code: str, devices: int = 8, timeout: int = 500):
     )
 
 
+@pytest.mark.slow
+@pytest.mark.subprocess
 def test_streamed_vs_distributed_vs_incore_all_algorithms():
     """Acceptance: a skewed R-MAT whose staged working set exceeds one
     device's budget runs as ≥ 4 budgeted waves through an 8-device

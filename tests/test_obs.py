@@ -437,6 +437,8 @@ def _run_py(code: str, devices: int = 8, timeout: int = 500):
     )
 
 
+@pytest.mark.slow
+@pytest.mark.subprocess
 def test_mesh_streamed_trace_has_one_lane_per_device():
     """Acceptance: an 8-device mesh streamed run exports a valid trace
     with one lane per device plus the staging lane, carrying per-wave
