@@ -25,12 +25,13 @@ __all__ = ["time_median", "csv_row", "env_float", "best_of"]
 def env_float(name: str, default: float) -> float:
     """Float-valued tuning knob from the environment, with a default.
 
-    Empty/unset falls back to ``default``; a malformed value raises so a
-    typo in CI config fails loudly instead of silently re-gating."""
-    raw = os.environ.get(name)
-    if raw is None or raw.strip() == "":
-        return float(default)
-    return float(raw)
+    Delegates to the validated :mod:`repro.core.knobs` registry (lazily
+    — importing this module must not pull in jax before a benchmark's
+    ``__main__`` block has set ``XLA_FLAGS``): empty/unset falls back to
+    ``default``, a malformed or undeclared knob raises loudly."""
+    from repro.core.knobs import env_float as _knob_float
+
+    return _knob_float(name, default)
 
 
 def best_of(attempt, *, attempts: int = 3, score, good_enough=None):

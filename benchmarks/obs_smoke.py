@@ -11,7 +11,7 @@ streamed PageRank run:
   shows the three-stage pipeline.
 
 * **Tracing is (near-)free.**  Traced wall time must stay within
-  :data:`SMOKE_OVERHEAD_RATIO` of untraced on the same warm plan —
+  ``REPRO_SMOKE_OVERHEAD_RATIO`` of untraced on the same warm plan —
   ``repeats`` interleaved alternating-order pairs per attempt, ratio
   of means, best of up to three attempts (noise only ever inflates the
   ratio: the tracer adds work, it never removes any), compile and
@@ -33,8 +33,10 @@ from .common import best_of, env_float
 
 #: Traced wall time may be at most this multiple of untraced.
 #: Override with ``REPRO_SMOKE_OVERHEAD_RATIO`` (default 1.05) when a
-#: CI runner is noisy enough that the default gate flakes.
-SMOKE_OVERHEAD_RATIO = env_float("REPRO_SMOKE_OVERHEAD_RATIO", 1.05)
+#: CI runner is noisy enough that the default gate flakes.  Read inside
+#: run_smoke (env_float validates through repro.core.knobs → jax; the
+#: benchmark entrypoints must stay importable before XLA_FLAGS is set).
+SMOKE_OVERHEAD_RATIO_DEFAULT = 1.05
 
 REQUIRED_LANES = ("main", "staging", "device/0")
 REQUIRED_PHASES = ("assemble", "device_put", "compute", "iteration")
@@ -86,10 +88,12 @@ def run_smoke(out_path: str = "BENCH_obs.json", *,
                 _run_traced(traced)
         return sum(untraced) / len(untraced), sum(traced) / len(traced)
 
+    overhead_gate = env_float("REPRO_SMOKE_OVERHEAD_RATIO",
+                              SMOKE_OVERHEAD_RATIO_DEFAULT)
     (untraced_s, traced_s), scores = best_of(
         _attempt, attempts=3,
         score=lambda ut: -(ut[1] / ut[0]),
-        good_enough=lambda ut: ut[1] / ut[0] <= SMOKE_OVERHEAD_RATIO,
+        good_enough=lambda ut: ut[1] / ut[0] <= overhead_gate,
     )
     attempts = [round(-s, 4) for s in scores]
     trace = obs.export.write_chrome_trace(trace_path, events)
@@ -107,11 +111,11 @@ def run_smoke(out_path: str = "BENCH_obs.json", *,
         multi_wave=waves >= 4,
         trace_valid=trace_error is None,
         nothing_dropped=dropped == 0,
-        overhead=overhead <= SMOKE_OVERHEAD_RATIO,
+        overhead=overhead <= overhead_gate,
     )
     payload = obs.export.run_report("obs_smoke", dict(
         graph="rmat(12, 16, seed=5)", budget="256KB", waves=waves,
-        floors=dict(overhead_ratio=SMOKE_OVERHEAD_RATIO),
+        floors=dict(overhead_ratio=overhead_gate),
         untraced_s=round(untraced_s, 5), traced_s=round(traced_s, 5),
         overhead_ratio=round(overhead, 4), overhead_attempts=attempts,
         trace=dict(path=trace_path, lanes=summary["lanes"],

@@ -25,7 +25,7 @@ Three measurements on this container:
   run with a per-phase wall-clock breakdown (assemble / prepare /
   device_put / compute / collective), checks TC's ``trace_count`` does
   NOT grow with the wave count, gates ``overlap_efficiency`` against
-  :data:`SMOKE_OVERLAP_FLOOR`, and writes everything to
+  ``REPRO_SMOKE_OVERLAP_FLOOR``, and writes everything to
   ``BENCH_stream.json`` (the build artifact).
 
 CLI: ``python -m benchmarks.oversub [--memory-budget 256KB]
@@ -49,20 +49,31 @@ from .common import best_of, csv_row, env_float, time_median
 # gate (overlap_efficiency is clamped to [0, 1], so a 0.0 floor could
 # never fail).  Override with ``REPRO_SMOKE_OVERLAP_FLOOR`` (default
 # 0.10); raise it when benchmarking hardware with cores to spare.
-SMOKE_OVERLAP_FLOOR = env_float("REPRO_SMOKE_OVERLAP_FLOOR", 0.10)
+#
+# The gate knobs (this and the wall-ratio gates below) are read inside
+# the smoke functions, not at import — env_float validates through
+# repro.core.knobs, which pulls in jax, and the ``--mesh-devices``
+# entrypoint must set XLA_FLAGS first.
+SMOKE_OVERLAP_FLOOR_DEFAULT = 0.10
 
 # CI hetero-smoke gate: the heterogeneous (host co-scheduled) run's
 # best-of-repeats wall clock may be at most this multiple of the
 # device-only baseline on the same warm plan shape.  Override with
 # ``REPRO_HETERO_WALL_RATIO`` (default 1.05).
-HETERO_WALL_RATIO = env_float("REPRO_HETERO_WALL_RATIO", 1.05)
+HETERO_WALL_RATIO_DEFAULT = 1.05
 
 # CI direction-smoke gate: the direction-optimizing (auto) run's
 # best-of-repeats wall clock may be at most this multiple of the
 # fixed-push baseline on the same warm plan shape (both variants are
 # compiled up front, so auto only pays the per-iteration host decision).
 # Override with ``REPRO_DIRECTION_WALL_RATIO`` (default 1.05).
-DIRECTION_WALL_RATIO = env_float("REPRO_DIRECTION_WALL_RATIO", 1.05)
+DIRECTION_WALL_RATIO_DEFAULT = 1.05
+
+# CI chaos-smoke gate: the faulted (recovering) streamed run's
+# best-of-repeats wall clock may be at most this multiple of the
+# fault-free baseline on the same warm plan shape.  Override with
+# ``REPRO_CHAOS_WALL_RATIO`` (default 1.10).
+CHAOS_WALL_RATIO_DEFAULT = 1.10
 
 
 def run(scale: str = "small", repeats: int = 3, backend: str = "xla",
@@ -190,7 +201,7 @@ def run_smoke(out_path: str = "BENCH_stream.json", *, repeats: int = 3,
       once per wave).
     * **Overlap floor**: the pipelined executor's best-of-``repeats``
       ``overlap_efficiency`` on a ≥4-wave PageRank run must not regress
-      below :data:`SMOKE_OVERLAP_FLOOR` (measured against the
+      below ``REPRO_SMOKE_OVERLAP_FLOOR`` (measured against the
       synchronous per-wave calibration baseline).
 
     The artifact records both executors' per-phase wall-clock breakdown
@@ -202,6 +213,8 @@ def run_smoke(out_path: str = "BENCH_stream.json", *, repeats: int = 3,
     from repro.algorithms import pagerank_algorithm, tc_algorithm
     from repro.algorithms.tc import orient_dag
 
+    overlap_floor = env_float("REPRO_SMOKE_OVERLAP_FLOOR",
+                              SMOKE_OVERLAP_FLOOR_DEFAULT)
     g = rmat(12, 16, seed=5)
     budget = "256KB"
     modes: dict = {}
@@ -245,14 +258,14 @@ def run_smoke(out_path: str = "BENCH_stream.json", *, repeats: int = 3,
             and tc["fine"]["trace_count"] < tc["fine"]["waves"]
         ),
         overlap_floor=(
-            modes["pipelined"]["overlap_efficiency"] >= SMOKE_OVERLAP_FLOOR
+            modes["pipelined"]["overlap_efficiency"] >= overlap_floor
         ),
     )
     from repro import obs
 
     payload = obs.export.run_report("stream_smoke", dict(
         graph="rmat(12, 16, seed=5)", budget=budget,
-        floors=dict(overlap_efficiency=SMOKE_OVERLAP_FLOOR),
+        floors=dict(overlap_efficiency=overlap_floor),
         **modes,
         tc_trace_stability=tc,
         checks=checks,
@@ -277,7 +290,7 @@ def run_hetero_smoke(out_path: str = "BENCH_hetero.json", *,
       so the probe fires on small CI waves — the plan must report
       ``host_tasks_executed > 0`` in ``schedule_stats["hetero"]``;
     * **no slowdown**: the heterogeneous best-of-``repeats`` wall must
-      stay within :data:`HETERO_WALL_RATIO` of the device-only baseline
+      stay within ``REPRO_HETERO_WALL_RATIO`` of the device-only baseline
       on the same warm plan (the auto split hides host work behind the
       device or stays at zero — either way the wall must not regress);
     * **checksum-exact**: the component-label checksum equals the
@@ -297,6 +310,8 @@ def run_hetero_smoke(out_path: str = "BENCH_hetero.json", *,
     from repro.core import build_block_store, compile_plan, rmat
     from repro.algorithms import sv_algorithm
 
+    wall_gate = env_float("REPRO_HETERO_WALL_RATIO",
+                          HETERO_WALL_RATIO_DEFAULT)
     g = rmat(12, 16, seed=5)
     budget = "256KB"
 
@@ -321,7 +336,7 @@ def run_hetero_smoke(out_path: str = "BENCH_hetero.json", *,
     (het_res, het_s), _ = best_of(
         lambda: timed_run(het_plan), attempts=repeats,
         score=lambda rs: -rs[1],
-        good_enough=lambda rs: rs[1] <= HETERO_WALL_RATIO * base_s)
+        good_enough=lambda rs: rs[1] <= wall_gate * base_s)
 
     het = het_res.schedule_stats["hetero"]
     waves = het_res.schedule_stats["streaming"]["num_waves"]
@@ -331,13 +346,13 @@ def run_hetero_smoke(out_path: str = "BENCH_hetero.json", *,
     checks = dict(
         multi_wave=waves >= 4,
         host_engaged=het["host_tasks_executed"] > 0,
-        wall=wall_ratio <= HETERO_WALL_RATIO,
+        wall=wall_ratio <= wall_gate,
         checksum_exact=checksum == base_checksum,
     )
     payload = obs.export.run_report("hetero_smoke", dict(
         graph="rmat(12, 16, seed=5)", budget=budget,
         host_fraction=str(host_fraction), waves=waves,
-        floors=dict(wall_ratio=HETERO_WALL_RATIO),
+        floors=dict(wall_ratio=wall_gate),
         noise_floor_s=env_float("REPRO_HETERO_NOISE_FLOOR_S", 0.01),
         device_only_s=round(base_s, 5), hetero_s=round(het_s, 5),
         wall_ratio=round(wall_ratio, 4),
@@ -366,7 +381,7 @@ def run_direction_smoke(out_path: str = "BENCH_direction.json", *,
     * **checksum-exact**: parent/dist checksums equal the fixed-push
       run's, bit-for-bit (the direction contract);
     * **no slowdown**: the auto best-of-``repeats`` wall must stay
-      within :data:`DIRECTION_WALL_RATIO` of the fixed-push baseline on
+      within ``REPRO_DIRECTION_WALL_RATIO`` of the fixed-push baseline on
       the same warm plan shape — both variants are pre-compiled, so
       flipping direction costs one host-side density read per
       iteration.
@@ -379,6 +394,8 @@ def run_direction_smoke(out_path: str = "BENCH_direction.json", *,
     from repro.core import build_block_store, compile_plan, rmat
     from repro.algorithms import bfs_algorithm
 
+    wall_gate = env_float("REPRO_DIRECTION_WALL_RATIO",
+                          DIRECTION_WALL_RATIO_DEFAULT)
     g = rmat(12, 16, seed=5)      # skewed: hub-heavy Kronecker
     store = build_block_store(g, 8)
 
@@ -401,7 +418,7 @@ def run_direction_smoke(out_path: str = "BENCH_direction.json", *,
     (auto_res, auto_s), _ = best_of(
         lambda: timed_run(auto_plan), attempts=repeats,
         score=lambda rs: -rs[1],
-        good_enough=lambda rs: rs[1] <= DIRECTION_WALL_RATIO * push_s)
+        good_enough=lambda rs: rs[1] <= wall_gate * push_s)
 
     def checksum(res):
         return {k: int(np.asarray(v, dtype=np.int64).sum())
@@ -413,11 +430,11 @@ def run_direction_smoke(out_path: str = "BENCH_direction.json", *,
     checks = dict(
         pull_engaged=dstats["pull_iterations"] >= 1,
         checksum_exact=cs == push_cs,
-        wall=wall_ratio <= DIRECTION_WALL_RATIO,
+        wall=wall_ratio <= wall_gate,
     )
     payload = obs.export.run_report("direction_smoke", dict(
         graph="rmat(12, 16, seed=5)", direction=direction,
-        floors=dict(wall_ratio=DIRECTION_WALL_RATIO),
+        floors=dict(wall_ratio=wall_gate),
         push_s=round(push_s, 5), auto_s=round(auto_s, 5),
         wall_ratio=round(wall_ratio, 4),
         iterations=auto_res.iterations,
@@ -427,6 +444,133 @@ def run_direction_smoke(out_path: str = "BENCH_direction.json", *,
         pull_iterations=dstats["pull_iterations"],
         beta=dstats["beta"], hysteresis=dstats["hysteresis"],
         checksum=cs, push_checksum=push_cs,
+        checks=checks,
+        passed=all(checks.values()),
+    ))
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(json.dumps(payload, indent=2))
+    return payload["passed"]
+
+
+def run_chaos_smoke(out_path: str = "BENCH_resilience.json", *,
+                    repeats: int = 3, backend: str = "xla") -> bool:
+    """The CI chaos-smoke gate (and its ``BENCH_resilience.json``
+    artifact).
+
+    Seeded fault injection on a ≥4-wave streamed run, one leg per
+    executor seam (``repro.core.faults``):
+
+    * **checksum-exact recovery**: every raise-type leg (assemble,
+      device_put, compute, plus a delay stall) must finish bit-identical
+      to the fault-free PageRank run — retries replay from
+      iteration-start state over the SAME wave partition, so even float
+      attributes match exactly;
+    * **OOM degradation**: an injected device OOM on integer-label
+      Shiloach–Vishkin must shrink-repack (``oom_repacks >= 1``) and
+      still land the exact label checksum;
+    * **bounded overhead**: each recovered leg's best-of-``repeats``
+      wall must stay within ``REPRO_CHAOS_WALL_RATIO`` of the fault-free
+      baseline's MEDIAN wall on the same warm plan (one replayed
+      iteration out of the whole run; the median denominator keeps the
+      gate about recovery cost, not the CI container's run-to-run wall
+      noise).
+
+    All legs run synchronously (``pipeline_depth=0``) so a seeded
+    assembly fault exercises the retry ladder, not the worker-death
+    failover — that path is covered deterministically in the test
+    suite.  Returns True when every check passed.
+    """
+    import time
+
+    import numpy as np
+
+    from repro import obs
+    from repro.core import build_block_store, compile_plan, rmat
+    from repro.algorithms import pagerank_algorithm, sv_algorithm
+
+    wall_gate = env_float("REPRO_CHAOS_WALL_RATIO", CHAOS_WALL_RATIO_DEFAULT)
+    g = rmat(12, 16, seed=5)
+    store = build_block_store(g, 8)
+    budget = "256KB"
+
+    def plan(factory, **kw):
+        return compile_plan(factory(), store, mode="sparse_only",
+                            backend=backend, share=False,
+                            memory_budget=budget, pipeline_depth=0,
+                            rebalance_threshold=None, **kw)
+
+    def timed(p):
+        t0 = time.perf_counter()
+        res = p.run()
+        return res, time.perf_counter() - t0
+
+    base_plan = plan(pagerank_algorithm)
+    base_plan.run()                     # warm: compile + calibration
+    base_runs = [timed(base_plan) for _ in range(max(repeats, 3))]
+    base_res = base_runs[0][0]
+    base_s = float(np.median([s for _, s in base_runs]))
+    base_arr = np.asarray(base_res.result)
+    waves = base_res.schedule_stats["streaming"]["num_waves"]
+
+    SPECS = dict(
+        assemble="stage.assemble:raise:at(1)",
+        device_put="stage.device_put:raise:at(1)",
+        compute="wave.compute:raise:at(1)",
+        stall="stage.device_put:delay(0.005):once",
+    )
+    legs: dict = {}
+    for name, spec in SPECS.items():
+        p = plan(pagerank_algorithm, faults=spec)
+        p.run()                         # warm (injects + recovers once)
+
+        def _attempt(p=p):
+            # single-shot rules re-arm so EVERY timed attempt pays one
+            # full recovery, not just the first
+            p._faults.reset()
+            return timed(p)
+
+        (res, wall), _ = best_of(
+            _attempt, attempts=repeats, score=lambda rs: -rs[1],
+            good_enough=lambda rs: rs[1] <= wall_gate * base_s)
+        r = res.schedule_stats["resilience"]
+        legs[name] = dict(
+            spec=spec,
+            injected=r["injected"], retries=r["retries"],
+            seconds=round(wall, 4),
+            wall_ratio=round(wall / base_s, 4) if base_s > 0 else None,
+            exact=bool(np.array_equal(np.asarray(res.result), base_arr)),
+        )
+
+    sv_base = np.asarray(plan(sv_algorithm).run().result)
+    oom_res = plan(sv_algorithm, faults="wave.compute:oom:at(1)").run()
+    oom_r = oom_res.schedule_stats["resilience"]
+    oom_labels = np.asarray(oom_res.result)
+    oom = dict(
+        spec="wave.compute:oom:at(1)",
+        injected=oom_r["injected"], oom_repacks=oom_r["oom_repacks"],
+        demotions=oom_r["demotions"],
+        # labels compare elementwise — the checksum alone is degenerate
+        # on a connected graph (every label collapses to vertex 0)
+        exact=bool(np.array_equal(oom_labels, sv_base)),
+        checksum=int(oom_labels.astype(np.int64).sum()),
+        components=int(np.unique(oom_labels).size),
+    )
+
+    checks = dict(
+        multi_wave=waves >= 4,
+        all_sites_injected=all(c["injected"] >= 1 for c in legs.values()),
+        recovered_exact=all(c["exact"] for c in legs.values()),
+        wall=all(c["wall_ratio"] is not None and c["wall_ratio"] <= wall_gate
+                 for c in legs.values()),
+        oom_repacked=oom["oom_repacks"] >= 1,
+        oom_exact=oom["exact"],
+    )
+    payload = obs.export.run_report("chaos_smoke", dict(
+        graph="rmat(12, 16, seed=5)", budget=budget, waves=waves,
+        floors=dict(wall_ratio=wall_gate),
+        baseline_s=round(base_s, 4),
+        legs=legs, oom=oom,
         checks=checks,
         passed=all(checks.values()),
     ))
@@ -558,7 +702,19 @@ if __name__ == "__main__":
              "writes BENCH_direction.json",
     )
     ap.add_argument("--direction-out", default="BENCH_direction.json")
+    ap.add_argument(
+        "--chaos", action="store_true",
+        help="with --smoke: run the chaos-smoke gate instead — seeded "
+             "fault injection per executor seam must recover "
+             "checksum-exact within REPRO_CHAOS_WALL_RATIO of the "
+             "fault-free wall, and an injected OOM must shrink-repack — "
+             "writes BENCH_resilience.json",
+    )
+    ap.add_argument("--chaos-out", default="BENCH_resilience.json")
     a = ap.parse_args()
+    if a.chaos and a.smoke:
+        sys.exit(0 if run_chaos_smoke(a.chaos_out, repeats=a.repeats,
+                                      backend=a.backend) else 1)
     if a.direction is not None and a.smoke:
         sys.exit(0 if run_direction_smoke(a.direction_out,
                                           repeats=a.repeats,

@@ -1,6 +1,12 @@
 """Fault-tolerant checkpointing: atomic writes, integrity-checked latest
-pointer, auto-resume, elastic re-sharding."""
+pointer, auto-resume, elastic re-sharding, and run-level snapshots
+(:mod:`repro.checkpoint.runstate`) that make ``Plan.resume`` /
+``StreamingPlan.resume`` bit-identical for integer/bool attributes."""
 from .ckpt import save_checkpoint, restore_checkpoint, latest_step, CheckpointManager
+from .runstate import (
+    RunSnapshot, save_runstate, load_runstate, latest_runstate_step,
+)
 
 __all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "CheckpointManager"]
+           "CheckpointManager", "RunSnapshot", "save_runstate",
+           "load_runstate", "latest_runstate_step"]

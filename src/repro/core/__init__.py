@@ -62,6 +62,11 @@ from .stream import StreamingPlan, compile_streaming_plan
 from .distributed import (
     DistributedEngine, combine_fn, make_device_edge_partition,
 )
+from .faults import FaultPlan, InjectedFault, InjectedOOM
+from .resilience import (
+    HostTaskError, ResilienceStats, RetryPolicy, WorkerDeath,
+)
+from .knobs import env_flag, env_float, env_int, env_str
 
 __all__ = [
     "Graph", "from_edges", "read_edge_list", "load_binary", "save_binary",
@@ -81,5 +86,8 @@ __all__ = [
     "build_waves", "repack_waves", "TenantLedger", "batch_state_bytes",
     "StreamingPlan", "compile_streaming_plan",
     "DistributedEngine", "combine_fn", "make_device_edge_partition",
+    "FaultPlan", "InjectedFault", "InjectedOOM",
+    "HostTaskError", "ResilienceStats", "RetryPolicy", "WorkerDeath",
+    "env_flag", "env_float", "env_int", "env_str",
     "Engine", "run",
 ]

@@ -13,6 +13,13 @@ This module is the single home of that keying/invalidation logic:
 share-gated lookup every cache flavour goes through.  Keeping them in
 one place means a change to the cache contract (new key component,
 eviction, ...) cannot silently diverge between the executors.
+
+Execution-time configuration — fault-injection plans, checkpoint
+settings, retry policies (:mod:`repro.core.faults`,
+:mod:`repro.core.resilience`) — must NEVER enter a cache key: it does
+not affect the traced computation, and keying on it would force
+needless retraces (and let a chaos run pollute the cache for the
+fault-free plans that share its steps).
 """
 from __future__ import annotations
 

@@ -48,13 +48,13 @@ instant on the ``direction`` tracer lane.  See
 """
 from __future__ import annotations
 
-import os
 from typing import TYPE_CHECKING
 
 import jax
 import numpy as np
 
 from .. import obs
+from .knobs import env_float as _env_float
 
 if TYPE_CHECKING:  # pragma: no cover — typing only, avoids an import cycle
     from .functors import BlockAlgorithm
@@ -81,11 +81,6 @@ BETA_DEFAULT = 24.0
 #: the threshold from flapping (and re-tracing nothing — both variants
 #: are compiled — but flip-flopping decision logs and caches).
 HYSTERESIS_DEFAULT = 0.75
-
-
-def _env_float(name: str, default: float) -> float:
-    raw = os.environ.get(name)
-    return default if raw is None else float(raw)
 
 
 def direction_spec(alg: "BlockAlgorithm") -> dict | None:

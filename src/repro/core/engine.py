@@ -48,7 +48,10 @@ from .blocks import BlockStore
 from .compilecache import alg_cache_key, shared_entry
 from .context import Context, HostCtx, build_context, build_host_ctx
 from .direction import DirectionController, kernels_for, resolve_direction
+from .faults import FaultPlan
 from .functors import BlockAlgorithm
+from .knobs import env_str as _knob_str
+from .resilience import ResilienceStats, RetryPolicy, classify
 from .scheduler import Schedule, build_schedule
 
 __all__ = ["Plan", "compile_plan", "RunResult", "Engine", "run",
@@ -168,9 +171,37 @@ class Plan:
                  schedule: Schedule | None, *, backend: str,
                  num_devices: int, mode: str, tile_dim: int,
                  dense_frac: float, dense_density: float,
-                 share: bool = True, direction: str | None = None) -> None:
+                 share: bool = True, direction: str | None = None,
+                 faults: "str | FaultPlan | None" = None,
+                 checkpoint_every: int | None = None,
+                 checkpoint_dir: str | None = None,
+                 retry_policy: RetryPolicy | None = None) -> None:
         from ..kernels.registry import resolve_backend
 
+        # same fault-tolerance contract as StreamingPlan: the in-core
+        # step is the "wave.compute" seam, iterations are idempotent
+        # (the step maps iteration-start state to the next state), and
+        # checkpoints land on iteration boundaries
+        self._faults = FaultPlan.parse(
+            faults if faults is not None else _knob_str("REPRO_FAULTS"))
+        if retry_policy is not None and not isinstance(retry_policy,
+                                                       RetryPolicy):
+            raise TypeError(
+                f"retry_policy must be a repro.core.resilience."
+                f"RetryPolicy; got {type(retry_policy).__name__}")
+        self._policy = retry_policy or RetryPolicy()
+        if checkpoint_every is not None and int(checkpoint_every) < 1:
+            raise ValueError(
+                f"checkpoint_every must be >= 1; got {checkpoint_every!r}")
+        if checkpoint_every is not None and checkpoint_dir is None:
+            raise ValueError(
+                "checkpoint_every requires checkpoint_dir (where the "
+                "per-iteration snapshots persist)")
+        self._ckpt_every = (int(checkpoint_every) if checkpoint_every
+                            else (1 if checkpoint_dir else 0))
+        self._ckpt_dir = checkpoint_dir
+        self._resil = ResilienceStats()
+        self._injected_pub = 0
         self.alg = alg
         self.backend = resolve_backend(backend)
         self.direction = resolve_direction(alg, direction)
@@ -274,12 +305,15 @@ class Plan:
 
     # -- execute side --------------------------------------------------
     def run(self, store: BlockStore | None = None,
-            state: Any | None = None) -> RunResult:
+            state: Any | None = None, *,
+            _start_it: int = 0, _start_cont: bool = True,
+            _ctrl_restore: dict | None = None) -> RunResult:
         """Execute the iteration loop; see module docstring for the contract.
 
         With ``alg.after`` present, iterate while it returns True (up to
         ``max_iterations``); without it, run exactly ``max_iterations``
-        steps.
+        steps.  The underscored keywords are :meth:`resume`'s
+        continuation protocol, not public surface.
         """
         alg = self.alg
         b = self._default if store is None else self.bind(store)
@@ -288,21 +322,27 @@ class Plan:
             state = alg.init_state(b.store)
         ctrl = (DirectionController(alg, self.direction, b.store.n)
                 if self._direction_requested else None)
+        if ctrl is not None and _ctrl_restore is not None:
+            ctrl.current = str(_ctrl_restore["current"])
+            ctrl.switches = int(_ctrl_restore["switches"])
+            ctrl.decisions = list(_ctrl_restore["decisions"])
+            ctrl.densities = list(_ctrl_restore["densities"])
         t0 = time.perf_counter()
-        it = 0
-        cont = True
+        it = int(_start_it)
+        cont = bool(_start_cont)
         while cont and it < alg.max_iterations:
             with obs.span("iteration", lane="main", it=it, alg=alg.name):
                 if alg.before is not None:
                     state = alg.before(b.host, state, it)
                 step = (self._steps[ctrl.decide(state, it)]
                         if ctrl is not None else self._step)
-                with obs.span("compute", lane="device", it=it):
-                    state = step(b.context, state, jnp.int32(it),
-                                 b.run_dense)
+                state = self._step_resilient(step, b, state, it)
                 if alg.after is not None:
                     state, cont = alg.after(b.host, state, it)
             it += 1
+            if self._ckpt_every and (it % self._ckpt_every == 0
+                                     or not cont):
+                self._save_checkpoint(state, it, cont, ctrl)
         state = jax.tree.map(
             lambda x: x.block_until_ready() if hasattr(x, "block_until_ready") else x,
             state,
@@ -312,10 +352,21 @@ class Plan:
         m.counter("engine.runs").inc()
         m.counter("engine.iterations").inc(it)
         m.histogram("engine.run_seconds").observe(dt)
+        if self._faults is not None:
+            new = self._faults.injected - self._injected_pub
+            if new > 0:
+                m.counter("stream.fault_injected").inc(new)
+                self._injected_pub = self._faults.injected
         result = alg.finalize(b.store, state) if alg.finalize else state
         stats = b.schedule.stats
         if ctrl is not None:
             stats = dict(stats, direction=ctrl.stats())
+        # only runs that opted into fault tolerance (or actually
+        # recovered) grow the stats dict — existing callers see
+        # unchanged keys
+        if (self._faults is not None or self._ckpt_every
+                or self._resil.fired):
+            stats = dict(stats, resilience=self._resil.snapshot(self._faults))
         return RunResult(
             result=result,
             state=state,
@@ -323,6 +374,72 @@ class Plan:
             seconds=dt,
             schedule_stats=stats,
         )
+
+    def _step_resilient(self, step, b: _Binding, state, it: int):
+        """One device step with the fault seam + bounded retry.
+
+        The compiled step maps iteration-start state to the next state
+        without mutating its input, so a failed attempt is discarded
+        wholesale and retried from the same ``state`` — recovery is
+        idempotent by construction.  ``KeyboardInterrupt``/``SystemExit``
+        always propagate.
+        """
+        faults, policy, res = self._faults, self._policy, self._resil
+        attempts = 0
+        while True:
+            try:
+                with obs.span("compute", lane="device", it=it):
+                    out = step(b.context, state, jnp.int32(it), b.run_dense)
+                    if faults is not None:
+                        out = faults.fire("wave.compute", out, it=it)
+                return out
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except Exception as e:
+                kind = classify(e)
+                res.detected += 1
+                attempts += 1
+                obs.instant("failure", lane="resilience", it=it,
+                            kind=kind, error=type(e).__name__)
+                if attempts > policy.max_retries:
+                    res.record("exhausted", it=it, kind=kind,
+                               attempts=attempts)
+                    raise
+                res.record("retry", it=it, kind=kind, attempts=attempts)
+                res.retries += 1
+                obs.metrics.counter("stream.fault_retries").inc()
+                obs.instant("recovery", lane="resilience", it=it,
+                            action="retry")
+
+    def _save_checkpoint(self, state, it: int, cont: bool, ctrl) -> None:
+        from ..checkpoint.runstate import save_runstate
+
+        with obs.span("checkpoint", lane="resilience", it=it):
+            save_runstate(self._ckpt_dir, state, it=it, cont=cont,
+                          ctrl=ctrl)
+        self._resil.checkpoints += 1
+        obs.metrics.counter("stream.checkpoints").inc()
+
+    def resume(self, ckpt_dir: str | None = None, *,
+               step: int | None = None) -> RunResult:
+        """Continue from the newest (or ``step``'s) snapshot in
+        ``ckpt_dir`` (defaults to this plan's ``checkpoint_dir``).
+
+        Bit-identical for integer/boolean attributes: the loop restarts
+        at the stored iteration boundary with the stored continue flag
+        and direction-controller history.
+        """
+        from ..checkpoint.runstate import load_runstate
+
+        d = ckpt_dir if ckpt_dir is not None else self._ckpt_dir
+        if d is None:
+            raise ValueError(
+                "resume() needs a checkpoint directory: pass ckpt_dir or "
+                "build the plan with checkpoint_dir=...")
+        assert self.alg.init_state is not None
+        snap = load_runstate(d, self.alg.init_state(self.store), step=step)
+        return self.run(state=snap.state, _start_it=snap.it,
+                        _start_cont=snap.cont, _ctrl_restore=snap.ctrl)
 
 
 def compile_plan(
@@ -344,6 +461,10 @@ def compile_plan(
     pipeline_depth: int | None = None,
     mesh=None,
     host_fraction: "float | str | None" = "auto",
+    faults: "str | None" = None,
+    checkpoint_every: int | None = None,
+    checkpoint_dir: str | None = None,
+    retry_policy=None,
 ) -> "Plan | StreamingPlan":
     """Build + compile: schedule, prepare, typed contexts, jitted step.
 
@@ -416,6 +537,20 @@ def compile_plan(
     bit-identical to in-core for integer/bool attributes.  Requires the
     algorithm to declare ``metadata["mesh"] == "shard"``; see
     ``docs/distributed.md``.
+
+    ``faults`` / ``checkpoint_every`` / ``checkpoint_dir`` /
+    ``retry_policy`` opt into the fault-tolerant runtime (both
+    executors): ``faults`` is a seeded injection spec
+    (``"site:action[:trigger]"``, ``;``-joined — see
+    :mod:`repro.core.faults` and ``docs/resilience.md``; defaults to the
+    ``REPRO_FAULTS`` env knob), ``checkpoint_dir`` persists atomic
+    per-iteration run snapshots every ``checkpoint_every`` iterations
+    (default every iteration) which ``plan.resume()`` continues
+    bit-identically for integer/bool attributes, and ``retry_policy``
+    (a :class:`repro.core.resilience.RetryPolicy`) bounds the
+    retry/backoff/demotion recovery ladder.  All disabled by default
+    with zero overhead; recoveries surface in
+    ``schedule_stats["resilience"]``.
     """
     if backend is None:
         backend = "pallas" if use_pallas else "xla"
@@ -460,12 +595,16 @@ def compile_plan(
                             else pipeline_depth),
             mesh=mesh,
             host_fraction=host_fraction,
+            faults=faults, checkpoint_every=checkpoint_every,
+            checkpoint_dir=checkpoint_dir, retry_policy=retry_policy,
         )
     return Plan(
         alg, store, schedule,
         backend=backend, num_devices=num_devices, mode=mode,
         tile_dim=tile_dim, dense_frac=dense_frac,
         dense_density=dense_density, share=share, direction=direction,
+        faults=faults, checkpoint_every=checkpoint_every,
+        checkpoint_dir=checkpoint_dir, retry_policy=retry_policy,
     )
 
 

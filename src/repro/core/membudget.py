@@ -114,6 +114,13 @@ class MemoryBudget:
             return budget
         return cls(parse_bytes(budget))
 
+    def scaled(self, factor: float) -> "MemoryBudget":
+        """A shrunk *effective* budget for OOM-backoff re-packing
+        (clamped to ≥ 1 byte).  Only the packing capacity shrinks — the
+        per-task staged-bytes bound is always verified against the
+        original budget and is never relaxed."""
+        return MemoryBudget(max(int(self.total_bytes * float(factor)), 1))
+
 
 def bucket_size(k: int, *, minimum: int = 8) -> int:
     """Smallest power-of-two ≥ ``k`` — the fixed bucket ladder that keeps

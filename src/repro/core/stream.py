@@ -220,13 +220,18 @@ from .direction import (
     DirectionController, kernels_for, resolve_direction, workspace_kernels,
 )
 from .distributed import combine_fn, make_device_edge_partition
+from .faults import FaultPlan, InjectedFault
 from .functors import BlockAlgorithm
 from .graph import csr_prefix
+from .knobs import env_float as _knob_float, env_str as _knob_str
 from .membudget import (
     HOST_RATIO_DEFAULT, MemoryBudget, PIPELINE_DEPTH, Wave,
     arena_model_bytes, bucket_size, build_waves, hetero_split_diverged,
     peel_host_tasks, repack_waves, resident_bytes, split_wave,
     task_footprints, tree_array_bytes,
+)
+from .resilience import (
+    HostTaskError, ResilienceStats, RetryPolicy, WorkerDeath, classify,
 )
 from .scheduler import Schedule, build_schedule
 from .engine import RunResult
@@ -261,15 +266,14 @@ def _hetero_noise_floor_s() -> float:
     at zero: dispatch jitter dominates, so peeling would be decided by
     noise.  ``REPRO_HETERO_NOISE_FLOOR_S`` overrides (the hetero smoke
     lowers it to exercise the split on small CI graphs)."""
-    return float(os.environ.get("REPRO_HETERO_NOISE_FLOOR_S",
-                                _REBALANCE_NOISE_FLOOR_S))
+    return _knob_float("REPRO_HETERO_NOISE_FLOOR_S",
+                       _REBALANCE_NOISE_FLOOR_S)
 
 
 def _hetero_host_ratio_default() -> float:
     """Assumed host-vs-device slowdown before the host lane has been
     measured; ``REPRO_HETERO_HOST_RATIO`` overrides."""
-    return float(os.environ.get("REPRO_HETERO_HOST_RATIO",
-                                HOST_RATIO_DEFAULT))
+    return _knob_float("REPRO_HETERO_HOST_RATIO", HOST_RATIO_DEFAULT)
 
 
 def _combine_spec(alg: BlockAlgorithm):
@@ -569,6 +573,7 @@ class _StagePipeline:
         self._cmd: queue.Queue = queue.Queue()
         self.assemble_s = 0.0
         self.stall_s = 0.0
+        self.dead = False
         self._err: BaseException | None = None
         self._t = threading.Thread(target=self._work, args=(plan,),
                                    name="repro-staging", daemon=True)
@@ -598,14 +603,19 @@ class _StagePipeline:
         slab = self._q.get()
         self.stall_s += time.perf_counter() - t0
         if slab is None:
-            raise self._err
+            # the worker died; mark it so the watchdog fails over to
+            # synchronous assembly instead of waiting on a dead queue
+            self.dead = True
+            raise WorkerDeath(self._err)
         return slab
 
     def close(self, arena: _HostArena) -> None:
         """Stop the worker; speculatively assembled slabs hand their
         buffers straight back to the arena (they were never staged).
         Keeps draining while the worker finishes its in-flight epoch
-        (it may be blocked on the bounded queue)."""
+        (it may be blocked on the bounded queue), then joins the thread
+        so teardown is deterministic — no daemon-thread leak survives
+        ``StreamingPlan.close()``."""
         self._cmd.put(None)
         while self._t.is_alive() or not self._q.empty():
             try:
@@ -614,6 +624,7 @@ class _StagePipeline:
                 continue
             if slab is not None:
                 arena.give(*slab.arena_arrays)
+        self._t.join(timeout=5.0)
 
 
 # ----------------------------------------------------------------------
@@ -735,10 +746,25 @@ class _HostLane:
                 for u in range(len(self.units))]
 
     def _run_unit(self, u: int, hstate: dict, iarr, kernel):
+        it = int(np.asarray(jax.device_get(iarr)))
+        try:
+            return self._run_unit_inner(u, hstate, iarr, kernel)
+        except HostTaskError:
+            raise
+        except Exception as e:
+            # attach unit/task/iteration blame here, where it is known —
+            # not at fold time, where the bare future exception used to
+            # surface with no context at all
+            raise HostTaskError(u, self.units[u].tolist(), it, e) from e
+
+    def _run_unit_inner(self, u: int, hstate: dict, iarr, kernel):
         alg = self.plan.alg
+        faults = self.plan._faults
         t0 = time.perf_counter()
         with obs.span("host_compute", lane="host-compute", unit=u,
                       tasks=int(self.units[u].size)):
+            if faults is not None:
+                faults.fire("host.task", unit=u)
             with jax.default_device(self._cpu):
                 new = kernel(self._ctxs[u], hstate, iarr)
         added = set(new) - set(hstate)
@@ -797,8 +823,10 @@ class _HostLane:
                 out[key] = jnp.maximum(acc[key], v)
         return out, busy_s
 
-    def close(self) -> None:
-        self._pool.shutdown(wait=False, cancel_futures=True)
+    def close(self, wait: bool = False) -> None:
+        """Shut the pool down; ``wait=True`` joins the worker threads —
+        the deterministic-teardown path of ``StreamingPlan.close()``."""
+        self._pool.shutdown(wait=wait, cancel_futures=True)
 
 
 # ----------------------------------------------------------------------
@@ -950,7 +978,11 @@ class StreamingPlan:
                  pipeline_depth: int = PIPELINE_DEPTH,
                  share: bool = True, mesh: Mesh | None = None,
                  host_fraction: float | str | None = "auto",
-                 direction: str | None = None) -> None:
+                 direction: str | None = None,
+                 faults: "str | FaultPlan | None" = None,
+                 checkpoint_every: int | None = None,
+                 checkpoint_dir: str | None = None,
+                 retry_policy: RetryPolicy | None = None) -> None:
         from ..kernels.registry import host_executable, resolve_backend
 
         self.alg = alg
@@ -1048,6 +1080,35 @@ class StreamingPlan:
             host_fraction
             if self._host_capable and host_fraction is not None else 0.0
         )
+        # -- fault tolerance: injection, retry ladder, checkpoints -----
+        # REPRO_FAULTS is the env spelling of compile_plan(faults=...);
+        # an explicit argument wins.  Disabled is self._faults = None —
+        # every seam guards with one `is not None` check (the obs idiom)
+        self._faults = FaultPlan.parse(
+            faults if faults is not None else _knob_str("REPRO_FAULTS"))
+        if retry_policy is not None and not isinstance(retry_policy,
+                                                       RetryPolicy):
+            raise TypeError(
+                f"retry_policy must be a repro.core.resilience."
+                f"RetryPolicy; got {type(retry_policy).__name__}")
+        self._policy = retry_policy or RetryPolicy()
+        if checkpoint_every is not None and int(checkpoint_every) < 1:
+            raise ValueError(
+                f"checkpoint_every must be >= 1; got {checkpoint_every!r}")
+        if checkpoint_every is not None and checkpoint_dir is None:
+            raise ValueError(
+                "checkpoint_every requires checkpoint_dir (where the "
+                "per-iteration snapshots persist)")
+        # a directory alone means "checkpoint every iteration"
+        self._ckpt_every = (int(checkpoint_every) if checkpoint_every
+                            else (1 if checkpoint_dir else 0))
+        self._ckpt_dir = checkpoint_dir
+        self._resil = ResilienceStats()
+        self._injected_pub = 0          # injections already published
+        self._sync_iters_left = 0       # transient sync-assembly window
+        self._worker_deaths = 0
+        self._host_failures = 0
+        self._host_futs: list | None = None   # in-flight host futures
         self.pipeline_depth = max(int(pipeline_depth), 0)
         self.schedule = schedule or build_schedule(
             alg, store, num_devices=max(num_devices, self._mesh_devices),
@@ -1381,6 +1442,10 @@ class StreamingPlan:
         calibration and at ``pipeline_depth=0``."""
         with obs.span("assemble", lane="staging", wave=wave,
                       bytes=recipe.staged_bytes):
+            if self._faults is not None:
+                # fires on whichever thread assembles: a raise in the
+                # background worker surfaces as WorkerDeath at get()
+                self._faults.fire("stage.assemble", wave=wave)
             if self.mesh is not None:
                 slab, _ = self._assemble_mesh(
                     recipe.wave, extras=recipe.extras,
@@ -1990,6 +2055,8 @@ class StreamingPlan:
         per device) and the stacked extras travel as a tuple of sharded
         leaves plus their hashable static aux — the pipeline overlaps
         exactly this transfer with the previous wave's compute."""
+        if self._faults is not None:
+            self._faults.fire("stage.device_put", wave=wave)
         self._bytes_staged += slab.staged_bytes
         t0 = time.perf_counter()
         with obs.span("device_put", lane="device", wave=wave,
@@ -2034,16 +2101,25 @@ class StreamingPlan:
         """Stage 3: dispatch one staged wave into the right jitted step."""
         run_dense = self._slabs[w].run_dense
         step, mesh_step = self._active_steps()
+        faults = self._faults
         if self.mesh is None:
             with obs.span("compute", lane="device", wave=w,
                           devices=self._mesh_devices):
-                return step(self._wave_context(bufs), state0, acc,
-                            iarr, run_dense)
+                out = step(self._wave_context(bufs), state0, acc,
+                           iarr, run_dense)
+            if faults is not None:
+                # firing on the accumulator lets `corrupt` damage the
+                # wave's folded partial — recovery must discard it
+                out = faults.fire("wave.compute", out, wave=w)
+            return out
         with obs.span("compute", lane="device", wave=w,
                       devices=self._mesh_devices):
             slab_bufs, ex_leaves, ex_aux = bufs
             out = mesh_step(self._resident, slab_bufs, ex_leaves,
                             state0, acc, iarr, run_dense, ex_aux)
+        if faults is not None:
+            out = faults.fire("wave.compute", out, wave=w)
+            out = faults.fire("mesh.collective", out, wave=w)
         # per-device collective payload: each combined leaf crosses one
         # all-reduce per wave step (trace-time combined_keys is exact)
         cbytes = sum(
@@ -2213,6 +2289,9 @@ class StreamingPlan:
         # invariant, so the merge order cannot change results)
         host_futs = (lane.submit(state0, it, self._direction_now)
                      if lane is not None else None)
+        # stashed so a failure anywhere in the wave loop can wait the
+        # in-flight host work out before the iteration retries
+        self._host_futs = host_futs
         if nw == 0:
             # fully host-peeled: the host lane IS the iteration
             acc = self._gather_host(host_futs, acc)
@@ -2230,7 +2309,8 @@ class StreamingPlan:
         t0 = time.perf_counter()
         put0 = self._phase["device_put"]
         pipe = self._pipe
-        if pipe is None and self.pipeline_depth > 0:
+        if (pipe is None and self.pipeline_depth > 0
+                and self._sync_iters_left == 0):
             # persistent worker, created at the first overlapped
             # iteration; later iterations find their first waves
             # already assembled (the epoch below is requested early)
@@ -2261,6 +2341,13 @@ class StreamingPlan:
         slab = next_slab(0)
         bufs = self._put_slab(slab, wave=0)
         for w in range(nw):
+            # fail fast on host-lane failures: a unit that already blew
+            # up should abort the iteration now, not after every device
+            # wave has streamed only to die at fold time
+            if host_futs is not None:
+                for f in host_futs:
+                    if f.done() and f.exception() is not None:
+                        raise f.exception()
             # async dispatch: the step for wave w starts on the device
             # (or the whole mesh, under shard_map)...
             acc = self._step_wave(w, bufs, state0, acc, iarr)
@@ -2300,6 +2387,7 @@ class StreamingPlan:
         if futs is None:
             return acc
         results = [f.result() for f in futs]
+        self._host_futs = None
         acc, busy_s = self._host_lane.fold(results, acc)
         self._phase["host_compute"] += busy_s
         self._host_seconds += busy_s
@@ -2309,6 +2397,182 @@ class StreamingPlan:
         obs.metrics.counter("stream.host_tasks").inc(ntasks)
         obs.metrics.counter("stream.host_seconds").inc(busy_s)
         return acc
+
+    # -- graceful degradation: the recovery ladder ---------------------
+    def _run_waves_resilient(self, state0, it: int):
+        """One iteration's wave work under the retry ladder.
+
+        The fast path is a bare call — no bookkeeping when nothing
+        fails.  On failure, every in-flight resource is quiesced, the
+        failure is classified (oom / worker / host / fault), the
+        matching recovery action reshapes the plan, and the *whole
+        iteration* re-runs from ``state0`` — the combine contract folds
+        partials from iteration-start state, so a retry can never
+        double-count, whatever had already folded.  Bounded by
+        ``RetryPolicy.max_retries``; an exhausted ladder re-raises."""
+        policy = self._policy
+        res = self._resil
+        attempts = 0
+        oom_count = 0
+        while True:
+            try:
+                out = self._run_waves(state0, it)
+                if self._sync_iters_left > 0:
+                    self._sync_iters_left -= 1
+                return out
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except Exception as e:
+                kind = classify(e)
+                res.detected += 1
+                attempts += 1
+                obs.instant("failure", lane="resilience", it=it, kind=kind,
+                            attempt=attempts,
+                            error=f"{type(e).__name__}: {e}")
+                self._abort_inflight()
+                if attempts > policy.max_retries:
+                    res.record("exhausted", it=it, kind=kind)
+                    raise
+                if kind == "oom":
+                    oom_count += 1
+                    if (oom_count >= policy.demote_after
+                            and self._host_capable):
+                        self._demote_wave(e)
+                        res.demotions += 1
+                        obs.metrics.counter("stream.fault_demotions").inc()
+                        res.record("demote", it=it, oom_count=oom_count)
+                    else:
+                        self._shrink_repack(oom_count)
+                        res.oom_repacks += 1
+                        res.record("oom_repack", it=it,
+                                   factor=policy.backoff ** oom_count)
+                elif kind == "worker":
+                    self._worker_deaths += 1
+                    res.failovers += 1
+                    obs.metrics.counter("stream.fault_failovers").inc()
+                    if self._worker_deaths >= policy.failover_after:
+                        # the worker keeps dying: synchronous assembly
+                        # (pipeline_depth=0 semantics) becomes permanent
+                        self.pipeline_depth = 0
+                        res.record("failover_permanent", it=it,
+                                   deaths=self._worker_deaths)
+                    else:
+                        self._sync_iters_left = 1
+                        res.record("failover_sync", it=it,
+                                   deaths=self._worker_deaths)
+                elif kind == "host":
+                    self._host_failures += 1
+                    if self._host_failures >= policy.failover_after:
+                        self._disable_host_lane()
+                        res.host_failovers += 1
+                        res.record("host_disable", it=it,
+                                   unit=getattr(e, "unit", None))
+                    else:
+                        res.record("host_retry", it=it,
+                                   unit=getattr(e, "unit", None))
+                else:
+                    res.record("retry", it=it, kind=kind)
+                res.retries += 1
+                obs.metrics.counter("stream.fault_retries").inc()
+                obs.instant("recovery", lane="resilience", it=it,
+                            action=res.actions[-1]["action"])
+
+    def _abort_inflight(self) -> None:
+        """Quiesce every in-flight resource so a retry starts clean:
+        close the staging pipe (drains a dead or a live worker alike),
+        wait out dispatched host futures (their partials are discarded
+        — the retry folds from iteration-start state), and force-
+        recycle parked arena buffers."""
+        if self._pipe is not None:
+            try:
+                self._pipe.close(self._arena)
+            finally:
+                self._pipe = None
+        futs, self._host_futs = self._host_futs, None
+        for f in futs or ():
+            try:
+                f.result(timeout=60.0)
+            except Exception:
+                pass            # the retry re-dispatches from scratch
+        self._drain_recycle(force=True)
+
+    def _shrink_repack(self, oom_count: int) -> None:
+        """Device OOM: re-pack the device waves under an exponentially
+        shrunk *effective* capacity (``budget × backoff**oom_count``),
+        so each wave stages less at once.  The per-task bound is never
+        relaxed — ``_fit_slabs`` still verifies every rebuilt wave
+        against the ORIGINAL budget, and ``split_wave`` raises rather
+        than admit a single task that cannot fit.  The standing host
+        partition is preserved exactly."""
+        eff = self.budget.scaled(self._policy.backoff ** oom_count)
+        task_t = self.schedule.weights.astype(np.float64)
+        packed = repack_waves(self.schedule, eff, self._footprints,
+                              task_t, devices=self._mesh_devices)
+        host_ids = (np.concatenate(self._host_units) if self._host_units
+                    else np.zeros(0, np.int64))
+        waves: list[Wave] = []
+        for w in packed:
+            dev = w.task_ids[~np.isin(w.task_ids, host_ids)]
+            if dev.size:
+                waves.append(Wave(
+                    task_ids=dev,
+                    est_bytes=int(self._footprints[dev].sum()),
+                ))
+        for ids in self._host_units:
+            waves.append(Wave(task_ids=np.zeros(0, np.int64), est_bytes=0,
+                              host_task_ids=ids))
+        self._apply_waves(waves)
+        self._calibration = None        # re-time the re-packed queue
+        self._edge_free_bufs = None     # stale slab-0 reference
+
+    def _demote_wave(self, exc: BaseException) -> None:
+        """Repeated OOM: move the offending wave's tasks to the host
+        lane wholesale (they are never staged there, so they stop
+        pressing on device memory).  The wave is identified from the
+        failure's ``wave=`` context when present, else the largest
+        staged slab takes the blame."""
+        if not self._slabs:
+            return
+        w = None
+        ctx = getattr(exc, "ctx", None)
+        if isinstance(ctx, dict):
+            cw = ctx.get("wave")
+            if isinstance(cw, int) and 0 <= cw < len(self._slabs):
+                w = cw
+        if w is None:
+            w = max(range(len(self._slabs)),
+                    key=lambda i: self._slabs[i].staged_bytes)
+        waves: list[Wave] = []
+        for i, r in enumerate(self._slabs):
+            if i == w:
+                waves.append(Wave(
+                    task_ids=np.zeros(0, np.int64), est_bytes=0,
+                    host_task_ids=np.sort(r.wave.task_ids),
+                ))
+            else:
+                waves.append(Wave(task_ids=r.wave.task_ids,
+                                  est_bytes=r.wave.est_bytes))
+        for ids in self._host_units:
+            waves.append(Wave(task_ids=np.zeros(0, np.int64), est_bytes=0,
+                              host_task_ids=ids))
+        self._apply_waves(waves)
+        self._calibration = None
+        self._edge_free_bufs = None
+        obs.instant("demote", lane="resilience", wave=w)
+
+    def _disable_host_lane(self) -> None:
+        """Repeated host-task failure: run device-only.  Every peeled
+        task returns to the device wave queue and the auto split stays
+        off for the rest of the plan's life."""
+        self._host_capable = False
+        self._host_frac = 0.0
+        task_t = self.schedule.weights.astype(np.float64)
+        waves = repack_waves(self.schedule, self.budget, self._footprints,
+                             task_t, devices=self._mesh_devices)
+        self._apply_waves(waves)
+        self._calibration = None
+        self._edge_free_bufs = None
+        obs.instant("host_disable", lane="resilience")
 
     def _maybe_refresh_split(self, it: int) -> None:
         """Adapt the ``"auto"`` host/device split to measured times.
@@ -2412,9 +2676,16 @@ class StreamingPlan:
         )
 
     def run(self, store: BlockStore | None = None,
-            state: Any | None = None) -> RunResult:
+            state: Any | None = None, *,
+            _start_it: int = 0, _start_cont: bool = True,
+            _ctrl_restore: dict | None = None) -> RunResult:
         """Execute the streamed iteration loop (same contract as
-        :meth:`repro.core.engine.Plan.run`)."""
+        :meth:`repro.core.engine.Plan.run`).
+
+        The underscored keywords are :meth:`resume`'s continuation
+        protocol — iteration counter, loop-continue flag, and the
+        direction controller's restored decision history — not public
+        surface."""
         if store is not None and store is not self.store:
             raise TypeError(
                 "StreamingPlan is bound to the store it was compiled "
@@ -2424,12 +2695,22 @@ class StreamingPlan:
         if state is None:
             assert alg.init_state is not None, f"{alg.name}: init_state required"
             state = alg.init_state(self.store)
+        if self._host_units and self._host_lane is None:
+            # close() tore the lane down; rebuild it for this run
+            self._host_lane = _HostLane(self, self._host_units)
         ctrl = (DirectionController(alg, self.direction, self.store.n)
                 if self._direction_requested else None)
+        if ctrl is not None and _ctrl_restore is not None:
+            # bit-identical hysteresis across a resume: the controller's
+            # latch state and decision history ARE its inputs
+            ctrl.current = str(_ctrl_restore["current"])
+            ctrl.switches = int(_ctrl_restore["switches"])
+            ctrl.decisions = list(_ctrl_restore["decisions"])
+            ctrl.densities = list(_ctrl_restore["densities"])
         self._direction_now = "push"
         t0 = time.perf_counter()
-        it = 0
-        cont = True
+        it = int(_start_it)
+        cont = bool(_start_cont)
         overlapped_wall = 0.0
         overlapped_iters = 0
         staged_before = self._bytes_staged
@@ -2453,7 +2734,7 @@ class StreamingPlan:
                         # host hooks may have injected fresh uncommitted
                         # leaves) — a no-op for leaves already placed
                         state = self._put_replicated(state)
-                    state, wall = self._run_waves(state, it)
+                    state, wall = self._run_waves_resilient(state, it)
                     if wall > 0.0:
                         overlapped_wall += wall
                         overlapped_iters += 1
@@ -2463,6 +2744,9 @@ class StreamingPlan:
                     if alg.after is not None:
                         state, cont = alg.after(self.host, state, it)
                 it += 1
+                if self._ckpt_every and (it % self._ckpt_every == 0
+                                         or not cont):
+                    self._save_checkpoint(state, it, cont, ctrl)
         finally:
             if self._pipe is not None:
                 self._pipe.close(self._arena)
@@ -2493,6 +2777,12 @@ class StreamingPlan:
         )
         if ctrl is not None:
             stats["direction"] = ctrl.stats()
+        if (self._faults is not None or self._ckpt_every
+                or self._resil.fired):
+            # emitted only when fault tolerance is configured or a
+            # recovery actually fired — existing callers see unchanged
+            # schedule_stats keys
+            stats["resilience"] = self._resil.snapshot(self._faults)
         return RunResult(
             result=result,
             state=state,
@@ -2500,6 +2790,60 @@ class StreamingPlan:
             seconds=dt,
             schedule_stats=stats,
         )
+
+    # -- checkpoint / resume -------------------------------------------
+    def _save_checkpoint(self, state, it: int, cont: bool, ctrl) -> None:
+        """Atomically persist ``(state, it, cont, controller state)``
+        through :mod:`repro.checkpoint` after iteration ``it - 1``."""
+        from ..checkpoint.runstate import save_runstate
+
+        with obs.span("checkpoint", lane="resilience", it=it):
+            save_runstate(self._ckpt_dir, state, it=it, cont=cont,
+                          ctrl=ctrl)
+        self._resil.checkpoints += 1
+        obs.metrics.counter("stream.checkpoints").inc()
+
+    def resume(self, ckpt_dir: str | None = None, *,
+               step: int | None = None) -> RunResult:
+        """Continue a checkpointed run from its latest (or ``step``'s)
+        snapshot; bit-identical to the uninterrupted run for integer/
+        boolean attributes (the same guarantee the per-wave combine
+        contract gives within a run).  ``RunResult.iterations`` stays
+        the absolute iteration count."""
+        from ..checkpoint.runstate import load_runstate
+
+        d = ckpt_dir if ckpt_dir is not None else self._ckpt_dir
+        if d is None:
+            raise ValueError(
+                "resume() needs a checkpoint directory: pass ckpt_dir "
+                "or compile the plan with checkpoint_dir=...")
+        assert self.alg.init_state is not None
+        snap = load_runstate(d, self.alg.init_state(self.store),
+                             step=step)
+        return self.run(state=snap.state, _start_it=snap.it,
+                        _start_cont=snap.cont, _ctrl_restore=snap.ctrl)
+
+    # -- deterministic teardown ----------------------------------------
+    def close(self) -> None:
+        """Tear down every background resource deterministically: the
+        staging worker thread (joined, not leaked), the host-lane
+        thread pool, and the parked arena buffers.  Idempotent, and
+        safe mid-run cleanup after a ``KeyboardInterrupt`` — ``run()``
+        rebuilds both lazily, so a closed plan can run again."""
+        if self._pipe is not None:
+            self._pipe.close(self._arena)
+            self._pipe = None
+        if self._host_lane is not None:
+            self._host_lane.close(wait=True)
+            self._host_lane = None
+        self._host_futs = None
+        self._drain_recycle(force=True)
+
+    def __enter__(self) -> "StreamingPlan":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
 
     def _publish_metrics(self, *, iterations: int, seconds: float,
                          staged_delta: int, phase_delta: dict) -> None:
@@ -2522,6 +2866,11 @@ class StreamingPlan:
         if self._slabs:
             m.gauge("stream.budget_high_water_bytes").set_max(
                 max(self._budget_load(r) for r in self._slabs))
+        if self._faults is not None:
+            new = self._faults.injected - self._injected_pub
+            if new > 0:
+                m.counter("stream.fault_injected").inc(new)
+            self._injected_pub = self._faults.injected
 
     def _streaming_stats(self, state, overlapped_wall: float,
                          overlapped_iters: int, *,

@@ -313,6 +313,9 @@ def instant(name: str, *, lane: str | None = None, **args) -> None:
 
 
 # honor REPRO_TRACE at import so `REPRO_TRACE=1 python app.py` traces
-# without code changes
+# without code changes.  REPRO_TRACE / REPRO_TRACE_JAX are declared in
+# repro.core.knobs.KNOWN but read locally: obs must stay importable
+# without repro.core (which pulls in jax), and truthy-string semantics
+# cannot be malformed
 if os.environ.get("REPRO_TRACE", "").lower() not in _FALSY:
     enable()

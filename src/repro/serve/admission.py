@@ -21,6 +21,11 @@ fit alone but not right now — wait for in-flight work to retire), and
 the query alone exceeds its tenant's cap).  Tenant caps are enforced by
 a :class:`~repro.core.membudget.TenantLedger`, so one tenant's burst
 queues behind its own cap instead of starving the rest.
+
+``max_queue`` bounds the wait line itself: a query that would QUEUE
+when the line is already full is rejected instead — load-shedding with
+a ``retry_after_s`` hint (the server attaches the observed median
+latency) rather than unbounded buildup.
 """
 from __future__ import annotations
 
@@ -42,8 +47,12 @@ class AdmissionController:
     """
 
     def __init__(self, budget: "int | str | MemoryBudget | None" = None, *,
-                 tenants: TenantLedger | None = None) -> None:
+                 tenants: TenantLedger | None = None,
+                 max_queue: int | None = None) -> None:
         self.budget = MemoryBudget.of(budget) if budget is not None else None
+        if max_queue is not None and int(max_queue) < 0:
+            raise ValueError(f"max_queue must be >= 0; got {max_queue!r}")
+        self.max_queue = int(max_queue) if max_queue is not None else None
         self.tenants = tenants if tenants is not None else TenantLedger()
         self.resident_bytes = 0      # hot plans
         self.in_flight_bytes = 0     # admitted query rows
@@ -93,6 +102,13 @@ class AdmissionController:
         if not self.tenants.can_charge(tenant, nbytes):
             return QUEUE
         return ADMIT
+
+    def queue_full(self, queue_depth: int) -> bool:
+        """Whether a would-QUEUE query must be shed instead: the wait
+        line already holds ``max_queue`` queries.  (Promotion from an
+        existing queue slot is never shed — only new arrivals.)"""
+        return (self.max_queue is not None
+                and int(queue_depth) >= self.max_queue)
 
     def admit(self, tenant: str, nbytes: int) -> None:
         self.tenants.charge(tenant, nbytes)

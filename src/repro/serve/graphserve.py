@@ -52,6 +52,7 @@ from ..algorithms.cc import afforest_algorithm
 from ..algorithms.kcore import kcore_algorithm
 from ..algorithms.pagerank import pagerank_algorithm
 from ..core.engine import batch_states, compile_plan, unbatch_state
+from ..core.faults import FaultPlan
 from ..core.membudget import (
     TenantLedger, batch_state_bytes, bucket_size, tree_array_bytes,
 )
@@ -69,18 +70,29 @@ class Query:
     for pagerank, ``source`` for bfs, ``k`` for kcore, none for cc).
     The server fills ``uid``/``status``/``result``/``latency_s``;
     ``status`` moves ``new → queued|admitted → done`` (or
-    ``rejected``, with ``reason``).
+    ``rejected``/``expired``/``cancelled``/``failed``, with
+    ``reason``).
+
+    ``deadline_s`` is a per-query execution deadline measured from
+    submission: a query still waiting (queued or admitted) when it
+    elapses is expired instead of executed.  A query already inside a
+    running device batch completes — the execution model is
+    synchronous, so deadlines bound *waiting*, not compute.
+    ``retry_after_s`` is filled on queue-full rejections: how long the
+    caller should wait before resubmitting.
     """
 
     graph: str
     algorithm: str
     params: dict = field(default_factory=dict)
     tenant: str = "default"
+    deadline_s: float | None = None
     uid: int = -1
     status: str = "new"
     reason: str | None = None
     submitted_s: float = 0.0
     latency_s: float | None = None
+    retry_after_s: float | None = None
     result: Any = None
     schedule_stats: dict | None = None
     priced_bytes: int = 0
@@ -170,14 +182,21 @@ class GraphServer:
     def __init__(self, *, memory_budget: "int | str | None" = None,
                  max_batch: int = 8,
                  tenant_budgets: dict | None = None,
-                 default_tenant_budget: "int | str | None" = None) -> None:
+                 default_tenant_budget: "int | str | None" = None,
+                 max_queue: int | None = None,
+                 faults: "str | FaultPlan | None" = None) -> None:
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self.max_batch = int(max_batch)
+        # the serving seam of the fault-injection registry
+        # (repro.core.faults): "serve.query" fires per device batch —
+        # exercised by the chaos tests; None is a no-op
+        self._faults = FaultPlan.parse(faults)
         self.admission = AdmissionController(
             memory_budget,
             tenants=TenantLedger(tenant_budgets,
                                  default_budget=default_tenant_budget),
+            max_queue=max_queue,
         )
         self._stats = ServingStats()
         if self.admission.budget is not None:
@@ -268,10 +287,25 @@ class GraphServer:
             self._stats.record_reject()
             self._done[query.uid] = query
         elif decision == QUEUE:
-            query.status = "queued"
-            query._init_state = state
-            self._stats.record_queue()
-            self._queue.append(query)
+            if self.admission.queue_full(len(self._queue)):
+                # shed instead of buffering without bound; the hint is
+                # the observed median latency — roughly one in-flight
+                # batch's worth of wait
+                query.status = "rejected"
+                query.retry_after_s = self._stats.retry_after_hint()
+                query.reason = (
+                    f"queue full ({self.admission.max_queue} waiting); "
+                    f"retry after {query.retry_after_s:.3f}s"
+                )
+                query._init_state = None
+                self._stats.record_reject()
+                self._stats.record_retry_after()
+                self._done[query.uid] = query
+            else:
+                query.status = "queued"
+                query._init_state = state
+                self._stats.record_queue()
+                self._queue.append(query)
         else:
             self.admission.admit(query.tenant, query.priced_bytes)
             query.status = "admitted"
@@ -303,9 +337,63 @@ class GraphServer:
         self._queue = still
         self._stats.queue_depth = len(self._queue)
 
+    def _expire(self) -> None:
+        """Expire waiting queries whose deadline has elapsed.
+
+        Applies to queued AND admitted queries — anything not yet
+        inside a running batch.  Expired-while-admitted queries release
+        their charged bytes so the headroom they held frees up."""
+        now = time.perf_counter()
+
+        def overdue(q: Query) -> bool:
+            return (q.deadline_s is not None
+                    and now - q.submitted_s > q.deadline_s)
+
+        for pool, admitted in ((self._queue, False),
+                               (self._admitted, True)):
+            for q in [q for q in pool if overdue(q)]:
+                pool.remove(q)
+                if admitted:
+                    self.admission.release(q.tenant, q.priced_bytes)
+                q.status = "expired"
+                q.reason = (f"deadline {q.deadline_s}s elapsed before "
+                            "execution")
+                q._init_state = None
+                self._stats.record_deadline_exceeded()
+                self._done[q.uid] = q
+        self._stats.queue_depth = len(self._queue)
+
+    def cancel(self, uid: int) -> bool:
+        """Withdraw a waiting query (queued or admitted); returns True
+        when it was cancelled, False when it was not waiting (already
+        done, rejected, or never submitted)."""
+        for pool, admitted in ((self._queue, False),
+                               (self._admitted, True)):
+            for q in pool:
+                if q.uid == uid:
+                    pool.remove(q)
+                    if admitted:
+                        self.admission.release(q.tenant, q.priced_bytes)
+                    q.status = "cancelled"
+                    q.reason = "cancelled by caller"
+                    q._init_state = None
+                    self._stats.record_cancel()
+                    self._done[q.uid] = q
+                    self._stats.queue_depth = len(self._queue)
+                    return True
+        return False
+
     # -- execution -----------------------------------------------------
     def step(self) -> int:
-        """Form and run ONE device batch; returns queries completed."""
+        """Form and run ONE device batch; returns queries completed.
+
+        A batch that raises is isolated, not fatal to the server: a
+        multi-query batch's members are re-admitted to run **solo** (one
+        poisoned query cannot sink its cohort — the others complete on
+        their own), and a failing singleton is marked ``failed`` with
+        the error as its ``reason``.
+        """
+        self._expire()
         self._promote()
         if not self._admitted:
             return 0
@@ -315,7 +403,12 @@ class GraphServer:
                  if (q.graph, q._entry.key) == batch_key]
         entry = head._entry
         pad_reserved = 0
-        if entry.batchable:
+        if getattr(head, "_solo", False):
+            # failure isolation: this query's previous batch raised —
+            # run it alone so a cohort failure pinpoints the culprit
+            group = [head]
+            bucket = 1
+        elif entry.batchable:
             group = group[: self.max_batch]
             bucket = bucket_size(len(group), minimum=1)
             pad_rows = bucket - len(group)
@@ -340,12 +433,19 @@ class GraphServer:
             with obs.span("serve.batch", lane="main", graph=head.graph,
                           alg=entry.key[0] if entry.key else "?",
                           real=len(group), bucket=bucket):
+                if self._faults is not None:
+                    self._faults.fire("serve.query", graph=head.graph,
+                                      uid=head.uid, batch=len(group))
                 if entry.batchable:
                     state = batch_states([q._init_state for q in group],
                                          pad_to=bucket)
                 else:
                     state = group[0]._init_state
                 res = plan.run(store=store, state=state)
+        except (KeyboardInterrupt, SystemExit):
+            raise
+        except Exception as e:
+            return self._fail_batch(group, e)
         finally:
             if pad_reserved:
                 self.admission.unreserve(pad_reserved)
@@ -375,13 +475,40 @@ class GraphServer:
         self._promote()
         return len(group)
 
+    def _fail_batch(self, group: list[Query], exc: Exception) -> int:
+        """Isolate one raised device batch; returns queries completed
+        (0 — the server stays up either way)."""
+        self._stats.record_batch_failure()
+        obs.instant("batch_failure", lane="resilience",
+                    error=type(exc).__name__, real=len(group))
+        if len(group) == 1:
+            q = group[0]
+            q.status = "failed"
+            q.reason = f"{type(exc).__name__}: {exc}"
+            q.latency_s = time.perf_counter() - q.submitted_s
+            q._init_state = None
+            self.admission.release(q.tenant, q.priced_bytes)
+            self._done[q.uid] = q
+            return 0
+        # a cohort failed: any member might be the poison — re-admit
+        # each to run solo (their bytes stay charged; they are still
+        # admitted work).  A query whose solo run also raises lands in
+        # the singleton branch above and is marked failed.
+        for q in group:
+            q._solo = True
+        self._admitted[:0] = group
+        return 0
+
     def drain(self) -> dict[int, Query]:
         """Run batches until every submitted query is done/rejected."""
         while self._admitted or self._queue:
-            if self.step() == 0 and not self._admitted:
+            if self.step() == 0 and not self._admitted and self._queue:
                 # _promote() either admits or rejects every queued
                 # query once nothing is in flight; reaching this means
-                # the accounting is inconsistent — fail loudly
+                # the accounting is inconsistent — fail loudly.  (A
+                # step that completed nothing because its batch failed
+                # or expired leaves nothing admitted and nothing queued
+                # — that's a clean, empty server, not a stall.)
                 raise RuntimeError(
                     f"{len(self._queue)} queued queries cannot be admitted "
                     "with no work in flight")

@@ -36,6 +36,10 @@ class ServingStats:
         self.queued = 0              # queue *events* (a query that waits)
         self.queue_depth = 0         # currently waiting
         self.completed = 0
+        self.deadline_exceeded = 0   # queries expired before execution
+        self.cancelled = 0           # queries withdrawn by the caller
+        self.batch_failures = 0      # device batches that raised
+        self.retry_after_rejections = 0   # queue-full rejections (hinted)
         self.batches = 0             # device batches executed
         self.steps_executed = 0      # compiled step invocations (Σ iters×waves)
         self.footprint_high_water_bytes = 0
@@ -57,6 +61,22 @@ class ServingStats:
     def record_queue(self) -> None:
         self.queued += 1
         obs.metrics.counter("serve.queued").inc()
+
+    def record_deadline_exceeded(self) -> None:
+        self.deadline_exceeded += 1
+        obs.metrics.counter("serve.deadline_exceeded").inc()
+
+    def record_cancel(self) -> None:
+        self.cancelled += 1
+        obs.metrics.counter("serve.cancelled").inc()
+
+    def record_batch_failure(self) -> None:
+        self.batch_failures += 1
+        obs.metrics.counter("serve.batch_failures").inc()
+
+    def record_retry_after(self) -> None:
+        self.retry_after_rejections += 1
+        obs.metrics.counter("serve.retry_after").inc()
 
     def record_batch(self, real: int, padded: int, steps: int) -> None:
         self.batches += 1
@@ -83,6 +103,15 @@ class ServingStats:
                     p95=self._latency.percentile(95),
                     p99=self._latency.percentile(99))
 
+    def retry_after_hint(self) -> float:
+        """Seconds a queue-full-rejected caller should wait before
+        resubmitting: the observed median end-to-end latency (one
+        in-flight batch typically retires by then), floored so a cold
+        server still hints something actionable."""
+        p50 = (self._latency.percentile(50)
+               if self._latency.count else None)
+        return max(float(p50), 0.05) if p50 is not None else 0.05
+
     def batch_occupancy(self) -> float | None:
         """Mean fraction of bucket rows occupied by real queries."""
         if not self._occupancy:
@@ -96,6 +125,10 @@ class ServingStats:
             rejected=self.rejected,
             queued=self.queued,
             completed=self.completed,
+            deadline_exceeded=self.deadline_exceeded,
+            cancelled=self.cancelled,
+            batch_failures=self.batch_failures,
+            retry_after_rejections=self.retry_after_rejections,
             batches=self.batches,
             steps_executed=self.steps_executed,
             batch_occupancy=self.batch_occupancy(),

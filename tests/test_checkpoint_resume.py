@@ -1,0 +1,221 @@
+"""Checkpoint/resume bit-identity across the full algorithm matrix.
+
+The contract (see ``repro.checkpoint.runstate``): a run snapshot taken
+at ANY iteration boundary, resumed on a freshly compiled plan, yields
+the same final attributes as the uninterrupted run — exactly for
+integer/boolean state, to float tolerance otherwise.  The matrix
+covers all seven registered algorithms on a >=4-wave streamed plan,
+resuming from every boundary the run wrote; direction-optimized runs
+additionally round-trip the hysteresis controller's latch state.
+
+A crashed run is the same story: an injected fault that exhausts its
+retry budget escapes mid-run, and ``resume()`` from the last on-disk
+boundary finishes the computation checksum-exact.
+"""
+import glob
+import os
+import re
+
+import numpy as np
+import pytest
+
+from repro.algorithms import (
+    afforest_algorithm, bfs_algorithm, hits_algorithm, kcore_algorithm,
+    pagerank_algorithm, sv_algorithm, tc_algorithm,
+)
+from repro.checkpoint.runstate import latest_runstate_step, load_runstate
+from repro.core import build_block_store, compile_plan, rmat
+from repro.core.faults import InjectedFault
+from repro.core.resilience import RetryPolicy
+
+_GRAPHS: dict = {}
+
+BUDGET = "32KB"   # rmat(9) at p=8: 5 waves
+
+
+def _store(scale=9, p=8, seed=3):
+    key = (scale, p, seed)
+    if key not in _GRAPHS:
+        _GRAPHS[key] = build_block_store(rmat(scale, 8, seed=seed), p)
+    return _GRAPHS[key]
+
+
+def _streamed(factory, **kw):
+    return compile_plan(factory(), _store(), mode="sparse_only",
+                        share=False, memory_budget=BUDGET,
+                        rebalance_threshold=None, host_fraction=None, **kw)
+
+
+def _incore(factory, **kw):
+    return compile_plan(factory(), _store(), mode="sparse_only",
+                        share=False, **kw)
+
+
+def _steps(ckpt_dir):
+    out = []
+    for fn in glob.glob(os.path.join(ckpt_dir, "step_*.npz")):
+        m = re.fullmatch(r"step_(\d+)\.npz", os.path.basename(fn))
+        if m:
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def _assert_same(a, b):
+    if isinstance(a, dict) or isinstance(b, dict):
+        assert set(a) == set(b)
+        for k in a:
+            _assert_same(a[k], b[k])
+        return
+    a, b = np.asarray(a), np.asarray(b)
+    assert a.dtype == b.dtype
+    if a.dtype.kind in "biu":
+        assert int(a.astype(np.int64).sum()) == int(b.astype(np.int64).sum())
+        np.testing.assert_array_equal(a, b)
+    else:
+        np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-7)
+
+
+ALGS = [
+    ("pagerank", lambda: pagerank_algorithm(max_iters=5)),
+    ("bfs", lambda: bfs_algorithm(0)),
+    ("cc", lambda: afforest_algorithm()),
+    ("sv", lambda: sv_algorithm()),
+    ("hits", lambda: hits_algorithm(max_iters=5)),
+    ("kcore", lambda: kcore_algorithm(3)),
+    ("tc", lambda: tc_algorithm()),
+]
+
+
+class TestStreamedEveryBoundary:
+    """Every algorithm, every boundary, streamed >=4-wave execution."""
+
+    @pytest.mark.parametrize("name,factory", ALGS,
+                             ids=[n for n, _ in ALGS])
+    def test_resume_bit_identical(self, name, factory, tmp_path):
+        base = _streamed(factory).run()
+        assert base.schedule_stats["streaming"]["num_waves"] >= 4
+
+        d = str(tmp_path / "ck")
+        ck = _streamed(factory, checkpoint_every=1, checkpoint_dir=d).run()
+        _assert_same(ck.result, base.result)
+        steps = _steps(d)
+        assert steps, "checkpoint_every=1 wrote no snapshots"
+        assert steps[0] == 1 and steps == list(range(1, len(steps) + 1))
+
+        fresh = _streamed(factory)   # resume plan never re-checkpoints
+        for s in steps:
+            res = fresh.resume(d, step=s)
+            _assert_same(res.result, base.result)
+
+    def test_snapshot_roundtrip_dtypes(self, tmp_path):
+        """load_runstate casts every leaf back to the init_state
+        template dtype — int/bool attributes round-trip exactly."""
+        d = str(tmp_path / "ck")
+        plan = _streamed(sv_algorithm, checkpoint_every=1, checkpoint_dir=d)
+        plan.run()
+        template = plan.alg.init_state(plan.store)
+        snap = load_runstate(d, template, step=1)
+        assert snap.it == 1 and snap.step == 1
+        for k, leaf in template.items():
+            assert np.asarray(snap.state[k]).dtype == np.asarray(leaf).dtype
+
+    def test_latest_pointer_tracks_newest(self, tmp_path):
+        d = str(tmp_path / "ck")
+        _streamed(sv_algorithm, checkpoint_every=1, checkpoint_dir=d).run()
+        assert latest_runstate_step(d) == max(_steps(d))
+
+
+class TestDirectionControllerRestore:
+    """direction="auto" runs snapshot the hysteresis latch too."""
+
+    def test_bfs_auto_resumes_exact(self, tmp_path):
+        factory = lambda: bfs_algorithm(0)                     # noqa: E731
+        base = _streamed(factory, direction="auto").run()
+        fixed = _streamed(factory).run()
+        _assert_same(base.result, fixed.result)   # auto == push contract
+
+        d = str(tmp_path / "ck")
+        _streamed(factory, direction="auto", checkpoint_every=1,
+                  checkpoint_dir=d).run()
+        steps = _steps(d)
+        assert len(steps) >= 2
+
+        # the snapshot carries the controller dict
+        snap = load_runstate(d, factory().init_state(_store()),
+                             step=steps[len(steps) // 2])
+        assert snap.ctrl is not None
+        assert snap.ctrl["current"] in ("push", "pull")
+        assert len(snap.ctrl["decisions"]) == snap.it
+
+        fresh = _streamed(factory, direction="auto")
+        for s in steps:
+            res = fresh.resume(d, step=s)
+            _assert_same(res.result, base.result)
+
+
+class TestInCorePlan:
+    """The non-streamed engine shares the same snapshot surface."""
+
+    def test_resume_matches(self, tmp_path):
+        base = _incore(lambda: pagerank_algorithm(max_iters=6)).run()
+        d = str(tmp_path / "ck")
+        _incore(lambda: pagerank_algorithm(max_iters=6),
+                checkpoint_every=2, checkpoint_dir=d).run()
+        steps = _steps(d)
+        assert steps and all(s % 2 == 0 or s == max(steps) for s in steps)
+        fresh = _incore(lambda: pagerank_algorithm(max_iters=6))
+        for s in steps:
+            _assert_same(fresh.resume(d, step=s).result, base.result)
+
+    def test_crash_then_resume(self, tmp_path):
+        """A fault that exhausts max_retries escapes mid-run; the last
+        on-disk boundary resumes to the fault-free answer."""
+        base = _incore(lambda: pagerank_algorithm(max_iters=6)).run()
+        d = str(tmp_path / "ck")
+        doomed = _incore(lambda: pagerank_algorithm(max_iters=6),
+                         faults="wave.compute:raise:at(3)",
+                         retry_policy=RetryPolicy(max_retries=0),
+                         checkpoint_every=1, checkpoint_dir=d)
+        with pytest.raises(InjectedFault):
+            doomed.run()
+        assert latest_runstate_step(d) == 3   # iterations 0..2 persisted
+
+        fresh = _incore(lambda: pagerank_algorithm(max_iters=6))
+        res = fresh.resume(d)                 # latest boundary
+        _assert_same(res.result, base.result)
+
+    def test_checkpoint_requires_dir(self):
+        with pytest.raises(ValueError, match="checkpoint_dir"):
+            _incore(lambda: pagerank_algorithm(max_iters=6),
+                    checkpoint_every=2)
+        with pytest.raises(ValueError):
+            _incore(lambda: pagerank_algorithm(max_iters=6),
+                    checkpoint_every=0, checkpoint_dir="/tmp/x")
+
+    def test_resume_without_dir_raises(self):
+        plan = _incore(lambda: pagerank_algorithm(max_iters=6))
+        with pytest.raises(ValueError, match="checkpoint"):
+            plan.resume()
+
+
+class TestFaultDifferentialWithCheckpoints:
+    """Recovery and checkpointing compose: a faulted-but-recovered run
+    writes the same restorable boundaries as a clean one."""
+
+    @pytest.mark.parametrize("spec", [
+        "stage.device_put:raise:at(1)",
+        "stage.assemble:raise:at(2)",
+        "wave.compute:oom:at(1)",
+    ])
+    def test_recovered_run_checkpoints_match(self, spec, tmp_path):
+        base = _streamed(sv_algorithm).run()
+        d = str(tmp_path / "ck")
+        res = _streamed(sv_algorithm, faults=spec, checkpoint_every=1,
+                        checkpoint_dir=d).run()
+        _assert_same(res.result, base.result)
+        r = res.schedule_stats["resilience"]
+        assert r["injected"] >= 1 and r["checkpoints"] >= 1
+
+        fresh = _streamed(sv_algorithm)
+        for s in _steps(d):
+            _assert_same(fresh.resume(d, step=s).result, base.result)

@@ -1,0 +1,483 @@
+"""Fault-tolerant runtime: injection, recovery ladder, serving robustness.
+
+The contract under test: seeded fault injection at every executor seam
+(``repro.core.faults``) must be recovered by the resilience ladder
+(``repro.core.resilience`` wired into both executors) with results
+bit-identical to the fault-free run for integer/bool attributes —
+retries fold from iteration-start state, OOM re-packs never relax the
+per-task budget bound, worker death fails over to synchronous
+assembly, and host-lane failures carry their blame context.  Injection
+disabled must be free: ``schedule_stats`` keys unchanged.
+
+Serving robustness rides the same registry: per-query deadlines,
+cancellation, queue-full shedding with a retry-after hint, and failed
+cohort batches isolated to solo re-runs.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import build_block_store, compile_plan, rmat
+from repro.core.faults import FaultPlan, InjectedFault, InjectedOOM
+from repro.core.knobs import env_flag, env_float, env_int
+from repro.core.resilience import (
+    HostTaskError, RetryPolicy, WorkerDeath, classify, is_oom,
+)
+from repro.algorithms import pagerank_algorithm, sv_algorithm
+from repro.serve.graphserve import GraphServer, Query
+
+_GRAPHS: dict = {}
+
+
+def _store(scale=9, p=4, seed=3):
+    key = (scale, p, seed)
+    if key not in _GRAPHS:
+        _GRAPHS[key] = build_block_store(rmat(scale, 8, seed=seed), p)
+    return _GRAPHS[key]
+
+
+def _checksum(result):
+    arr = np.asarray(result)
+    if arr.dtype.kind in "biu":
+        return int(arr.astype(np.int64).sum())
+    return arr  # float results compare via allclose
+
+
+def _assert_same(a, b):
+    ca, cb = _checksum(a), _checksum(b)
+    if isinstance(ca, int):
+        assert ca == cb
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    else:
+        np.testing.assert_allclose(ca, cb, rtol=1e-6, atol=1e-7)
+
+
+# ---------------------------------------------------------------- spec
+
+
+class TestFaultSpec:
+    def test_parse_rules(self):
+        fp = FaultPlan.parse(
+            "wave.compute:raise:at(2); host.task:delay(0.01):every(3)")
+        assert [(r.site, r.action, r.trigger, r.k) for r in fp.rules] == [
+            ("wave.compute", "raise", "at", 2),
+            ("host.task", "delay", "every", 3),
+        ]
+
+    def test_none_and_empty_disable(self):
+        assert FaultPlan.parse(None) is None
+        assert FaultPlan.parse("") is None
+        assert FaultPlan.parse(" ; ") is None
+
+    def test_passthrough(self):
+        fp = FaultPlan.parse("wave.compute:raise")
+        assert FaultPlan.parse(fp) is fp
+
+    @pytest.mark.parametrize("bad", [
+        "wave.compute",                  # no action
+        "nowhere:raise",                 # unknown site
+        "wave.compute:explode",          # unknown action
+        "wave.compute:raise:sometimes",  # unknown trigger
+        "wave.compute:delay",            # delay needs an argument
+        "wave.compute:raise(2)",         # raise takes none
+        "wave.compute:raise:every(0)",   # k >= 1
+    ])
+    def test_malformed_raises(self, bad):
+        with pytest.raises(ValueError):
+            FaultPlan.parse(bad)
+
+    def test_at_is_single_shot(self):
+        """A recovered retry of wave k must not re-trip the same rule."""
+        fp = FaultPlan.parse("wave.compute:raise:at(1)")
+        fp.fire("wave.compute", wave=0)
+        with pytest.raises(InjectedFault):
+            fp.fire("wave.compute", wave=1)
+        fp.fire("wave.compute", wave=1)   # the retry passes
+        assert fp.injected == 1
+
+    def test_oom_classifies(self):
+        fp = FaultPlan.parse("wave.compute:oom")
+        with pytest.raises(InjectedOOM) as ei:
+            fp.fire("wave.compute", wave=0)
+        assert is_oom(ei.value) and classify(ei.value) == "oom"
+
+    def test_corrupt_damages_value(self):
+        fp = FaultPlan.parse("wave.compute:corrupt")
+        out = fp.fire("wave.compute",
+                      dict(x=np.arange(3), m=np.array([True, False])))
+        np.testing.assert_array_equal(out["x"], [1, 2, 3])
+        np.testing.assert_array_equal(out["m"], [False, True])
+
+    def test_counters(self):
+        fp = FaultPlan.parse("stage.assemble:delay(0):every(2)")
+        for _ in range(4):
+            fp.fire("stage.assemble")
+        st = fp.stats()
+        assert st["injected"] == 2
+        assert st["rules"][0]["fired"] == 2
+
+
+# --------------------------------------------------------------- knobs
+
+
+class TestKnobs:
+    def test_malformed_float_raises(self, monkeypatch):
+        monkeypatch.setenv("REPRO_HETERO_HOST_RATIO", "fast")
+        with pytest.raises(ValueError, match="REPRO_HETERO_HOST_RATIO"):
+            env_float("REPRO_HETERO_HOST_RATIO", 1.0)
+
+    def test_unknown_knob_raises(self):
+        with pytest.raises(KeyError, match="REPRO_NOT_A_KNOB"):
+            env_float("REPRO_NOT_A_KNOB", 1.0)
+
+    def test_empty_falls_back(self, monkeypatch):
+        monkeypatch.setenv("REPRO_HETERO_HOST_RATIO", "  ")
+        assert env_float("REPRO_HETERO_HOST_RATIO", 2.5) == 2.5
+
+    def test_flag_values(self, monkeypatch):
+        monkeypatch.setenv("REPRO_TRACE", "yes")
+        assert env_flag("REPRO_TRACE") is True
+        monkeypatch.setenv("REPRO_TRACE", "off")
+        assert env_flag("REPRO_TRACE") is False
+        monkeypatch.setenv("REPRO_TRACE", "maybe")
+        with pytest.raises(ValueError):
+            env_flag("REPRO_TRACE")
+
+    def test_malformed_int_raises(self, monkeypatch):
+        monkeypatch.setenv("REPRO_CHAOS_WALL_RATIO", "1.x")
+        with pytest.raises(ValueError):
+            env_int("REPRO_CHAOS_WALL_RATIO", 1)
+
+    def test_env_fault_spec_reaches_plan(self, monkeypatch):
+        monkeypatch.setenv("REPRO_FAULTS", "wave.compute:raise:once")
+        plan = compile_plan(pagerank_algorithm(max_iters=3), _store(),
+                            share=False)
+        res = plan.run()
+        assert res.schedule_stats["resilience"]["injected"] == 1
+
+
+# ------------------------------------------------- recovery (streaming)
+
+BUDGET = "32KB"   # rmat(9) at p=8: 5 waves
+
+
+def _streamed(alg_factory, *, faults=None, policy=None, depth=None,
+              host=None, **kw):
+    return compile_plan(
+        alg_factory(), _store(9, 8), mode="sparse_only", share=False,
+        memory_budget=BUDGET, rebalance_threshold=None,
+        host_fraction=host, faults=faults, retry_policy=policy,
+        **(dict(pipeline_depth=depth) if depth is not None else {}), **kw)
+
+
+@pytest.fixture(scope="module")
+def pr_baseline():
+    res = _streamed(lambda: pagerank_algorithm(max_iters=6)).run()
+    assert res.schedule_stats["streaming"]["num_waves"] >= 4
+    assert "resilience" not in res.schedule_stats
+    return res
+
+
+@pytest.fixture(scope="module")
+def sv_baseline():
+    return _streamed(sv_algorithm).run()
+
+
+class TestStreamingRecovery:
+    @pytest.mark.parametrize("spec", [
+        "stage.assemble:raise:at(1)",
+        "stage.device_put:raise:at(1)",
+        "wave.compute:raise:at(1)",
+        "wave.compute:raise:at(0)",
+        "stage.device_put:delay(0.01):once",
+    ])
+    def test_site_recovery_checksum_exact(self, spec, pr_baseline):
+        res = _streamed(lambda: pagerank_algorithm(max_iters=6),
+                        faults=spec, depth=0).run()
+        _assert_same(res.result, pr_baseline.result)
+        r = res.schedule_stats["resilience"]
+        assert r["injected"] == 1
+        if "delay" not in spec:
+            assert r["detected"] == 1 and r["retries"] == 1
+
+    def test_oom_shrink_repack(self, sv_baseline):
+        res = _streamed(sv_algorithm, faults="wave.compute:oom:at(1)",
+                        depth=0).run()
+        _assert_same(res.result, sv_baseline.result)
+        r = res.schedule_stats["resilience"]
+        assert r["oom_repacks"] == 1 and r["demotions"] == 0
+
+    def test_repeated_oom_demotes_to_host(self, sv_baseline):
+        """demote_after consecutive OOMs on one iteration move the
+        offending wave to the host lane — and the run still completes
+        checksum-exact (two single-shot rules at the same wave: the
+        first triggers a shrink-repack, the second crosses the
+        demotion threshold)."""
+        res = _streamed(
+            sv_algorithm,
+            faults="wave.compute:oom:at(1);wave.compute:oom:at(1)",
+            policy=RetryPolicy(max_retries=4, demote_after=2),
+            depth=0).run()
+        _assert_same(res.result, sv_baseline.result)
+        r = res.schedule_stats["resilience"]
+        assert r["demotions"] >= 1 and r["oom_repacks"] >= 1
+
+    def test_assemble_fault_in_worker_recovers(self, pr_baseline):
+        """stage.assemble raising inside the executor (here: during
+        the synchronous calibration pass) retries checksum-exact."""
+        res = _streamed(lambda: pagerank_algorithm(max_iters=6),
+                        faults="stage.assemble:raise:at(2)", depth=2).run()
+        _assert_same(res.result, pr_baseline.result)
+        assert res.schedule_stats["resilience"]["retries"] >= 1
+
+    @staticmethod
+    def _kill_worker(plan, deaths: int):
+        """Make assembly raise the next ``deaths`` times it runs OFF
+        the main thread — i.e. inside the background staging worker —
+        so the failure deterministically surfaces as WorkerDeath."""
+        orig = plan._assemble_runtime
+        state = dict(deaths=0)
+
+        def bomb(recipe, wave=None):
+            if (threading.current_thread() is not threading.main_thread()
+                    and state["deaths"] < deaths):
+                state["deaths"] += 1
+                raise RuntimeError("simulated staging worker crash")
+            return orig(recipe, wave=wave)
+
+        plan._assemble_runtime = bomb
+        return state
+
+    def test_worker_death_fails_over(self, pr_baseline):
+        """A dead staging worker surfaces as WorkerDeath at get(); the
+        iteration re-runs with synchronous assembly, then the pipeline
+        resumes (one death is under failover_after)."""
+        plan = _streamed(lambda: pagerank_algorithm(max_iters=6), depth=2)
+        killed = self._kill_worker(plan, 1)
+        res = plan.run()
+        _assert_same(res.result, pr_baseline.result)
+        assert killed["deaths"] == 1
+        r = res.schedule_stats["resilience"]
+        assert r["failovers"] == 1 and r["retries"] >= 1
+        assert plan.pipeline_depth > 0   # transient: pipeline survives
+
+    def test_permanent_worker_failover(self, pr_baseline):
+        """failover_after deaths force pipeline_depth=0 for good."""
+        plan = _streamed(lambda: pagerank_algorithm(max_iters=6),
+                         policy=RetryPolicy(failover_after=1), depth=2)
+        killed = self._kill_worker(plan, 5)
+        res = plan.run()
+        _assert_same(res.result, pr_baseline.result)
+        assert killed["deaths"] == 1     # sync assembly never re-arms it
+        assert plan.pipeline_depth == 0
+        assert res.schedule_stats["resilience"]["failovers"] >= 1
+
+    def test_exhausted_retries_raise(self):
+        plan = _streamed(lambda: pagerank_algorithm(max_iters=6),
+                         faults="wave.compute:raise:every(1)",
+                         policy=RetryPolicy(max_retries=2), depth=0)
+        with pytest.raises(InjectedFault):
+            plan.run()
+        assert plan._resil.actions[-1]["action"] == "exhausted"
+
+    def test_corrupt_is_detectable(self, pr_baseline):
+        """Silent corruption is NOT auto-detected — the differential
+        harness must be sensitive enough to catch it.  This is the
+        sensitivity control for every checksum-exact test above.
+        ``every(1)`` hits the real iteration computes, not just the
+        discarded calibration warm-up pass."""
+        res = _streamed(lambda: pagerank_algorithm(max_iters=6),
+                        faults="wave.compute:corrupt:every(1)", depth=0).run()
+        assert res.schedule_stats["resilience"]["injected"] >= 1
+        base = np.asarray(pr_baseline.result)
+        assert not np.allclose(np.asarray(res.result), base)
+
+    def test_disabled_keys_unchanged(self, pr_baseline):
+        """No faults, no checkpoints → stats dict has no resilience
+        block and the streaming keys match the seed contract."""
+        assert "resilience" not in pr_baseline.schedule_stats
+        res = compile_plan(pagerank_algorithm(max_iters=3), _store(),
+                           share=False).run()
+        assert "resilience" not in res.schedule_stats
+
+
+# ------------------------------------------------------ host-lane blame
+
+
+class TestHostLane:
+    def test_host_fault_recovers(self, sv_baseline):
+        res = _streamed(sv_algorithm, faults="host.task:raise:once",
+                        host=0.25).run()
+        _assert_same(res.result, sv_baseline.result)
+        assert res.schedule_stats["resilience"]["retries"] >= 1
+
+    def test_host_error_carries_context(self):
+        """Satellite regression: a host-lane task failure names its
+        unit, tasks, and iteration instead of surfacing as a bare
+        exception at fold time."""
+        plan = _streamed(sv_algorithm, faults="host.task:raise:every(1)",
+                         policy=RetryPolicy(max_retries=0), host=0.25)
+        with pytest.raises(HostTaskError) as ei:
+            plan.run()
+        err = ei.value
+        assert err.unit >= 0 and err.it >= 0
+        assert "host-lane unit" in str(err) and "iteration" in str(err)
+        assert isinstance(err.__cause__, InjectedFault)
+
+    def test_repeated_host_failure_disables_lane(self, sv_baseline):
+        res = _streamed(sv_algorithm, faults="host.task:raise:every(1)",
+                        policy=RetryPolicy(max_retries=6,
+                                           failover_after=1),
+                        host=0.25).run()
+        _assert_same(res.result, sv_baseline.result)
+        assert res.schedule_stats["resilience"]["host_failovers"] >= 1
+
+
+# ----------------------------------------------------- teardown (close)
+
+
+class TestTeardown:
+    def test_close_and_context_manager(self):
+        """Satellite regression: an aborted streamed run (here: retries
+        exhausted at wave 2) must tear down its staging worker thread
+        and host pool deterministically via close()/__exit__."""
+        before = {t.ident for t in threading.enumerate()}
+        plan = _streamed(sv_algorithm,
+                         faults="wave.compute:raise:at(2)",
+                         policy=RetryPolicy(max_retries=0),
+                         depth=2, host=0.25)
+        with pytest.raises(InjectedFault):
+            with plan:
+                plan.run()
+        deadline = time.time() + 10.0
+        while time.time() < deadline:
+            leaked = [t for t in threading.enumerate()
+                      if t.ident not in before and t.is_alive()
+                      and not t.daemon]
+            if not leaked:
+                break
+            time.sleep(0.05)
+        assert not leaked, f"leaked threads: {leaked}"
+        assert plan._pipe is None and plan._host_futs is None
+
+    def test_close_idempotent_and_rerunnable(self, sv_baseline):
+        plan = _streamed(sv_algorithm, depth=2, host=0.25)
+        res1 = plan.run()
+        plan.close()
+        plan.close()
+        res2 = plan.run()   # run() rebuilds the lane/pipe lazily
+        _assert_same(res1.result, sv_baseline.result)
+        _assert_same(res2.result, sv_baseline.result)
+
+
+# ------------------------------------------------------------ policies
+
+
+class TestRetryPolicy:
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            RetryPolicy(max_retries=-1)
+        with pytest.raises(ValueError):
+            RetryPolicy(backoff=1.0)
+        with pytest.raises(TypeError):
+            compile_plan(pagerank_algorithm(), _store(),
+                         retry_policy="aggressive")
+
+    def test_checkpoint_validation(self, tmp_path):
+        with pytest.raises(ValueError, match="checkpoint_dir"):
+            compile_plan(pagerank_algorithm(), _store(),
+                         checkpoint_every=2)
+        with pytest.raises(ValueError, match="checkpoint_every"):
+            compile_plan(pagerank_algorithm(), _store(),
+                         checkpoint_every=0, checkpoint_dir=str(tmp_path))
+
+
+# ------------------------------------------------------------- serving
+
+
+def _server(**kw):
+    srv = GraphServer(**kw)
+    srv.register_graph("web", _store(8, 4, seed=5))
+    return srv
+
+
+class TestServingRobustness:
+    def test_cohort_failure_isolated_to_solo(self):
+        """One poisoned batch must not sink its cohort: members are
+        re-admitted solo and every query still completes."""
+        srv = _server(faults="serve.query:raise:once")
+        uids = [srv.submit(Query("web", "pagerank", dict(seeds=[i])))
+                for i in range(3)]
+        done = srv.drain()
+        assert [done[u].status for u in uids] == ["done"] * 3
+        assert srv.stats()["batch_failures"] == 1
+
+    def test_singleton_failure_marks_failed(self):
+        srv = _server(faults="serve.query:raise:once")
+        uid = srv.submit(Query("web", "pagerank"))
+        done = srv.drain()
+        assert done[uid].status == "failed"
+        assert "InjectedFault" in done[uid].reason
+        assert srv.stats()["batch_failures"] == 1
+
+    def test_deadline_expires_waiting_query(self):
+        srv = _server()
+        uid = srv.submit(Query("web", "pagerank", deadline_s=0.0))
+        time.sleep(0.01)
+        done = srv.drain()
+        assert done[uid].status == "expired"
+        assert srv.stats()["deadline_exceeded"] == 1
+
+    def test_deadline_none_never_expires(self):
+        srv = _server()
+        uid = srv.submit(Query("web", "pagerank"))
+        assert srv.drain()[uid].status == "done"
+
+    def test_cancel(self):
+        srv = _server()
+        u1 = srv.submit(Query("web", "pagerank"))
+        u2 = srv.submit(Query("web", "pagerank"))
+        assert srv.cancel(u1) is True
+        assert srv.cancel(u1) is False      # already cancelled
+        assert srv.cancel(10_000) is False  # never submitted
+        done = srv.drain()
+        assert done[u1].status == "cancelled"
+        assert done[u2].status == "done"
+        assert srv.stats()["cancelled"] == 1
+
+    def test_queue_full_sheds_with_retry_after(self):
+        probe = _server()
+        plan = probe.plan_for("web", "pagerank")
+        u = probe.submit(Query("web", "pagerank"))
+        priced = next(q for q in probe._admitted if q.uid == u).priced_bytes
+        budget = plan.resident_device_bytes + priced + priced // 2
+
+        srv = _server(memory_budget=budget, max_queue=1)
+        admitted = srv.submit(Query("web", "pagerank"))
+        queued = srv.submit(Query("web", "pagerank"))
+        shed = srv.submit(Query("web", "pagerank"))
+        q = srv.result(shed)
+        assert q.status == "rejected"
+        assert q.retry_after_s is not None and q.retry_after_s > 0
+        assert "queue full" in q.reason
+        assert srv.stats()["retry_after_rejections"] == 1
+        done = srv.drain()   # the shed query never blocks the others
+        assert done[admitted].status == done[queued].status == "done"
+
+    def test_batch_results_match_fault_free(self):
+        base = _server()
+        b1 = base.submit(Query("web", "pagerank", dict(seeds=[1])))
+        b2 = base.submit(Query("web", "pagerank", dict(seeds=[2])))
+        base_done = base.drain()
+        srv = _server(faults="serve.query:raise:once")
+        u1 = srv.submit(Query("web", "pagerank", dict(seeds=[1])))
+        u2 = srv.submit(Query("web", "pagerank", dict(seeds=[2])))
+        done = srv.drain()
+        np.testing.assert_allclose(np.asarray(done[u1].result),
+                                   np.asarray(base_done[b1].result),
+                                   rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(done[u2].result),
+                                   np.asarray(base_done[b2].result),
+                                   rtol=1e-6)
